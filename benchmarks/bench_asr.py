@@ -1,0 +1,8 @@
+"""Paper Table 3 — ASR (AMI protocol): speech prompt + transcript decode."""
+from .common import table_rows
+
+
+def run():
+    rows = table_rows([("mha", 2), ("mla", 2), ("mtla", 2)],
+                      prompt_len=192, decode_len=32)
+    return [("bench_asr/" + r) for r in rows]

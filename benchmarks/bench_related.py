@@ -1,0 +1,9 @@
+"""Paper Table 5 — comparison with MQA / GQA(g=2) on the ST workload."""
+from .common import table_rows
+
+
+def run():
+    rows = table_rows([("mha", 2), ("mqa", 2), ("gqa", 2), ("mla", 2),
+                       ("mtla", 2), ("mtla", 3), ("mtla", 4)],
+                      prompt_len=256, decode_len=48)
+    return [("bench_related/" + r) for r in rows]

@@ -1,0 +1,9 @@
+"""Paper Table 4 — SLU intent classification (SLURP protocol): speech
+prompt + short joint transcript+intent decode."""
+from .common import table_rows
+
+
+def run():
+    rows = table_rows([("mha", 2), ("mla", 2), ("mtla", 2)],
+                      prompt_len=96, decode_len=12)
+    return [("bench_slu/" + r) for r in rows]

@@ -1,0 +1,9 @@
+"""Paper Table 1 — speech translation (MuST-C En-De protocol): long speech
+prompt + translation decode. MHA vs MLA vs MTLA s in {2,3,4}."""
+from .common import table_rows
+
+
+def run():
+    rows = table_rows([("mha", 2), ("mla", 2), ("mtla", 2), ("mtla", 3),
+                       ("mtla", 4)], prompt_len=256, decode_len=48)
+    return [("bench_st/" + r) for r in rows]

@@ -1,0 +1,9 @@
+"""Paper Table 2 — text summarisation (XSum protocol): long document
+prompt + short summary decode."""
+from .common import table_rows
+
+
+def run():
+    rows = table_rows([("mha", 2), ("mla", 2), ("mtla", 2)],
+                      prompt_len=448, decode_len=24)
+    return [("bench_summarisation/" + r) for r in rows]

@@ -1,0 +1,93 @@
+"""Shared harness for the paper-table benchmarks.
+
+Each paper table (1-5) compares attention variants on one task's decode
+workload: prefill a prompt, then incrementally decode, measuring per-step
+latency and KV-cache memory. On this CPU container absolute times are not
+TPU numbers — the reported columns are per-variant RATIOS vs MHA (the
+paper's speedup / memory-reduction columns) plus exact analytic
+cache-bytes; the model is the paper's decoder scaled for CPU runtime.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.types import AttentionConfig, ModelConfig
+from repro.models import api
+from repro.serving.engine import cache_bytes
+
+
+def paper_model(kind: str, s: int = 2, layers: int = 4, d: int = 256,
+                heads: int = 8) -> ModelConfig:
+    dh = d // heads
+    attn = AttentionConfig(
+        kind=kind, num_heads=heads,
+        num_kv_heads={"mha": heads, "mqa": 1, "gqa": 2}.get(kind, heads),
+        head_dim=dh,
+        kv_lora_rank=4 * dh if kind in ("mla", "mtla") else 0,
+        rope_head_dim=dh // 2 if kind in ("mla", "mtla") else 0,
+        hyper_dim=64, s=s, q_chunk=0)
+    return ModelConfig(name=f"paper-{kind}{s if kind == 'mtla' else ''}",
+                       family="dense", num_layers=layers, d_model=d,
+                       d_ff=4 * d, vocab_size=1000, attn=attn,
+                       max_seq_len=4096)
+
+
+@dataclass
+class BenchResult:
+    name: str
+    us_per_step: float
+    cache_bytes: int
+    cache_per_token_elems: float
+
+    def row(self, base: "BenchResult") -> str:
+        speedup = base.us_per_step / self.us_per_step
+        mem_red = base.cache_bytes / max(self.cache_bytes, 1)
+        return (f"{self.name},{self.us_per_step:.1f},"
+                f"speedup={speedup:.2f}x;cache_reduction={mem_red:.2f}x;"
+                f"cache_bytes={self.cache_bytes};"
+                f"elems_per_tok={self.cache_per_token_elems:.1f}")
+
+
+def run_decode_bench(kind: str, *, s: int = 2, prompt_len: int = 128,
+                     decode_len: int = 32, batch: int = 4,
+                     seed: int = 0, layers: int = 4, d: int = 256
+                     ) -> BenchResult:
+    cfg = paper_model(kind, s=s, layers=layers, d=d)
+    params = api.init_model(jax.random.PRNGKey(seed), cfg)
+    max_len = prompt_len + decode_len + 8
+    caches = api.init_caches(cfg, batch, max_len, dtype=jnp.float32)
+    rng = np.random.default_rng(seed)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size,
+                                    size=(batch, prompt_len)), jnp.int32)
+    prefill = jax.jit(lambda p, b, c: api.prefill(p, cfg, b, c,
+                                                  dtype=jnp.float32))
+    decode = jax.jit(lambda p, t, c: api.decode(p, cfg, t, c,
+                                                dtype=jnp.float32))
+    logits, caches = prefill(params, {"tokens": toks}, caches)
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    # warmup (compile)
+    logits, caches = decode(params, tok, caches)
+    jax.block_until_ready(logits)
+    t0 = time.perf_counter()
+    for _ in range(decode_len):
+        logits, caches = decode(params, tok, caches)
+        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    jax.block_until_ready(logits)
+    dt = (time.perf_counter() - t0) / decode_len
+    return BenchResult(
+        name=cfg.name,
+        us_per_step=dt * 1e6,
+        cache_bytes=cache_bytes(caches),
+        cache_per_token_elems=cfg.attn.kv_cache_per_token * cfg.num_layers)
+
+
+def table_rows(variants: List, **kw) -> List[str]:
+    results = [run_decode_bench(k, s=s, **kw) for k, s in variants]
+    base = results[0]
+    return [r.row(base) for r in results]

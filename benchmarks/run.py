@@ -1,0 +1,23 @@
+"""Benchmark driver: one module per paper table. Prints
+``name,us_per_call,derived`` CSV rows (CPU-container timings: per-variant
+ratios are the meaningful columns; TPU projections live in EXPERIMENTS.md
+§Roofline)."""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from . import (bench_asr, bench_kernels, bench_related, bench_slu,
+                   bench_st, bench_summarisation)
+    mods = [bench_st, bench_summarisation, bench_asr, bench_slu,
+            bench_related, bench_kernels]
+    print("name,us_per_call,derived")
+    for m in mods:
+        for row in m.run():
+            print(row)
+            sys.stdout.flush()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,92 @@
+"""The paper's core accuracy-parity experiment (Tables 1-4, quality
+columns), at CPU scale: train identical models with MHA / MLA / MTLA
+(s=2,3) on the same synthetic seq data and compare final loss + measured
+decode speed + cache memory. MTLA should match MHA quality while cutting
+cache by ~(r+d_h^R)/(2 H d_h s).
+
+    PYTHONPATH=src python examples/compare_attention.py [--steps 150]
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.types import AttentionConfig, ModelConfig, TrainConfig
+from repro.data.synthetic import LMBatches
+from repro.models import api
+from repro.serving.engine import cache_bytes
+from repro.train.trainer import init_train_state, make_train_step
+
+
+def build(kind, s=2):
+    dh = 32
+    H = 4
+    return ModelConfig(
+        name=f"{kind}{s if kind == 'mtla' else ''}", family="dense",
+        num_layers=3, d_model=H * dh, d_ff=4 * H * dh, vocab_size=97,
+        attn=AttentionConfig(
+            kind=kind, num_heads=H,
+            num_kv_heads={"mha": H, "mqa": 1, "gqa": 2}.get(kind, H),
+            head_dim=dh,
+            kv_lora_rank=4 * dh if kind in ("mla", "mtla") else 0,
+            rope_head_dim=dh // 2 if kind in ("mla", "mtla") else 0,
+            hyper_dim=16, s=s, q_chunk=0))
+
+
+def train_one(cfg, steps, seed=0):
+    tcfg = TrainConfig(global_batch=8, seq_len=64, learning_rate=3e-3,
+                       warmup_steps=steps // 10, total_steps=steps,
+                       compute_dtype="float32", logit_chunk=32)
+    state = init_train_state(jax.random.PRNGKey(seed), cfg)
+    step = jax.jit(make_train_step(cfg, tcfg))
+    it = LMBatches(batch=8, seq_len=64, vocab=97, seed=seed)
+    loss = None
+    for _ in range(steps):
+        state, m = step(state, {k: jnp.asarray(v)
+                                for k, v in next(it).items()})
+        loss = float(m["loss"])
+    return state, loss
+
+
+def decode_speed(state, cfg, prompt_len=96, n=32, batch=4):
+    caches = api.init_caches(cfg, batch, prompt_len + n + 4,
+                             dtype=jnp.float32)
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(0, 97, (batch, prompt_len)), jnp.int32)
+    pre = jax.jit(lambda p, b, c: api.prefill(p, cfg, b, c,
+                                              dtype=jnp.float32))
+    dec = jax.jit(lambda p, t, c: api.decode(p, cfg, t, c,
+                                             dtype=jnp.float32))
+    logits, caches = pre(state["params"], {"tokens": toks}, caches)
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    logits, caches = dec(state["params"], tok, caches)  # compile
+    t0 = time.perf_counter()
+    for _ in range(n):
+        logits, caches = dec(state["params"], tok, caches)
+        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    jax.block_until_ready(logits)
+    return (time.perf_counter() - t0) / n * 1e3, cache_bytes(caches)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=150)
+    args = ap.parse_args()
+    variants = [("mha", 2), ("mla", 2), ("mtla", 2), ("mtla", 3)]
+    base_ms = base_bytes = None
+    print(f"{'model':10s} {'final_loss':>10s} {'ms/step':>8s} "
+          f"{'speedup':>8s} {'cache_bytes':>12s} {'reduction':>9s}")
+    for kind, s in variants:
+        cfg = build(kind, s)
+        state, loss = train_one(cfg, args.steps)
+        ms, cb = decode_speed(state, cfg)
+        if base_ms is None:
+            base_ms, base_bytes = ms, cb
+        print(f"{cfg.name:10s} {loss:10.4f} {ms:8.2f} "
+              f"{base_ms / ms:7.2f}x {cb:12,d} {base_bytes / cb:8.2f}x")
+
+
+if __name__ == "__main__":
+    main()

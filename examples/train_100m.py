@@ -1,0 +1,30 @@
+"""End-to-end driver: train a ~100M-param MTLA model for a few hundred
+steps through the full production stack (launcher, sharded step,
+checkpointing, watchdog). On this CPU container it uses seq 128/batch 8 to
+stay tractable; on TPU swap --mesh for the production mesh.
+
+    PYTHONPATH=src python examples/train_100m.py [--steps 200]
+"""
+import argparse
+import sys
+
+from repro.launch.train import main as train_main
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_100m_ckpt")
+    args = ap.parse_args()
+    # ~100M params: the paper's decoder scaled up (d=768, 12L, vocab 8k)
+    # exercised through the real launcher via CLI args.
+    argv = ["--arch", "mtla_paper", "--steps", str(args.steps),
+            "--batch", "8", "--seq", "128", "--lr", "1e-3",
+            "--ckpt-dir", args.ckpt_dir, "--ckpt-every", "100",
+            "--log-every", "20", "--compute-dtype", "float32"]
+    loss = train_main(argv)
+    print(f"final loss: {loss:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,82 @@
+"""Print top dot/collective breakdown for one dry-run cell (the dry-run
+'profile' used by §Perf). Usage:
+  PYTHONPATH=src python scripts/breakdown_cell.py <arch> <shape> [attn] [s]
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import sys
+
+import jax
+import jax.numpy as jnp
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+from repro.configs import get_config
+from repro.configs.shapes import SHAPES, input_specs
+from repro.core.types import TrainConfig
+from repro.launch.dryrun import choose_microbatch, dp_size
+from repro.launch.mesh import make_production_mesh
+from repro.models import api
+from repro.roofline.breakdown import print_breakdown
+from repro.runtime import sharding as shd
+from repro.train.trainer import (init_train_state, make_serve_steps,
+                                 make_train_step)
+
+arch, shape_name = sys.argv[1], sys.argv[2]
+attn = sys.argv[3] if len(sys.argv) > 3 else None
+s = int(sys.argv[4]) if len(sys.argv) > 4 else 2
+
+cfg = get_config(arch, attn=attn, s=s)
+shape = SHAPES[shape_name]
+mesh = make_production_mesh()
+shd.set_activation_mesh(mesh)
+dp = dp_size(mesh)
+state_abs = jax.eval_shape(lambda k: init_train_state(k, cfg),
+                           jax.random.PRNGKey(0))
+batch_abs = input_specs(cfg, shape_name)
+
+if shape.kind == "train":
+    mb = choose_microbatch(cfg, shape.seq_len, shape.global_batch, dp)
+    tcfg = TrainConfig(global_batch=shape.global_batch,
+                       seq_len=shape.seq_len,
+                       microbatch=0 if mb == shape.global_batch else mb,
+                       remat="full", compute_dtype="bfloat16",
+                       logit_chunk=2048)
+    gcon = shd.make_tree_constrainer(
+        shd.params_shardings(state_abs["params"], mesh))
+    mb_abs = jax.tree_util.tree_map(
+        lambda a: jax.ShapeDtypeStruct((mb,) + a.shape[1:], a.dtype),
+        batch_abs) if mb != shape.global_batch else batch_abs
+    bcon = shd.make_tree_constrainer(shd.batch_shardings(mb_abs, mesh))
+    step = make_train_step(cfg, tcfg, grad_constrainer=gcon,
+                           batch_constrainer=bcon)
+    metrics_abs = jax.eval_shape(step, state_abs, batch_abs)[1]
+    with mesh:
+        compiled = jax.jit(
+            step,
+            in_shardings=(shd.params_shardings(state_abs, mesh),
+                          shd.batch_shardings(batch_abs, mesh)),
+            out_shardings=(shd.params_shardings(state_abs, mesh),
+                           shd.replicated(metrics_abs, mesh)),
+            donate_argnums=(0,)).lower(state_abs, batch_abs).compile()
+else:
+    params_abs = state_abs["params"]
+    prefill_step, decode_step = make_serve_steps(cfg)
+    caches_abs = jax.eval_shape(lambda: api.init_caches(
+        cfg, shape.global_batch, shape.seq_len, dtype=jnp.bfloat16,
+        src_len=1024))
+    caches_sh = shd.cache_shardings(caches_abs, mesh, stacked=True)
+    params_sh = shd.params_shardings(params_abs, mesh)
+    if shape.kind == "prefill":
+        fn, args = prefill_step, (params_abs, batch_abs, caches_abs)
+        in_sh = (params_sh, shd.batch_shardings(batch_abs, mesh), caches_sh)
+    else:
+        token_abs = batch_abs["token"]
+        fn, args = decode_step, (params_abs, token_abs, caches_abs)
+        in_sh = (params_sh, shd.batch_shardings(token_abs, mesh), caches_sh)
+    out_abs = jax.eval_shape(fn, *args)
+    out_sh = (shd.batch_shardings(out_abs[0], mesh), caches_sh)
+    with mesh:
+        compiled = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                           donate_argnums=(2,)).lower(*args).compile()
+
+print_breakdown(compiled.as_text(), 16)

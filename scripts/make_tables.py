@@ -1,0 +1,132 @@
+"""Generate the EXPERIMENTS.md §Dry-run and §Roofline tables from
+experiments/dryrun/*.json."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+ARCH_ORDER = ["granite_34b", "qwen3_1_7b", "phi3_medium_14b", "qwen2_7b",
+              "hymba_1_5b", "mamba2_780m", "qwen2_moe_a2_7b", "dbrx_132b",
+              "seamless_m4t_medium", "internvl2_2b"]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load():
+    recs = {}
+    for p in glob.glob(os.path.join(DIR, "*.json")):
+        with open(p) as f:
+            r = json.load(f)
+        recs[r["cell"]] = r
+    return recs
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "-"
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(b) < 1024:
+            return f"{b:.1f}{unit}"
+        b /= 1024
+    return f"{b:.1f}PB"
+
+
+def fmt_s(x):
+    if x is None:
+        return "-"
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:.1f}ms"
+    return f"{x * 1e6:.0f}us"
+
+
+def dryrun_table(recs, mesh):
+    lines = ["| arch | shape | status | microbatch | temp/dev | args/dev |"
+             " compile | HLO flops/dev | coll bytes/dev |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for a in ARCH_ORDER:
+        for sh in SHAPE_ORDER:
+            cell = f"{a}__{sh}__{mesh}"
+            r = recs.get(cell)
+            if r is None:
+                lines.append(f"| {a} | {sh} | MISSING | | | | | | |")
+                continue
+            if r["status"] == "skipped":
+                lines.append(f"| {a} | {sh} | SKIP ({r['reason'][:40]}...)"
+                             f" | | | | | | |")
+                continue
+            ma = r.get("memory_analysis", {})
+            rl = r.get("roofline", {})
+            lines.append(
+                "| {a} | {sh} | {st} | {mb} | {tmp} | {arg} | {cs:.0f}s |"
+                " {fl:.2e} | {cb} |".format(
+                    a=a, sh=sh, st=r["status"],
+                    mb=r.get("microbatch", "-"),
+                    tmp=fmt_bytes(ma.get("temp_size_in_bytes")),
+                    arg=fmt_bytes(ma.get("argument_size_in_bytes")),
+                    cs=r.get("compile_s", 0),
+                    fl=rl.get("flops_per_device", 0),
+                    cb=fmt_bytes(rl.get("collective_bytes_per_device"))))
+    return "\n".join(lines)
+
+
+def roofline_table(recs, mesh="single"):
+    lines = ["| arch | shape | compute | memory | collective | bound |"
+             " bound-term | MODEL/HLO flops | note |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for a in ARCH_ORDER:
+        for sh in SHAPE_ORDER:
+            r = recs.get(f"{a}__{sh}__{mesh}")
+            if r is None or r["status"] != "ok":
+                reason = (r or {}).get("reason", "missing")
+                if r and r["status"] == "skipped":
+                    lines.append(f"| {a} | {sh} | - | - | - | SKIP | - | - |"
+                                 f" {reason[:60]} |")
+                else:
+                    lines.append(f"| {a} | {sh} | - | - | - | {('ERR' if r else 'MISSING')} | - | - | |")
+                continue
+            rl = r["roofline"]
+            ratio = r.get("useful_flops_ratio")
+            lines.append(
+                "| {a} | {sh} | {c} | {m} | {co} | **{b}** | {bt} |"
+                " {ra} | |".format(
+                    a=a, sh=sh, c=fmt_s(rl["compute_s"]),
+                    m=fmt_s(rl["memory_s"]),
+                    co=fmt_s(rl["collective_s"]), b=rl["bound"],
+                    bt=fmt_s(rl["step_time_lower_bound_s"]),
+                    ra=f"{ratio:.2f}" if ratio else "-"))
+    return "\n".join(lines)
+
+
+def extras_table(recs):
+    lines = ["| cell | status | compute | memory | collective | bound |",
+             "|---|---|---|---|---|---|"]
+    for cell, r in sorted(recs.items()):
+        if len(cell.split("__")) <= 3:  # plain arch__shape__mesh baselines
+            continue
+        rl = r.get("roofline", {})
+        lines.append("| {c} | {st} | {a} | {b} | {d} | {e} |".format(
+            c=cell, st=r["status"], a=fmt_s(rl.get("compute_s")),
+            b=fmt_s(rl.get("memory_s")), d=fmt_s(rl.get("collective_s")),
+            e=rl.get("bound", "-")))
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    recs = load()
+    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    if which in ("all", "dryrun"):
+        print("### Single-pod (16x16 = 256 chips)\n")
+        print(dryrun_table(recs, "single"))
+        print("\n### Multi-pod (2x16x16 = 512 chips)\n")
+        print(dryrun_table(recs, "multi"))
+    if which in ("all", "roofline"):
+        print("\n### Roofline (single-pod)\n")
+        print(roofline_table(recs))
+    if which in ("all", "extras"):
+        print("\n### Variant cells\n")
+        print(extras_table(recs))

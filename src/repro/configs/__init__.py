@@ -1,0 +1,83 @@
+"""Architecture registry: the 10 assigned archs + the paper's own config.
+
+Each ``configs/<id>.py`` exposes ``CONFIG`` (exact published hyper-params).
+``get_config(name, attn=..., s=...)`` applies attention-variant overrides
+(the paper's MTLA/MLA as first-class knobs on any arch) and
+``smoke_config(name)`` returns a reduced same-family config for CPU tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Optional
+
+from ..core.types import ModelConfig, mla_variant, mtla_variant
+
+ARCH_IDS = [
+    "granite_34b", "qwen3_1_7b", "phi3_medium_14b", "qwen2_7b",
+    "hymba_1_5b", "mamba2_780m", "qwen2_moe_a2_7b", "dbrx_132b",
+    "seamless_m4t_medium", "internvl2_2b",
+]
+ALL_IDS = ARCH_IDS + ["mtla_paper"]
+
+
+def _norm(name: str) -> str:
+    return name.replace("-", "_").replace(".", "_")
+
+
+def get_config(name: str, attn: Optional[str] = None, s: int = 2,
+               mtla_train_impl: Optional[str] = None) -> ModelConfig:
+    mod = importlib.import_module(f".{_norm(name)}", __package__)
+    cfg: ModelConfig = mod.CONFIG
+    if attn and attn != cfg.attn.kind:
+        if cfg.family == "ssm":
+            raise ValueError(
+                f"{name} is attention-free; MTLA/MLA inapplicable "
+                "(DESIGN.md §Arch-applicability)")
+        if attn == "mtla":
+            cfg = mtla_variant(cfg, s=s)
+        elif attn == "mla":
+            cfg = mla_variant(cfg)
+        elif attn == "mqa":
+            cfg = cfg.with_attn(kind="mqa", num_kv_heads=1)
+        elif attn == "mha":
+            cfg = cfg.with_attn(kind="mha",
+                                num_kv_heads=cfg.attn.num_heads)
+        elif attn == "gqa":
+            cfg = cfg.with_attn(kind="gqa")
+        else:
+            raise ValueError(attn)
+    if mtla_train_impl:
+        cfg = cfg.with_attn(mtla_train_impl=mtla_train_impl)
+    return cfg
+
+
+def smoke_config(name: str) -> ModelConfig:
+    """Reduced same-family config: small widths/layers/vocab, runs a full
+    forward/train step on CPU in seconds."""
+    cfg = get_config(name)
+    a = cfg.attn
+    kv = 1 if a.num_kv_heads == 1 else 2
+    attn = dataclasses.replace(
+        a, num_heads=4, num_kv_heads=4 if a.kind == "mha" else kv,
+        head_dim=16,
+        kv_lora_rank=32 if a.kind in ("mla", "mtla") else 0,
+        rope_head_dim=8 if a.kind in ("mla", "mtla") else 0,
+        hyper_dim=8, q_chunk=0)
+    kw = dict(
+        num_layers=2, d_model=64, d_ff=0 if cfg.family == "ssm" else 128,
+        vocab_size=97, attn=attn, max_seq_len=128, frontend_len=4,
+        frontend_dim=24)
+    if cfg.moe:
+        kw["moe"] = dataclasses.replace(
+            cfg.moe, num_experts=8, num_experts_per_tok=2, d_expert=32,
+            d_shared_expert=32 if cfg.moe.num_shared_experts else 0)
+    if cfg.ssm:
+        kw["ssm"] = dataclasses.replace(
+            cfg.ssm, d_state=8, head_dim=16, chunk=8)
+    if cfg.family == "hybrid":
+        kw["global_attn_layers"] = (0,)
+        kw["sliding_window"] = 8
+    if cfg.family == "encdec":
+        kw["encoder_layers"] = 2
+    return cfg.replace(**kw)

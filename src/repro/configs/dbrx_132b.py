@@ -1,0 +1,12 @@
+"""dbrx-132b — fine-grained MoE, 16 experts top-4
+[hf:databricks/dbrx-base; unverified]. 40L d_model=6144 48H (GQA kv=8)
+d_ff(expert)=10752 vocab=100352."""
+from ..core.types import AttentionConfig, ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="dbrx-132b", family="moe", num_layers=40, d_model=6144,
+    d_ff=10752, vocab_size=100352,
+    attn=AttentionConfig(kind="gqa", num_heads=48, num_kv_heads=8,
+                         head_dim=128, rope_theta=5e5),
+    moe=MoEConfig(num_experts=16, num_experts_per_tok=4, d_expert=10752),
+    max_seq_len=32768)

@@ -1,0 +1,10 @@
+"""granite-34b — dense llama-arch code model [arXiv:2405.04324; hf].
+88L d_model=6144 48H (GQA kv=1 -> MQA) d_ff=24576 vocab=49152."""
+from ..core.types import AttentionConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="granite-34b", family="dense", num_layers=88, d_model=6144,
+    d_ff=24576, vocab_size=49152,
+    attn=AttentionConfig(kind="mqa", num_heads=48, num_kv_heads=1,
+                         head_dim=128, rope_theta=10000.0),
+    max_seq_len=8192)

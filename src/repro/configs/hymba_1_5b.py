@@ -1,0 +1,14 @@
+"""hymba-1.5b — hybrid: parallel attention + Mamba heads per layer
+[arXiv:2411.13676; hf]. 32L d_model=1600 25H (GQA kv=5) d_ff=5504
+vocab=32001, ssm_state=16. Most layers use SWA; 3 layers global attention
+(first/middle/last, per the paper)."""
+from ..core.types import AttentionConfig, ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="hymba-1.5b", family="hybrid", num_layers=32, d_model=1600,
+    d_ff=5504, vocab_size=32001,
+    attn=AttentionConfig(kind="gqa", num_heads=25, num_kv_heads=5,
+                         head_dim=64, rope_theta=10000.0),
+    ssm=SSMConfig(d_state=16, d_conv=4, expand=2, head_dim=64, n_groups=1),
+    global_attn_layers=(0, 15, 31), sliding_window=1024,
+    max_seq_len=8192)

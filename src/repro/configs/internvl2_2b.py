@@ -1,0 +1,12 @@
+"""internvl2-2b — VLM: InternViT frontend STUB (precomputed patch
+embeddings) + InternLM2-1.8b backbone [arXiv:2404.16821; hf].
+24L d_model=2048 16H (GQA kv=8) d_ff=8192 vocab=92553."""
+from ..core.types import AttentionConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-2b", family="vlm", num_layers=24, d_model=2048,
+    d_ff=8192, vocab_size=92553,
+    attn=AttentionConfig(kind="gqa", num_heads=16, num_kv_heads=8,
+                         head_dim=128, rope_theta=1e6),
+    frontend="vision_patches", frontend_dim=1024, frontend_len=1024,
+    max_seq_len=32768)

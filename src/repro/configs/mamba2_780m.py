@@ -1,0 +1,12 @@
+"""mamba2-780m — attention-free SSD (state-space duality)
+[arXiv:2405.21060; unverified]. 48L d_model=1536 vocab=50280 ssm_state=128.
+MTLA inapplicable (no KV cache) — DESIGN.md §Arch-applicability."""
+from ..core.types import AttentionConfig, ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-780m", family="ssm", num_layers=48, d_model=1536,
+    d_ff=0, vocab_size=50280,
+    attn=AttentionConfig(kind="mha", num_heads=1, num_kv_heads=1,
+                         head_dim=64),  # unused (attention-free)
+    ssm=SSMConfig(d_state=128, d_conv=4, expand=2, head_dim=64, n_groups=1),
+    max_seq_len=8192)

@@ -1,0 +1,13 @@
+"""The paper's own model (App. D): 9-layer 512-d 8-head decoder-only with
+the encoder output prepended as a prompt (speech frontend stub). MTLA with
+r=256, d_h^R=32, hyper 64, s=2 — exactly the published setting."""
+from ..core.types import AttentionConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="mtla-paper", family="dense", num_layers=9, d_model=512,
+    d_ff=2048, vocab_size=8000,
+    attn=AttentionConfig(kind="mtla", num_heads=8, num_kv_heads=8,
+                         head_dim=64, kv_lora_rank=256, rope_head_dim=32,
+                         hyper_dim=64, s=2),
+    frontend="audio_frames", frontend_dim=512, frontend_len=256,
+    max_seq_len=4096)

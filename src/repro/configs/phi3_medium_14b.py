@@ -1,0 +1,10 @@
+"""phi3-medium-14b — dense RoPE SwiGLU GQA [arXiv:2404.14219; unverified].
+40L d_model=5120 40H (GQA kv=10) d_ff=17920 vocab=100352."""
+from ..core.types import AttentionConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="phi3-medium-14b", family="dense", num_layers=40, d_model=5120,
+    d_ff=17920, vocab_size=100352,
+    attn=AttentionConfig(kind="gqa", num_heads=40, num_kv_heads=10,
+                         head_dim=128, rope_theta=10000.0),
+    max_seq_len=8192)

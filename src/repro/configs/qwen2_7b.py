@@ -1,0 +1,10 @@
+"""qwen2-7b — dense GQA with QKV bias [arXiv:2407.10671; hf].
+28L d_model=3584 28H (GQA kv=4) d_ff=18944 vocab=152064."""
+from ..core.types import AttentionConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-7b", family="dense", num_layers=28, d_model=3584,
+    d_ff=18944, vocab_size=152064,
+    attn=AttentionConfig(kind="gqa", num_heads=28, num_kv_heads=4,
+                         head_dim=128, rope_theta=1e6, qkv_bias=True),
+    max_seq_len=32768)

@@ -1,0 +1,12 @@
+"""qwen2-moe-a2.7b — MoE: 4 shared + 60 routed top-4
+[hf:Qwen/Qwen1.5-MoE-A2.7B; hf]. 24L d_model=2048 16H (kv=16) d_ff=1408."""
+from ..core.types import AttentionConfig, ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-moe-a2.7b", family="moe", num_layers=24, d_model=2048,
+    d_ff=1408, vocab_size=151936,
+    attn=AttentionConfig(kind="gqa", num_heads=16, num_kv_heads=16,
+                         head_dim=128, rope_theta=1e6, qkv_bias=True),
+    moe=MoEConfig(num_experts=60, num_experts_per_tok=4, d_expert=1408,
+                  num_shared_experts=4, d_shared_expert=1408),
+    max_seq_len=8192)

@@ -1,0 +1,10 @@
+"""qwen3-1.7b — dense, qk_norm + GQA [hf:Qwen/Qwen3-8B family; hf].
+28L d_model=2048 16H (GQA kv=8) d_ff=6144 vocab=151936."""
+from ..core.types import AttentionConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-1.7b", family="dense", num_layers=28, d_model=2048,
+    d_ff=6144, vocab_size=151936,
+    attn=AttentionConfig(kind="gqa", num_heads=16, num_kv_heads=8,
+                         head_dim=128, rope_theta=1e6, qk_norm=True),
+    max_seq_len=32768)

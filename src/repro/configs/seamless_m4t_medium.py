@@ -1,0 +1,13 @@
+"""seamless-m4t-medium — enc-dec multimodal backbone
+[arXiv:2308.11596; hf]. 12L enc + 12L dec, d_model=1024 16H d_ff=4096
+vocab=256206. Audio frontend is a STUB (precomputed frame embeddings)."""
+from ..core.types import AttentionConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="seamless-m4t-medium", family="encdec", num_layers=12,
+    encoder_layers=12, d_model=1024, d_ff=4096, vocab_size=256206,
+    attn=AttentionConfig(kind="mha", num_heads=16, num_kv_heads=16,
+                         head_dim=64, rope_theta=10000.0),
+    norm="layernorm", act="relu", gated_mlp=False,
+    frontend="audio_frames", frontend_dim=1024, frontend_len=1024,
+    max_seq_len=4096)

@@ -1,0 +1,88 @@
+"""Assigned input shapes x applicability + ShapeDtypeStruct input_specs.
+
+LM transformer shapes are seq_len x global_batch. decode_*/long_* lower
+``serve_step`` (one new token against a seq_len KV cache), not train_step.
+long_500k requires sub-quadratic attention: it runs for SSM/hybrid archs and
+is SKIPPED for pure full-attention archs (DESIGN.md §Shape-level skips) —
+except as MTLA-enabled extra cells, where the paper's technique is what
+makes the cache tractable.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.types import ModelConfig
+
+
+@dataclass(frozen=True)
+class Shape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES: Dict[str, Shape] = {
+    "train_4k": Shape("train_4k", 4096, 256, "train"),
+    "prefill_32k": Shape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": Shape("decode_32k", 32768, 128, "decode"),
+    "long_500k": Shape("long_500k", 524288, 1, "decode"),
+}
+
+ENCDEC_SRC_LEN = 1024  # stub source length for serve shapes
+
+
+def applicability(cfg: ModelConfig, shape_name: str) -> Tuple[bool, str]:
+    shape = SHAPES[shape_name]
+    if shape.name == "long_500k":
+        if cfg.family in ("ssm", "hybrid"):
+            return True, "sub-quadratic family"
+        if cfg.attn.kind == "mtla":
+            return True, "MTLA-extra: temporal compression makes 500k tractable"
+        return False, ("SKIP: pure full-attention arch; long_500k needs "
+                       "sub-quadratic attention (DESIGN.md)")
+    return True, "ok"
+
+
+def input_specs(cfg: ModelConfig, shape_name: str):
+    """ShapeDtypeStruct stand-ins for every model input of the shape's step
+    (weak-type-correct, shardable, no device allocation). Decode caches are
+    composed separately via jax.eval_shape(init_caches, ...)."""
+    shape = SHAPES[shape_name]
+    B, T = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    f32 = jnp.float32
+    sds = jax.ShapeDtypeStruct
+
+    if shape.kind == "train":
+        if cfg.family == "encdec":
+            Ls = cfg.frontend_len
+            Tt = T - Ls
+            return {"frontend_embeds": sds((B, Ls, cfg.frontend_dim), f32),
+                    "tokens": sds((B, Tt), i32),
+                    "labels": sds((B, Tt), i32)}
+        if cfg.frontend != "none":
+            Lp = cfg.frontend_len
+            Tt = T - Lp
+            return {"frontend_embeds": sds((B, Lp, cfg.frontend_dim), f32),
+                    "tokens": sds((B, Tt), i32),
+                    "labels": sds((B, Tt), i32)}
+        return {"tokens": sds((B, T), i32), "labels": sds((B, T), i32)}
+
+    if shape.kind == "prefill":
+        if cfg.family == "encdec":
+            return {"frontend_embeds": sds((B, ENCDEC_SRC_LEN,
+                                            cfg.frontend_dim), f32),
+                    "tokens": sds((B, T - ENCDEC_SRC_LEN), i32)}
+        if cfg.frontend != "none":
+            Lp = cfg.frontend_len
+            return {"frontend_embeds": sds((B, Lp, cfg.frontend_dim), f32),
+                    "tokens": sds((B, T - Lp), i32)}
+        return {"tokens": sds((B, T), i32)}
+
+    # decode: one new token; cache length = seq_len
+    return {"token": sds((B, 1), i32)}

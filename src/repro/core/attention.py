@@ -1,0 +1,390 @@
+"""Unified attention family: MHA / MQA / GQA / MLA / MTLA.
+
+One parameter layout + three execution paths per kind:
+  - ``attn_train``   parallel training forward (used for train_step and the
+                     prefill phase of serving)
+  - ``attn_prefill`` train-path forward that additionally materializes the
+                     decode cache
+  - ``attn_decode``  one-token incremental step against the cache
+
+MLA/MTLA decode uses the absorbed form (paper Eq. 12/17): the cache is the
+latent sequence itself, W_UK folds into the query and W_UV into the output.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import masks, mtla
+from .nn import dense, dense_init, norm_apply, norm_init, rms_norm_nd
+from .rope import apply_rope, rope_cos_sin
+from .types import AttentionConfig
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg: AttentionConfig, d_model: int, dtype=jnp.float32):
+    ks = jax.random.split(key, 8)
+    H, KV, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    p = {}
+    if cfg.kind in ("mla", "mtla"):
+        dr = cfg.rope_head_dim
+        r = cfg.kv_lora_rank
+        p["wq"] = dense_init(ks[0], d_model, (H, dh + dr), bias=cfg.qkv_bias,
+                             dtype=dtype)
+        p["w_dkv"] = dense_init(ks[1], d_model, r, dtype=dtype)
+        p["kv_norm"] = norm_init(r, "rmsnorm", dtype)
+        p["w_kr"] = dense_init(ks[2], d_model, dr, dtype=dtype)
+        p["w_uk"] = dense_init(ks[3], r, (H, dh), dtype=dtype)
+        p["w_uv"] = dense_init(ks[4], r, (H, dh), dtype=dtype)
+        p["wo"] = dense_init(ks[5], H * dh, d_model,
+                             scale=1.0 / math.sqrt(H * dh), dtype=dtype)
+        if cfg.kind == "mtla":
+            p["w_hc"] = dense_init(ks[6], r, cfg.hyper_dim, dtype=dtype)
+            p["w_hp"] = dense_init(ks[7], r, cfg.hyper_dim, dtype=dtype)
+    else:
+        p["wq"] = dense_init(ks[0], d_model, (H, dh), bias=cfg.qkv_bias,
+                             dtype=dtype)
+        p["wk"] = dense_init(ks[1], d_model, (KV, dh), bias=cfg.qkv_bias,
+                             dtype=dtype)
+        p["wv"] = dense_init(ks[2], d_model, (KV, dh), bias=cfg.qkv_bias,
+                             dtype=dtype)
+        p["wo"] = dense_init(ks[3], H * dh, d_model,
+                             scale=1.0 / math.sqrt(H * dh), dtype=dtype)
+        if cfg.qk_norm:
+            p["q_norm"] = {"scale": jnp.ones((dh,), dtype)}
+            p["k_norm"] = {"scale": jnp.ones((dh,), dtype)}
+    return p
+
+
+# ---------------------------------------------------------------------------
+# standard kinds (mha / mqa / gqa)
+# ---------------------------------------------------------------------------
+
+def _std_qkv(p, cfg: AttentionConfig, x, positions):
+    """x [B,T,d] -> q [B,T,H,dh] (rope'd), k/v [B,T,KV,dh] (k rope'd)."""
+    q = dense(p["wq"], x)
+    k = dense(p["wk"], x)
+    v = dense(p["wv"], x)
+    if cfg.qk_norm:
+        q = rms_norm_nd(p["q_norm"]["scale"], q)
+        k = rms_norm_nd(p["k_norm"]["scale"], k)
+    if cfg.use_rope:
+        cos, sin = rope_cos_sin(positions, cfg.head_dim, cfg.rope_theta)
+        cos, sin = cos[:, :, None, :], sin[:, :, None, :]
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    return q, k, v
+
+
+def _grouped_attention(q, k, v, allow, scale, sm_dtype=jnp.float32):
+    """q [B,Tq,H,dh], k/v [B,Tk,KV,dh], allow [B?,Tq,Tk] bool."""
+    B, Tq, H, dh = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, Tq, KV, G, dh)
+    logits = jnp.einsum("btkgd,bskd->bkgts", qg, k) * scale
+    if allow.ndim == 2:
+        allow = allow[None]
+    logits = jnp.where(allow[:, None, None], logits,
+                       jnp.asarray(NEG_INF, logits.dtype))
+    pr = jax.nn.softmax(logits.astype(sm_dtype), axis=-1).astype(v.dtype)
+    ctx = jnp.einsum("bkgts,bskd->btkgd", pr, v)
+    return ctx.reshape(B, Tq, H * dh)
+
+
+def _sm_dtype(cfg: AttentionConfig):
+    return jnp.bfloat16 if cfg.softmax_dtype == "bfloat16" else jnp.float32
+
+
+def _std_train(p, cfg: AttentionConfig, x, positions, window: int,
+               causal: bool = True):
+    B, T, _ = x.shape
+    q, k, v = _std_qkv(p, cfg, x, positions)
+    scale = mtla.default_scale(cfg.head_dim, cfg.softmax_scale)
+    pos_row = positions[0] if positions.ndim == 2 else positions
+
+    sm = _sm_dtype(cfg)
+    qc = cfg.q_chunk
+    # banded SWA: with a sliding window each query block only needs the
+    # [row0-window, row0+qc) key band — slicing it cuts logits traffic from
+    # qc x T to qc x (qc+window) (hillclimb H-A3, EXPERIMENTS.md §Perf)
+    band = (causal and window and qc and T > qc + window)
+
+    def block(args):
+        qb, rows = args
+        if band:
+            start = jnp.clip(rows[0] - window + 1, 0, T - (qc + window))
+            kb = jax.lax.dynamic_slice_in_dim(k, start, qc + window, axis=1)
+            vb = jax.lax.dynamic_slice_in_dim(v, start, qc + window, axis=1)
+            cols = start + jnp.arange(qc + window)
+            allow = masks.sliding_window_mask(rows, cols, window)
+            return _grouped_attention(qb, kb, vb, allow, scale, sm)
+        if causal:
+            allow = masks.sliding_window_mask(rows, pos_row, window)
+        else:
+            allow = jnp.ones((rows.shape[0], pos_row.shape[0]), bool)
+        return _grouped_attention(qb, k, v, allow, scale, sm)
+
+    qc = cfg.q_chunk
+    if qc and T > qc and T % qc == 0:
+        nq = T // qc
+        qb = jnp.moveaxis(q.reshape(B, nq, qc, cfg.num_heads, cfg.head_dim), 1, 0)
+        rows = pos_row.reshape(nq, qc)
+        ctx = jax.lax.map(block, (qb, rows))
+        ctx = jnp.moveaxis(ctx, 0, 1).reshape(B, T, -1)
+    else:
+        ctx = block((q, pos_row))
+    return dense(p["wo"], ctx), (k, v)
+
+
+# ---------------------------------------------------------------------------
+# latent kinds (mla / mtla)
+# ---------------------------------------------------------------------------
+
+def _latent_qcr(p, cfg: AttentionConfig, x, positions):
+    """Returns q_nope [B,T,H,dh], q_rope [B,T,H,dr], c [B,T,r], kr [B,T,dr]."""
+    H, dh, dr = cfg.num_heads, cfg.head_dim, cfg.rope_head_dim
+    q = dense(p["wq"], x)                       # [B,T,H,dh+dr]
+    q_nope, q_rope = q[..., :dh], q[..., dh:]
+    c = dense(p["w_dkv"], x)
+    c = norm_apply(p["kv_norm"], c, kind="rmsnorm")
+    kr = dense(p["w_kr"], x)                    # [B,T,dr] single shared head
+    if cfg.use_rope:
+        cos, sin = rope_cos_sin(positions, dr, cfg.rope_theta)
+        q_rope = apply_rope(q_rope, cos[:, :, None, :], sin[:, :, None, :])
+        kr = apply_rope(kr, cos, sin)
+    return q_nope, q_rope, c, kr
+
+
+def _mla_train(p, cfg: AttentionConfig, x, positions):
+    """Plain MLA training: keys/values up-projected from the latent, causal."""
+    B, T, _ = x.shape
+    q_nope, q_rope, c, kr = _latent_qcr(p, cfg, x, positions)
+    k = dense(p["w_uk"], c)                     # [B,T,H,dh]
+    v = dense(p["w_uv"], c)
+    scale = mtla.default_scale(cfg.head_dim, cfg.softmax_scale)
+    pos_row = positions[0] if positions.ndim == 2 else positions
+
+    def block(args):
+        qn, qr, rows = args
+        logits = jnp.einsum("bthd,bnhd->bhtn", qn, k)
+        logits = logits + jnp.einsum("bthp,bnp->bhtn", qr, kr)
+        logits = logits * scale
+        allow = masks.causal_mask(rows, pos_row)
+        logits = jnp.where(allow[None, None], logits,
+                           jnp.asarray(NEG_INF, logits.dtype))
+        pr = jax.nn.softmax(logits.astype(_sm_dtype(cfg)),
+                            -1).astype(v.dtype)
+        return jnp.einsum("bhtn,bnhd->bthd", pr, v)
+
+    qc = cfg.q_chunk
+    if qc and T > qc and T % qc == 0:
+        nq = T // qc
+        mv = lambda a: jnp.moveaxis(
+            a.reshape((B, nq, qc) + a.shape[2:]), 1, 0)
+        ctx = jax.lax.map(block, (mv(q_nope), mv(q_rope),
+                                  pos_row.reshape(nq, qc)))
+        ctx = jnp.moveaxis(ctx, 0, 1).reshape(B, T, -1)
+    else:
+        ctx = block((q_nope, q_rope, pos_row)).reshape(B, T, -1)
+    return dense(p["wo"], ctx), (c, kr)
+
+
+def _mtla_train(p, cfg: AttentionConfig, x, positions, use_kernels: bool = False):
+    """MTLA training; impl selected by cfg.mtla_train_impl."""
+    B, T, _ = x.shape
+    s = cfg.s
+    q_nope, q_rope, c, kr = _latent_qcr(p, cfg, x, positions)
+    pos_row = positions[0] if positions.ndim == 2 else positions
+    chunk_idx = pos_row // s
+    g = mtla.merge_gates(p, c, chunk_idx[None, :].repeat(B, 0))
+    P, C_hat = mtla.temporal_merge(c, g, s)
+    scale = mtla.default_scale(cfg.head_dim, cfg.softmax_scale)
+
+    if cfg.mtla_train_impl == "masked":
+        k_full = dense(p["w_uk"], P)
+        v_full = dense(p["w_uv"], P)
+        ctx = mtla.attention_masked(q_nope, q_rope, k_full, v_full, kr, s,
+                                    scale, sm_dtype=_sm_dtype(cfg))
+    else:
+        kr_chunk = mtla.chunk_final_rope_keys(kr, s)
+        k_chunk = dense(p["w_uk"], C_hat)
+        v_chunk = dense(p["w_uv"], C_hat)
+        k_self = dense(p["w_uk"], P)
+        v_self = dense(p["w_uv"], P)
+        ctx = mtla.attention_compressed(
+            q_nope, q_rope, k_chunk, v_chunk, kr_chunk,
+            k_self, v_self, kr, s, scale, q_chunk=cfg.q_chunk,
+            positions=pos_row, sm_dtype=_sm_dtype(cfg))
+    ctx = ctx.reshape(B, T, -1)
+    return dense(p["wo"], ctx), (c, kr, P, C_hat, g)
+
+
+# ---------------------------------------------------------------------------
+# public API
+# ---------------------------------------------------------------------------
+
+def attn_train(p, cfg: AttentionConfig, x, *, positions=None,
+               window: int = 0, causal: bool = True):
+    """x [B,T,d] -> y [B,T,d]. window/causal only apply to standard kinds."""
+    B, T, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(T)[None, :].repeat(B, 0)
+    elif positions.ndim == 1:
+        positions = positions[None, :].repeat(B, 0)
+    if cfg.kind in ("mha", "mqa", "gqa"):
+        y, _ = _std_train(p, cfg, x, positions, window, causal)
+    elif cfg.kind == "mla":
+        y, _ = _mla_train(p, cfg, x, positions)
+    elif cfg.kind == "mtla":
+        y, _ = _mtla_train(p, cfg, x, positions)
+    else:
+        raise ValueError(cfg.kind)
+    return y
+
+
+# --- caches ---------------------------------------------------------------
+
+def init_attn_cache(cfg: AttentionConfig, batch: int, max_len: int,
+                    dtype=jnp.bfloat16, window: int = 0):
+    """Decode cache pytree. For latent kinds the cache is the latent chunk
+    sequence (t = ceil(max_len / s) slots for MTLA). For standard kinds with
+    a sliding window the cache is a ring buffer of `window` slots."""
+    if cfg.kind in ("mla", "mtla"):
+        s = cfg.s if cfg.kind == "mtla" else 1
+        t = -(-max_len // s)
+        return {
+            "c": jnp.zeros((batch, t, cfg.kv_lora_rank), dtype),
+            "kr": jnp.zeros((batch, t, cfg.rope_head_dim), dtype),
+            "pos": jnp.zeros((batch,), jnp.int32),
+        }
+    L = window if (window and window < max_len) else max_len
+    return {
+        "k": jnp.zeros((batch, L, cfg.num_kv_heads, cfg.head_dim), dtype),
+        "v": jnp.zeros((batch, L, cfg.num_kv_heads, cfg.head_dim), dtype),
+        "slot_pos": jnp.full((batch, L), -1, jnp.int32),
+        "pos": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def attn_prefill(p, cfg: AttentionConfig, x, cache, *, window: int = 0):
+    """Run the train path AND fill the decode cache. Fresh sequences only
+    (positions 0..T-1)."""
+    B, T, _ = x.shape
+    positions = jnp.arange(T)[None, :].repeat(B, 0)
+    if cfg.kind in ("mha", "mqa", "gqa"):
+        y, (k, v) = _std_train(p, cfg, x, positions, window)
+        L = cache["k"].shape[1]
+        if L >= T:
+            cache["k"] = jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], k.astype(cache["k"].dtype), 0, 1)
+            cache["v"] = jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], v.astype(cache["v"].dtype), 0, 1)
+            cache["slot_pos"] = jax.lax.dynamic_update_slice_in_dim(
+                cache["slot_pos"], positions.astype(jnp.int32), 0, 1)
+        else:  # ring buffer: keep the last L positions
+            sel = jnp.arange(T - L, T)
+            slots = sel % L
+            cache["k"] = cache["k"].at[:, slots].set(
+                k[:, sel].astype(cache["k"].dtype))
+            cache["v"] = cache["v"].at[:, slots].set(
+                v[:, sel].astype(cache["v"].dtype))
+            cache["slot_pos"] = cache["slot_pos"].at[:, slots].set(
+                sel[None, :].astype(jnp.int32).repeat(B, 0))
+        cache["pos"] = jnp.full((B,), T, jnp.int32)
+        return y, cache
+    if cfg.kind == "mla":
+        y, (c, kr) = _mla_train(p, cfg, x, positions)
+        cache["c"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["c"], c.astype(cache["c"].dtype), 0, 1)
+        cache["kr"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["kr"], kr.astype(cache["kr"].dtype), 0, 1)
+        cache["pos"] = jnp.full((B,), T, jnp.int32)
+        return y, cache
+    # mtla
+    y, (c, kr, P, C_hat, g) = _mtla_train(p, cfg, x, positions)
+    s = cfg.s
+    t = C_hat.shape[1]
+    kr_chunk = mtla.chunk_final_rope_keys(kr, s)
+    # last (possibly partial) chunk already holds the state at T-1 (padding
+    # contributes zero), and its RoPE slot holds kr[T-1] — both match decode.
+    cache["c"] = jax.lax.dynamic_update_slice_in_dim(
+        cache["c"], C_hat.astype(cache["c"].dtype), 0, 1)
+    cache["kr"] = jax.lax.dynamic_update_slice_in_dim(
+        cache["kr"], kr_chunk.astype(cache["kr"].dtype), 0, 1)
+    cache["pos"] = jnp.full((B,), T, jnp.int32)
+    return y, cache
+
+
+def attn_decode(p, cfg: AttentionConfig, x_t, cache, *, window: int = 0):
+    """x_t [B,1,d] one new token per sequence; returns (y [B,1,d], cache)."""
+    B = x_t.shape[0]
+    pos = cache["pos"]                                   # [B]
+    scale = mtla.default_scale(cfg.head_dim, cfg.softmax_scale)
+    if cfg.kind in ("mha", "mqa", "gqa"):
+        q, k, v = _std_qkv(p, cfg, x_t, pos[:, None])
+        L = cache["k"].shape[1]
+        slot = pos % L
+        bidx = jnp.arange(B)
+        cache["k"] = cache["k"].at[bidx, slot].set(
+            k[:, 0].astype(cache["k"].dtype))
+        cache["v"] = cache["v"].at[bidx, slot].set(
+            v[:, 0].astype(cache["v"].dtype))
+        cache["slot_pos"] = cache["slot_pos"].at[bidx, slot].set(pos)
+        sp = cache["slot_pos"]                           # [B, L]
+        allow = (sp >= 0) & (sp <= pos[:, None])
+        if window:
+            allow &= sp > (pos[:, None] - window)
+        ck = cache["k"].astype(k.dtype)
+        cv = cache["v"].astype(v.dtype)
+        KV, dh = cfg.num_kv_heads, cfg.head_dim
+        G = cfg.num_heads // KV
+        qg = q.reshape(B, 1, KV, G, dh)
+        logits = jnp.einsum("btkgd,bskd->bkgts", qg, ck) * scale
+        logits = jnp.where(allow[:, None, None, None], logits, NEG_INF)
+        pr = jax.nn.softmax(logits.astype(jnp.float32), -1).astype(cv.dtype)
+        ctx = jnp.einsum("bkgts,bskd->btkgd", pr, cv).reshape(B, 1, -1)
+        y = dense(p["wo"], ctx)
+        cache["pos"] = pos + 1
+        return y, cache
+
+    # latent kinds
+    H, dh, dr = cfg.num_heads, cfg.head_dim, cfg.rope_head_dim
+    q_nope, q_rope, c, kr = _latent_qcr(p, cfg, x_t, pos[:, None])
+    q_lat = mtla.absorbed_queries(q_nope[:, 0], p["w_uk"]["w"])   # [B,H,r]
+    qr = q_rope[:, 0]                                             # [B,H,dr]
+    if cfg.kind == "mla":
+        bidx = jnp.arange(B)
+        cache["c"] = cache["c"].at[bidx, pos].set(
+            c[:, 0].astype(cache["c"].dtype))
+        cache["kr"] = cache["kr"].at[bidx, pos].set(
+            kr[:, 0].astype(cache["kr"].dtype))
+        tmax = cache["c"].shape[1]
+        logits = jnp.einsum("bhr,btr->bht", q_lat.astype(jnp.float32),
+                            cache["c"].astype(jnp.float32))
+        logits += jnp.einsum("bhp,btp->bht", qr.astype(jnp.float32),
+                             cache["kr"].astype(jnp.float32))
+        logits *= scale
+        valid = jnp.arange(tmax)[None, :] <= pos[:, None]
+        logits = jnp.where(valid[:, None, :], logits, NEG_INF)
+        pr = jax.nn.softmax(logits, -1)
+        ctx_lat = jnp.einsum("bht,btr->bhr", pr,
+                             cache["c"].astype(jnp.float32))
+        ctx = jnp.einsum("bhr,rhd->bhd", ctx_lat,
+                         p["w_uv"]["w"].astype(jnp.float32)).astype(x_t.dtype)
+    else:  # mtla
+        g_t = mtla.merge_gates(p, c[:, 0], pos // cfg.s)          # [B]
+        ctx, cache["c"], cache["kr"] = mtla.decode_step_s(
+            cache["c"], cache["kr"], pos, c[:, 0], kr[:, 0], g_t,
+            q_lat, qr, p["w_uv"]["w"], scale, cfg.s)
+    y = dense(p["wo"], ctx.reshape(B, 1, H * dh))
+    cache["pos"] = pos + 1
+    return y, cache

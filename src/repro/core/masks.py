@@ -1,0 +1,52 @@
+"""Attention mask builders (boolean: True = attend allowed).
+
+The stride-aware causal mask is the paper's §4.2 contribution: with temporal
+compression ratio s, query row m may attend to column n iff
+    n == m                      (its own chunk's *partial* state), or
+    n < m and (n+1) % s == 0    (a *finalized* chunk vector)
+(0-indexed; the paper's 1-indexed statement is `n mod s == 0`).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+
+def causal_mask(rows, cols):
+    """rows/cols: int arrays of absolute positions; True where col <= row."""
+    return cols[None, :] <= rows[:, None]
+
+
+def sliding_window_mask(rows, cols, window: int):
+    m = causal_mask(rows, cols)
+    if window and window > 0:
+        m = m & (cols[None, :] > rows[:, None] - window)
+    return m
+
+
+def stride_aware_mask(rows, cols, s: int):
+    """Paper §4.2 mask over the length-T surrogate sequence (0-indexed)."""
+    same = cols[None, :] == rows[:, None]
+    final = ((cols + 1) % s == 0)[None, :] & (cols[None, :] < rows[:, None])
+    return same | final
+
+
+def chunk_merge_mask(rows, cols, s: int):
+    """Within-chunk causal mask used by the Eq.16 merge (tests oracle)."""
+    return (cols[None, :] // s == rows[:, None] // s) & (
+        cols[None, :] <= rows[:, None])
+
+
+def compressed_chunk_mask(rows, chunk_ids, s: int):
+    """Mask for the compressed T x t track: query at absolute position m may
+    attend chunk j iff j < m // s (only *finalized* chunks)."""
+    return chunk_ids[None, :] < (rows[:, None] // s)
+
+
+def np_stride_aware(T: int, s: int) -> np.ndarray:
+    """Dense numpy reference for tests."""
+    m = np.zeros((T, T), dtype=bool)
+    for i in range(T):
+        for n in range(T):
+            m[i, n] = (n == i) or (n < i and (n + 1) % s == 0)
+    return m

@@ -1,0 +1,217 @@
+"""Multi-head Temporal Latent Attention — core math (paper §4).
+
+Three execution paths, all provably consistent (tests/test_mtla_consistency.py):
+
+1. ``masked``     — paper-faithful parallel training (§4.2): a length-T
+   surrogate sequence of per-prefix chunk states + the stride-aware causal
+   mask over T x T logits.
+2. ``compressed`` — beyond-paper training path: under the stride-aware mask a
+   query at position m attends to only ceil(m/s) distinct keys — the
+   finalized chunks plus its own partial chunk state. Logits are T x (t+1):
+   an s-fold FLOP/memory reduction with bitwise-identical attended sets.
+3. ``decode``     — incremental inference (§4.1): absorbed-matmul attention
+   straight on the latent cache (Eq. 12/17) with in-place chunk merging.
+
+Temporal merge (Eq. 13-16): the hyper-network produces a scalar gate per
+token, g_i = sigmoid(<U c_i, V pe_j>), and chunk j caches the gated running
+sum of its member latents. The paper's Eq. 16 materializes a T x T weight
+matrix; the chunk mask makes it block-diagonal, so we compute the identical
+quantity chunk-wise in O(T s r) (the literal Eq. 16 oracle lives in
+kernels/ref.py and tests).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .nn import dense
+from .rope import sinusoidal_pe
+from . import masks
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# hyper-network + temporal merge
+# ---------------------------------------------------------------------------
+
+def merge_gates(params, c, chunk_idx, dtype=None):
+    """Gate per token: g = sigmoid(<U c, V pe_chunk>)  (Eq. 13 / 16).
+
+    c: [..., r] latent vectors; chunk_idx: int array broadcastable to c's
+    batch shape — the chunk index j of each token. Returns float gates
+    with c's batch shape, computed in fp32 for stability.
+    """
+    r = c.shape[-1]
+    pe = sinusoidal_pe(chunk_idx, r)                     # [..., r]
+    u = dense(params["w_hc"], c, dtype).astype(jnp.float32)
+    v = dense(params["w_hp"], pe.astype(c.dtype), dtype).astype(jnp.float32)
+    return jax.nn.sigmoid(jnp.sum(u * v, axis=-1))
+
+
+def temporal_merge(c, g, s: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked gated prefix-sum (training-time merge).
+
+    c: [B, T, r], g: [B, T]  ->  (P, C_hat)
+      P     [B, T, r] — partial chunk state as of each position (== paper's
+                        surrogate sequence C-hat' of Eq. 14)
+      C_hat [B, t, r] — finalized chunk vectors (last chunk holds the state
+                        at T-1; zero-padded tail contributes nothing)
+    """
+    B, T, r = c.shape
+    t = -(-T // s)
+    pad = t * s - T
+    cp = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+    gp = jnp.pad(g, ((0, 0), (0, pad)))
+    w = (gp[..., None].astype(jnp.float32) * cp.astype(jnp.float32))
+    w = w.reshape(B, t, s, r)
+    prefix = jnp.cumsum(w, axis=2)
+    P = prefix.reshape(B, t * s, r)[:, :T].astype(c.dtype)
+    C_hat = prefix[:, :, -1].astype(c.dtype)
+    return P, C_hat
+
+
+def chunk_final_rope_keys(kr, s: int):
+    """kr: [B, T, dr] per-token RoPE keys -> [B, t, dr] one per chunk (the
+    most recent member token's key — paper §4.3 'overwrite' rule)."""
+    B, T, dr = kr.shape
+    t = -(-T // s)
+    idx = jnp.minimum(jnp.arange(t) * s + (s - 1), T - 1)
+    return jnp.take(kr, idx, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# training attention paths
+# ---------------------------------------------------------------------------
+
+def _softmax(logits, dtype=jnp.float32):
+    return jax.nn.softmax(logits.astype(dtype), axis=-1)
+
+
+def attention_masked(q_nope, q_rope, k_full, v_full, kr_full, s: int,
+                     scale: float, sm_dtype=jnp.float32):
+    """Paper-faithful path: T x T logits + stride-aware causal mask (§4.2).
+
+    q_nope [B,T,H,dh], q_rope [B,T,H,dr], k_full/v_full [B,T,H,dh] (from the
+    surrogate sequence P), kr_full [B,T,dr] (raw per-token RoPE keys, §4.3).
+    """
+    T = q_nope.shape[1]
+    logits = jnp.einsum("bthd,bnhd->bhtn", q_nope, k_full)
+    logits = logits + jnp.einsum("bthp,bnp->bhtn", q_rope, kr_full)
+    logits = logits * scale
+    rows = jnp.arange(T)
+    allow = masks.stride_aware_mask(rows, rows, s)
+    logits = jnp.where(allow[None, None], logits,
+                       jnp.asarray(NEG_INF, logits.dtype))
+    p = _softmax(logits, sm_dtype).astype(v_full.dtype)
+    ctx = jnp.einsum("bhtn,bnhd->bthd", p, v_full)
+    return ctx
+
+
+def attention_compressed(q_nope, q_rope, k_chunk, v_chunk, kr_chunk,
+                         k_self, v_self, kr_self, s: int, scale: float,
+                         q_chunk: int = 0,
+                         positions: Optional[jnp.ndarray] = None,
+                         sm_dtype=jnp.float32):
+    """Beyond-paper path: logits T x (t+1) — finalized-chunk track + self track.
+
+    k_chunk/v_chunk [B,t,H,dh], kr_chunk [B,t,dr] — finalized chunks;
+    k_self/v_self [B,T,H,dh], kr_self [B,T,dr]    — own partial chunk state.
+    Output equals attention_masked to fp tolerance.
+    """
+    B, T, H, dh = q_nope.shape
+    t = k_chunk.shape[1]
+    if positions is None:
+        positions = jnp.arange(T)
+    chunk_ids = jnp.arange(t)
+
+    def block(args):
+        qn, qr, pos, ks, vs, krs = args
+        lc = jnp.einsum("bthd,bjhd->bhtj", qn, k_chunk)
+        lc = lc + jnp.einsum("bthp,bjp->bhtj", qr, kr_chunk)
+        lc = lc * scale
+        allow = masks.compressed_chunk_mask(pos, chunk_ids, s)
+        lc = jnp.where(allow[None, None], lc,
+                       jnp.asarray(NEG_INF, lc.dtype))
+        ls = (jnp.einsum("bthd,bthd->bht", qn, ks)
+              + jnp.einsum("bthp,btp->bht", qr, krs)) * scale
+        logits = jnp.concatenate([lc, ls[..., None]], axis=-1)
+        p = _softmax(logits, sm_dtype).astype(v_chunk.dtype)
+        ctx = jnp.einsum("bhtj,bjhd->bthd", p[..., :t], v_chunk)
+        ctx = ctx + jnp.swapaxes(p[..., t:], 1, 2) * vs
+        return ctx
+
+    if q_chunk and T > q_chunk and T % q_chunk == 0:
+        nq = T // q_chunk
+
+        def resh(a, axis=1):
+            return a.reshape(a.shape[:axis] + (nq, q_chunk) + a.shape[axis + 1:])
+
+        qn = jnp.moveaxis(resh(q_nope), 1, 0)
+        qr = jnp.moveaxis(resh(q_rope), 1, 0)
+        pos = positions.reshape(nq, q_chunk)
+        ks = jnp.moveaxis(resh(k_self), 1, 0)
+        vs = jnp.moveaxis(resh(v_self), 1, 0)
+        krs = jnp.moveaxis(resh(kr_self), 1, 0)
+        ctx = jax.lax.map(block, (qn, qr, pos, ks, vs, krs))
+        ctx = jnp.moveaxis(ctx, 0, 1).reshape(B, T, H, dh)
+    else:
+        ctx = block((q_nope, q_rope, positions, k_self, v_self, kr_self))
+    return ctx
+
+
+# ---------------------------------------------------------------------------
+# incremental decode (absorbed form, Eq. 12/17)
+# ---------------------------------------------------------------------------
+
+def decode_step_s(cache_c, cache_kr, pos, c_t, kr_t, g_t,
+                  q_lat, q_rope, w_uv, scale: float, s: int):
+    """One MTLA decode step (§4.1), batched with per-sequence positions.
+
+    cache_c  [B, tmax, r]    latent chunk cache
+    cache_kr [B, tmax, dr]   per-chunk RoPE key cache
+    pos      [B] int32       absolute position i of the incoming token
+    c_t      [B, r]          new latent (post-norm), kr_t [B, dr] RoPE'd key
+    g_t      [B]             hyper-network gate for the new token
+    q_lat    [B, H, r]       absorbed queries (q_nope @ W_UK per head)
+    q_rope   [B, H, dr]
+    w_uv     [r, H, dh]
+    s        static temporal compression ratio
+    Returns (ctx [B,H,dh], cache_c, cache_kr).
+    """
+    B, tmax, r = cache_c.shape
+    j = pos // s                       # chunk slot of the incoming token
+    k = pos % s                        # phase within the chunk
+    bidx = jnp.arange(B)
+
+    prev = cache_c[bidx, j]            # [B, r]
+    base = jnp.where((k == 0)[:, None], jnp.zeros_like(prev), prev)
+    new_c = base + (g_t[:, None].astype(jnp.float32)
+                    * c_t.astype(jnp.float32)).astype(cache_c.dtype)
+    cache_c = cache_c.at[bidx, j].set(new_c)
+    cache_kr = cache_kr.at[bidx, j].set(kr_t.astype(cache_kr.dtype))
+
+    logits = jnp.einsum("bhr,btr->bht", q_lat.astype(jnp.float32),
+                        cache_c.astype(jnp.float32))
+    logits = logits + jnp.einsum("bhp,btp->bht", q_rope.astype(jnp.float32),
+                                 cache_kr.astype(jnp.float32))
+    logits = logits * scale
+    valid = jnp.arange(tmax)[None, :] <= j[:, None]     # slots 0..j
+    logits = jnp.where(valid[:, None, :], logits, NEG_INF)
+    p = _softmax(logits)
+    ctx_lat = jnp.einsum("bht,btr->bhr", p, cache_c.astype(jnp.float32))
+    ctx = jnp.einsum("bhr,rhd->bhd", ctx_lat, w_uv.astype(jnp.float32))
+    return ctx.astype(c_t.dtype), cache_c, cache_kr
+
+
+def absorbed_queries(q_nope, w_uk):
+    """q_nope [..., H, dh] x w_uk [r, H, dh] -> [..., H, r]."""
+    return jnp.einsum("...hd,rhd->...hr", q_nope, w_uk)
+
+
+def default_scale(head_dim: int, scale: Optional[float]) -> float:
+    # Paper Eq. 11/17 uses 1/sqrt(d_h) even with the RoPE track appended.
+    return scale if scale is not None else 1.0 / math.sqrt(head_dim)

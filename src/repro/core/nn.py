@@ -1,0 +1,117 @@
+"""Minimal functional NN primitives (no flax): params are nested dicts of
+jnp arrays; every module is an ``init_*`` + ``*_apply`` pair.
+
+Parameter naming matters: runtime/sharding.py assigns PartitionSpecs by
+pattern-matching key paths, so keep weight names stable.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def dense_init(key, d_in: int, d_out, *, scale: Optional[float] = None,
+               bias: bool = False, dtype=jnp.float32):
+    """d_out may be an int or a tuple (fused multi-head shapes)."""
+    shape = (d_in,) + ((d_out,) if isinstance(d_out, int) else tuple(d_out))
+    if scale is None:
+        scale = 1.0 / math.sqrt(d_in)
+    w = jax.random.truncated_normal(key, -2.0, 2.0, shape, dtype) * scale
+    p = {"w": w}
+    if bias:
+        p["b"] = jnp.zeros(shape[1:], dtype)
+    return p
+
+
+def dense(p, x, dtype=None):
+    w = p["w"]
+    if dtype is not None:
+        w = w.astype(dtype)
+    d_in = w.shape[0]
+    out_dims = w.ndim - 1
+    y = jax.lax.dot_general(
+        x, w, (((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(y.dtype)
+    return y
+
+
+def norm_init(d: int, kind: str = "rmsnorm", dtype=jnp.float32):
+    p = {"scale": jnp.ones((d,), dtype)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def norm_apply(p, x, *, eps: float = 1e-5, kind: str = "rmsnorm"):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    if kind == "layernorm":
+        mu = jnp.mean(x32, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(x32 - mu), axis=-1, keepdims=True)
+        y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:
+        ms = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+        y = x32 * jax.lax.rsqrt(ms + eps)
+        y = y * p["scale"].astype(jnp.float32)
+    return y.astype(dt)
+
+
+def rms_norm_nd(p_scale, x, eps: float = 1e-6):
+    """Per-head qk-norm: normalize the trailing dim with a learned scale."""
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(ms + eps) * p_scale.astype(jnp.float32)
+    return y.astype(dt)
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32):
+    return {"embedding": jax.random.normal(key, (vocab, d), dtype) * 0.02}
+
+
+def embed(p, ids, dtype=None):
+    tbl = p["embedding"]
+    if dtype is not None:
+        tbl = tbl.astype(dtype)
+    return jnp.take(tbl, ids, axis=0)
+
+
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}[name]
+
+
+def mlp_init(key, d_model: int, d_ff: int, *, gated: bool = True,
+             dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"w_out": dense_init(k3, d_ff, d_model, dtype=dtype)}
+    if gated:
+        p["w_gate"] = dense_init(k1, d_model, d_ff, dtype=dtype)
+        p["w_up"] = dense_init(k2, d_model, d_ff, dtype=dtype)
+    else:
+        p["w_up"] = dense_init(k2, d_model, d_ff, dtype=dtype)
+    return p
+
+
+def mlp_apply(p, x, *, act: str = "silu", gated: bool = True, dtype=None):
+    f = act_fn(act)
+    if gated:
+        h = f(dense(p["w_gate"], x, dtype)) * dense(p["w_up"], x, dtype)
+    else:
+        h = f(dense(p["w_up"], x, dtype))
+    return dense(p["w_out"], h, dtype)
+
+
+def cast_tree(tree, dtype):
+    return jax.tree_util.tree_map(
+        lambda a: a.astype(dtype) if jnp.issubdtype(a.dtype, jnp.floating) else a,
+        tree)
+
+
+def count_params(tree) -> int:
+    return sum(int(a.size) for a in jax.tree_util.tree_leaves(tree))

@@ -1,0 +1,46 @@
+"""Rotary position embeddings + sinusoidal chunk embeddings.
+
+MTLA (paper §4.3) uses *decoupled* RoPE following MLA: a small per-head RoPE
+query track and a single shared RoPE key head; temporal compression keeps one
+RoPE key per chunk (the most recent token's key overwrites the slot).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rope_cos_sin(positions, dim: int, theta: float = 10000.0):
+    """positions: int array [...]; returns cos,sin of shape [..., dim/2]."""
+    assert dim % 2 == 0, "RoPE dim must be even"
+    inv = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """Half-split convention. x: [..., dim]; cos/sin broadcastable [..., dim/2].
+
+    x may have extra axes between positions and dim (e.g. heads); callers
+    expand cos/sin accordingly.
+    """
+    d2 = x.shape[-1] // 2
+    x1, x2 = x[..., :d2], x[..., d2:]
+    c = cos.astype(x.dtype)
+    s = sin.astype(x.dtype)
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+
+
+def sinusoidal_pe(positions, dim: int):
+    """Classic transformer sinusoidal embedding (paper Eq. 13/15 `pe_j`).
+
+    positions: int array [...]; returns [..., dim] float32.
+    """
+    half = dim // 2
+    inv = jnp.exp(-jnp.arange(half, dtype=jnp.float32)
+                  * (jnp.log(10000.0) / max(half - 1, 1)))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    pe = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+    if dim % 2 == 1:
+        pe = jnp.pad(pe, [(0, 0)] * (pe.ndim - 1) + [(0, 1)])
+    return pe

@@ -1,0 +1,167 @@
+"""Configuration dataclasses for the repro framework.
+
+Everything architectural lives in ``ModelConfig``; runtime knobs (dtypes,
+sharding mode, microbatching) live in ``TrainConfig`` / ``ServeConfig`` so a
+single architecture can be lowered for many execution regimes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+ATTN_KINDS = ("mha", "mqa", "gqa", "mla", "mtla")
+
+
+@dataclass(frozen=True)
+class AttentionConfig:
+    kind: str = "gqa"
+    num_heads: int = 8
+    num_kv_heads: int = 8
+    head_dim: int = 64
+    rope_theta: float = 10000.0
+    use_rope: bool = True
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    softmax_scale: Optional[float] = None  # default 1/sqrt(head_dim), per paper Eq.11
+    sliding_window: int = 0  # 0 = global attention
+    # --- MLA / MTLA (paper Eq. 8-17) ---
+    kv_lora_rank: int = 0     # r — latent dim of the shared KV compression
+    rope_head_dim: int = 0    # d_h^R — decoupled RoPE per-head dim
+    hyper_dim: int = 64       # hyper-network projection dim (paper App. D: 64)
+    s: int = 2                # temporal compression ratio (paper default 2)
+    mtla_train_impl: str = "compressed"  # "masked" = paper-faithful T x T path
+    # --- execution ---
+    q_chunk: int = 1024  # query-block size for chunked attention; 0 = one block
+    softmax_dtype: str = "float32"  # "bfloat16" halves [T,T] HBM traffic
+    use_pallas: bool = False  # route through kernels/ops.py (TPU runtime)
+
+    @property
+    def q_dim(self) -> int:
+        if self.kind in ("mla", "mtla"):
+            return self.num_heads * (self.head_dim + self.rope_head_dim)
+        return self.num_heads * self.head_dim
+
+    @property
+    def kv_cache_per_token(self) -> int:
+        """KV cache elements per token per layer (paper §4.3 accounting)."""
+        if self.kind == "mtla":
+            return int((self.kv_lora_rank + self.rope_head_dim) / self.s)
+        if self.kind == "mla":
+            return self.kv_lora_rank + self.rope_head_dim
+        return 2 * self.num_kv_heads * self.head_dim
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int = 8
+    num_experts_per_tok: int = 2
+    d_expert: int = 1408
+    num_shared_experts: int = 0
+    d_shared_expert: int = 0
+    router_aux_coef: float = 0.01
+    router_z_coef: float = 1e-3
+    # EP implementation: experts are padded up to a multiple of the model axis
+    # and sharded across it; dispatch is computed per-DP-shard and combined
+    # with a psum over the model axis (same collective shape as TP FFN).
+    impl: str = "ep"
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    d_state: int = 128
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64
+    n_groups: int = 1
+    chunk: int = 128         # SSD chunk length
+    dt_min: float = 0.001
+    dt_max: float = 0.1
+    # SSD intra-chunk math dtype: the L matrix is [b, nc, Q, Q, H] — fp32
+    # doubles its HBM traffic vs bf16 (decay/state accum stay fp32)
+    ssd_dtype: str = "float32"
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str = "model"
+    family: str = "dense"  # dense | moe | ssm | hybrid | encdec | vlm
+    num_layers: int = 12
+    d_model: int = 512
+    d_ff: int = 2048
+    vocab_size: int = 32000
+    attn: AttentionConfig = field(default_factory=AttentionConfig)
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    norm: str = "rmsnorm"   # rmsnorm | layernorm
+    norm_eps: float = 1e-5
+    act: str = "silu"
+    gated_mlp: bool = True  # SwiGLU-style when True; classic 2-matrix MLP else
+    tie_embeddings: bool = False
+    max_seq_len: int = 8192
+    # encoder-decoder (seamless-m4t): number of encoder layers (0 = decoder-only)
+    encoder_layers: int = 0
+    # modality frontend STUB: input_specs() provides precomputed embeddings
+    frontend: str = "none"  # none | audio_frames | vision_patches
+    frontend_len: int = 0   # frontend tokens at the train shape
+    frontend_dim: int = 1024  # precomputed frame/patch embedding dim
+    # hybrid (hymba): indices of layers with global attention; others use SWA
+    global_attn_layers: Tuple[int, ...] = ()
+    sliding_window: int = 1024  # SWA width for hybrid non-global layers
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    def with_attn(self, **kw) -> "ModelConfig":
+        return self.replace(attn=dataclasses.replace(self.attn, **kw))
+
+
+def mtla_variant(cfg: ModelConfig, s: int = 2) -> ModelConfig:
+    """Derive the MTLA variant of an architecture, following the paper's
+    hyper-parameter rule (§4.3): r = 4·d_h, d_h^R = d_h/2, hyper_dim = 64."""
+    a = cfg.attn
+    return cfg.with_attn(
+        kind="mtla",
+        kv_lora_rank=4 * a.head_dim,
+        rope_head_dim=max(a.head_dim // 2, 16),
+        s=s,
+    )
+
+
+def mla_variant(cfg: ModelConfig) -> ModelConfig:
+    a = cfg.attn
+    return cfg.with_attn(
+        kind="mla",
+        kv_lora_rank=4 * a.head_dim,
+        rope_head_dim=max(a.head_dim // 2, 16),
+    )
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    global_batch: int = 32
+    seq_len: int = 1024
+    microbatch: int = 0          # 0 = no accumulation
+    learning_rate: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    weight_decay: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    grad_clip: float = 1.0
+    z_loss: float = 1e-4
+    compute_dtype: str = "bfloat16"
+    param_dtype: str = "float32"
+    grad_reduce_dtype: str = "float32"  # float32 | bfloat16 | int8_ef
+    remat: str = "none"          # none | block | full
+    logit_chunk: int = 2048      # chunked-vocab CE block
+    seed: int = 0
+
+
+@dataclass(frozen=True)
+class ServeConfig:
+    batch: int = 8
+    max_len: int = 2048
+    compute_dtype: str = "bfloat16"
+    cache_dtype: str = "bfloat16"

@@ -1,0 +1,125 @@
+"""Pallas TPU kernel: fused compressed MTLA training attention.
+
+This is the TPU-native equivalent of the FlashMLA-style fusion the paper
+leaves as future work (§A), specialized to MTLA's structure: under the
+stride-aware causal mask a query at position m attends to exactly
+ceil(m/s) distinct keys — the finalized chunk track (length t = T/s) plus
+its own partial chunk state (the "self" track). The kernel streams chunk
+blocks through VMEM with online softmax; the self track seeds the running
+(max, sum, acc) state, so the T x T masked matmul of the paper's training
+scheme never materializes (s-fold FLOP + bandwidth reduction).
+
+Grid: (B, H, T/block_q, t/block_k), innermost axis streams chunk blocks.
+Tiles: q/k/v blocks are (block, 128)-aligned for the MXU when dh=128.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(qn_ref, qr_ref, ks_ref, vs_ref, krs_ref,
+                 kc_ref, vc_ref, krc_ref, o_ref,
+                 m_ref, l_ref, acc_ref, *,
+                 scale: float, s: int, block_q: int, block_k: int):
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+    qi = pl.program_id(2)
+
+    qn = qn_ref[0, 0].astype(jnp.float32)     # [bq, dh]
+    qr = qr_ref[0, 0].astype(jnp.float32)     # [bq, dr]
+
+    @pl.when(ki == 0)
+    def _init():
+        ks = ks_ref[0, 0].astype(jnp.float32)
+        vs = vs_ref[0, 0].astype(jnp.float32)
+        krs = krs_ref[0].astype(jnp.float32)
+        ls = (jnp.sum(qn * ks, axis=-1)
+              + jnp.sum(qr * krs, axis=-1)) * scale      # [bq]
+        m_ref[...] = ls
+        l_ref[...] = jnp.ones_like(ls)
+        acc_ref[...] = vs
+
+    kc = kc_ref[0, 0].astype(jnp.float32)     # [bk, dh]
+    vc = vc_ref[0, 0].astype(jnp.float32)
+    krc = krc_ref[0].astype(jnp.float32)      # [bk, dr]
+
+    logits = (qn @ kc.T + qr @ krc.T) * scale            # [bq, bk]
+    row = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, logits.shape, 0)
+    col = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, logits.shape, 1)
+    logits = jnp.where(col < row // s, logits, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(logits, axis=-1))
+    p = jnp.exp(logits - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + p @ vc
+    m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _final():
+        o_ref[0, 0] = (acc_ref[...]
+                       / l_ref[...][:, None]).astype(o_ref.dtype)
+
+
+def mtla_attn_pallas(q_nope, q_rope, k_chunk, v_chunk, kr_chunk,
+                     k_self, v_self, kr_self, s: int, scale: float, *,
+                     block_q: int = 256, block_k: int = 256,
+                     interpret: bool = False):
+    """Shapes as in kernels/ref.py::mtla_attn_ref. Returns ctx [B,H,T,dh].
+
+    T is padded to block_q and t to block_k internally; the chunk mask
+    (col < row//s with row < T) automatically excludes padded chunk slots.
+    """
+    B, H, T, dh = q_nope.shape
+    dr = q_rope.shape[-1]
+    t = k_chunk.shape[2]
+    bq = min(block_q, max(T, 8))
+    bk = min(block_k, max(t, 8))
+    pq = (-T) % bq
+    pk = (-t) % bk
+    padq = lambda a: jnp.pad(a, ((0, 0), (0, 0), (0, pq), (0, 0))) if pq else a
+    padk = lambda a: jnp.pad(a, ((0, 0), (0, 0), (0, pk), (0, 0))) if pk else a
+    q_nope, q_rope = padq(q_nope), padq(q_rope)
+    k_self, v_self = padq(k_self), padq(v_self)
+    kr_self = (jnp.pad(kr_self, ((0, 0), (0, pq), (0, 0)))
+               if pq else kr_self)
+    k_chunk, v_chunk = padk(k_chunk), padk(v_chunk)
+    kr_chunk = (jnp.pad(kr_chunk, ((0, 0), (0, pk), (0, 0)))
+                if pk else kr_chunk)
+    Tp, tp = T + pq, t + pk
+
+    grid = (B, H, Tp // bq, tp // bk)
+    kernel = functools.partial(_attn_kernel, scale=scale, s=s,
+                               block_q=bq, block_k=bk)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, dh), lambda b, h, i, k: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bq, dr), lambda b, h, i, k: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bq, dh), lambda b, h, i, k: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bq, dh), lambda b, h, i, k: (b, h, i, 0)),
+            pl.BlockSpec((1, bq, dr), lambda b, h, i, k: (b, i, 0)),
+            pl.BlockSpec((1, 1, bk, dh), lambda b, h, i, k: (b, h, k, 0)),
+            pl.BlockSpec((1, 1, bk, dh), lambda b, h, i, k: (b, h, k, 0)),
+            pl.BlockSpec((1, bk, dr), lambda b, h, i, k: (b, k, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, dh),
+                               lambda b, h, i, k: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Tp, dh), q_nope.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q_nope, q_rope, k_self, v_self, kr_self, k_chunk, v_chunk, kr_chunk)
+    return out[:, :, :T]

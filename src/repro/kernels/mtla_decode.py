@@ -1,0 +1,94 @@
+"""Pallas TPU kernel: MTLA decode-step attention over the latent cache.
+
+The decode hot loop is memory-bound: it streams the [t, r] latent cache once
+per step (this is the traffic MTLA divides by s vs MLA). The kernel fuses
+both logit tracks (absorbed no-PE + decoupled-RoPE), masking, online softmax
+and the value contraction so the cache block is read from HBM exactly once.
+
+Grid: (B, t/block_k) — flash-decoding style streaming with running
+(max, sum, acc) carried in VMEM scratch across cache blocks.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(j_ref, q_ref, qr_ref, c_ref, kr_ref, o_ref,
+                   m_ref, l_ref, acc_ref, *, scale: float, block_k: int):
+    ki = pl.program_id(1)
+    nk = pl.num_programs(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    j = j_ref[0]
+    q = q_ref[0].astype(jnp.float32)            # [H, r]
+    qr = qr_ref[0].astype(jnp.float32)          # [H, dr]
+    cb = c_ref[0].astype(jnp.float32)           # [bk, r]
+    krb = kr_ref[0].astype(jnp.float32)         # [bk, dr]
+
+    logits = (q @ cb.T + qr @ krb.T) * scale    # [H, bk]
+    slot = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, logits.shape, 1)
+    logits = jnp.where(slot <= j, logits, NEG_INF)
+
+    m_prev = m_ref[...]
+    l_prev = l_ref[...]
+    m_cur = jnp.max(logits, axis=-1)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(logits - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_prev * corr + jnp.sum(p, axis=-1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + p @ cb
+    m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _final():
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+def mtla_decode_pallas(q_lat, q_rope, cache_c, cache_kr, j, scale: float,
+                       *, block_k: int = 512, interpret: bool = False):
+    """q_lat [B,H,r], q_rope [B,H,dr], cache_c [B,t,r], cache_kr [B,t,dr],
+    j [B] (last valid slot). Returns ctx_lat [B,H,r] fp32."""
+    B, H, r = q_lat.shape
+    t = cache_c.shape[1]
+    dr = q_rope.shape[-1]
+    bk = min(block_k, t)
+    pad = (-t) % bk
+    if pad:
+        cache_c = jnp.pad(cache_c, ((0, 0), (0, pad), (0, 0)))
+        cache_kr = jnp.pad(cache_kr, ((0, 0), (0, pad), (0, 0)))
+        t = t + pad
+    grid = (B, t // bk)
+    kernel = functools.partial(_decode_kernel, scale=scale, block_k=bk)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, k: (b,)),
+            pl.BlockSpec((1, H, r), lambda b, k: (b, 0, 0)),
+            pl.BlockSpec((1, H, dr), lambda b, k: (b, 0, 0)),
+            pl.BlockSpec((1, bk, r), lambda b, k: (b, k, 0)),
+            pl.BlockSpec((1, bk, dr), lambda b, k: (b, k, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, H, r), lambda b, k: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, r), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((H,), jnp.float32),      # running max
+            pltpu.VMEM((H,), jnp.float32),      # running sum
+            pltpu.VMEM((H, r), jnp.float32),    # weighted cache accum
+        ],
+        interpret=interpret,
+    )(j, q_lat, q_rope, cache_c, cache_kr)
+    return out

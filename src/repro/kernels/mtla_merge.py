@@ -1,0 +1,69 @@
+"""Pallas TPU kernel: fused hyper-network gate + chunked temporal merge.
+
+Bandwidth-bound streaming op: one HBM read of C (+ tiny hyper tracks), one
+write of P and C_hat. Fusing the sigmoid-dot gate with the gated prefix-sum
+keeps the latent block resident in VMEM instead of three HLO round-trips.
+
+Tiling: grid over (B, T/block_t); block_t is a multiple of s so chunks never
+straddle blocks. The within-chunk prefix-sum runs on the VPU via a cumsum
+over the (block_t/s, s, r) view.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _merge_kernel(c_ref, u_ref, vpe_ref, p_ref, chat_ref, *, s: int):
+    c = c_ref[0].astype(jnp.float32)          # [bt, r]
+    u = u_ref[0].astype(jnp.float32)          # [bt, h]
+    vpe = vpe_ref[...].astype(jnp.float32)    # [bt, h]
+    g = jax.nn.sigmoid(jnp.sum(u * vpe, axis=-1))      # [bt]
+    bt, r = c.shape
+    w = (g[:, None] * c).reshape(bt // s, s, r)
+    prefix = jnp.cumsum(w, axis=1)
+    p_ref[0] = prefix.reshape(bt, r).astype(p_ref.dtype)
+    chat_ref[0] = prefix[:, -1].astype(chat_ref.dtype)
+
+
+def mtla_merge_pallas(c, u, vpe, s: int, *, block_t: int = 512,
+                      interpret: bool = False):
+    """c [B,T,r], u [B,T,h], vpe [T,h] -> (P [B,T,r], C_hat [B,t,r]).
+
+    T must be a multiple of s (callers pad); block_t is clipped to T and
+    rounded to a multiple of s.
+    """
+    B, T, r = c.shape
+    h = u.shape[-1]
+    assert T % s == 0, "pad T to a multiple of s first"
+    bt = min(block_t, T)
+    bt -= bt % s
+    if bt == 0 or T % bt:
+        bt = s  # fallback: one chunk per block
+        while T % bt == 0 and bt * 2 <= min(block_t, T) and T % (bt * 2) == 0:
+            bt *= 2
+    assert T % bt == 0 and bt % s == 0
+    grid = (B, T // bt)
+    kernel = functools.partial(_merge_kernel, s=s)
+    P, C_hat = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bt, r), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, bt, h), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((bt, h), lambda b, i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bt, r), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, bt // s, r), lambda b, i: (b, i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, T, r), c.dtype),
+            jax.ShapeDtypeStruct((B, T // s, r), c.dtype),
+        ],
+        interpret=interpret,
+    )(c, u, vpe)
+    return P, C_hat

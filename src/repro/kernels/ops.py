@@ -1,0 +1,46 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+On CPU (this container) the kernels execute with interpret=True so the exact
+kernel bodies are validated; on TPU they compile to Mosaic. ``use_pallas``
+in AttentionConfig routes the model through these instead of the pure-jnp
+paths (the TPU production configuration).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .mtla_attn import mtla_attn_pallas
+from .mtla_decode import mtla_decode_pallas
+from .mtla_merge import mtla_merge_pallas
+
+
+def _interpret() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@functools.partial(jax.jit, static_argnames=("s", "block_t"))
+def mtla_merge(c, u, vpe, s: int, block_t: int = 512):
+    """Fused gate + temporal merge. c [B,T,r] (T padded to s by caller),
+    u [B,T,h], vpe [T,h] -> (P, C_hat)."""
+    return mtla_merge_pallas(c, u, vpe, s, block_t=block_t,
+                             interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("s", "block_q", "block_k"))
+def mtla_attn(q_nope, q_rope, k_chunk, v_chunk, kr_chunk,
+              k_self, v_self, kr_self, s: int, scale: float,
+              block_q: int = 256, block_k: int = 256):
+    return mtla_attn_pallas(q_nope, q_rope, k_chunk, v_chunk, kr_chunk,
+                            k_self, v_self, kr_self, s, scale,
+                            block_q=block_q, block_k=block_k,
+                            interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("block_k",))
+def mtla_decode(q_lat, q_rope, cache_c, cache_kr, j, scale: float,
+                block_k: int = 512):
+    return mtla_decode_pallas(q_lat, q_rope, cache_c, cache_kr, j, scale,
+                              block_k=block_k, interpret=_interpret())

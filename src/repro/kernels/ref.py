@@ -1,0 +1,75 @@
+"""Pure-jnp oracles for every Pallas kernel (the ground truth the kernels
+are swept against in tests/test_kernels.py)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def merge_ref(c, u, vpe, s: int):
+    """Fused hyper-gate + chunked temporal merge.
+
+    c   [B, T, r]  latent vectors (post-norm)
+    u   [B, T, h]  Linear(c)      (hyper-net token track)
+    vpe [T, h]     Linear(pe_j)   (hyper-net chunk-PE track, replicated rows)
+    Returns (P [B,T,r] prefix states, C_hat [B,t,r] finalized chunks,
+             g [B,T] gates).
+    """
+    B, T, r = c.shape
+    g = jax.nn.sigmoid(
+        jnp.sum(u.astype(jnp.float32) * vpe.astype(jnp.float32)[None], -1))
+    t = -(-T // s)
+    pad = t * s - T
+    cp = jnp.pad(c, ((0, 0), (0, pad), (0, 0))).astype(jnp.float32)
+    gp = jnp.pad(g, ((0, 0), (0, pad)))
+    w = (gp[..., None] * cp).reshape(B, t, s, r)
+    prefix = jnp.cumsum(w, axis=2)
+    P = prefix.reshape(B, t * s, r)[:, :T].astype(c.dtype)
+    C_hat = prefix[:, :, -1].astype(c.dtype)
+    return P, C_hat, g.astype(c.dtype)
+
+
+def mtla_attn_ref(q_nope, q_rope, k_chunk, v_chunk, kr_chunk,
+                  k_self, v_self, kr_self, s: int, scale: float):
+    """Compressed MTLA training attention, per-head batched.
+
+    q_nope [B,H,T,dh], q_rope [B,H,T,dr]
+    k_chunk/v_chunk [B,H,t,dh], kr_chunk [B,t,dr]
+    k_self/v_self  [B,H,T,dh], kr_self  [B,T,dr]
+    Returns ctx [B,H,T,dh].
+    """
+    B, H, T, dh = q_nope.shape
+    t = k_chunk.shape[2]
+    lc = jnp.einsum("bhtd,bhjd->bhtj", q_nope, k_chunk)
+    lc = lc + jnp.einsum("bhtp,bjp->bhtj", q_rope, kr_chunk)
+    lc = lc * scale
+    rows = jnp.arange(T)
+    allow = jnp.arange(t)[None, :] < (rows[:, None] // s)
+    lc = jnp.where(allow[None, None], lc, NEG_INF)
+    ls = (jnp.einsum("bhtd,bhtd->bht", q_nope, k_self)
+          + jnp.einsum("bhtp,btp->bht", q_rope, kr_self)) * scale
+    logits = jnp.concatenate([lc, ls[..., None]], axis=-1)
+    p = jax.nn.softmax(logits.astype(jnp.float32), -1).astype(v_chunk.dtype)
+    ctx = jnp.einsum("bhtj,bhjd->bhtd", p[..., :t], v_chunk)
+    ctx = ctx + p[..., t:] * v_self
+    return ctx
+
+
+def mtla_decode_ref(q_lat, q_rope, cache_c, cache_kr, j, scale: float):
+    """Absorbed decode attention over the latent cache.
+
+    q_lat [B,H,r], q_rope [B,H,dr], cache_c [B,t,r], cache_kr [B,t,dr],
+    j [B] last valid slot per sequence. Returns ctx_lat [B,H,r] fp32.
+    """
+    B, t, r = cache_c.shape
+    logits = jnp.einsum("bhr,btr->bht", q_lat.astype(jnp.float32),
+                        cache_c.astype(jnp.float32))
+    logits += jnp.einsum("bhp,btp->bht", q_rope.astype(jnp.float32),
+                         cache_kr.astype(jnp.float32))
+    logits *= scale
+    valid = jnp.arange(t)[None, :] <= j[:, None]
+    logits = jnp.where(valid[:, None], logits, NEG_INF)
+    p = jax.nn.softmax(logits, -1)
+    return jnp.einsum("bht,btr->bhr", p, cache_c.astype(jnp.float32))

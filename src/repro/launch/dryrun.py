@@ -1,0 +1,304 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape)
+on the production meshes — (16,16)=256 chips single-pod and (2,16,16)=512
+chips multi-pod — and extract memory/cost/collective analyses for the
+roofline table.
+
+The two os.environ lines above MUST stay the first statements: jax locks
+the device count on first init.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3_1_7b \
+      --shape train_4k --mesh single [--attn mtla --s 2] [--force]
+  PYTHONPATH=src python -m repro.launch.dryrun --all   # every cell
+
+Each cell writes experiments/dryrun/<arch>__<shape>__<mesh>[__<attn>].json
+(existing results are skipped unless --force).
+"""
+import argparse
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import ARCH_IDS, get_config
+from ..configs.shapes import SHAPES, applicability, input_specs
+from ..core.types import ModelConfig, TrainConfig
+from ..models import api
+from ..roofline.analysis import Roofline, model_flops
+from ..roofline.hlo_analyzer import analyze
+from ..runtime import sharding as shd
+from ..train.trainer import (init_train_state, make_serve_steps,
+                             make_train_step)
+from .mesh import make_production_mesh
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+
+def choose_microbatch(cfg: ModelConfig, seq_len: int, global_batch: int,
+                      dp: int) -> int:
+    """Pick a grad-accumulation microbatch so per-device live activations
+    (scan-boundary residuals with remat) stay within ~4 GB."""
+    budget = 4e9
+    per_seq_layer = seq_len * cfg.d_model * 2  # bf16 residual per layer
+    live = per_seq_layer * cfg.num_layers
+    seqs_per_dev = max(1, int(budget / max(live, 1)))
+    mb = min(global_batch, seqs_per_dev * dp)
+    # round down to a multiple of dp that divides global_batch
+    mb = max(dp, (mb // dp) * dp)
+    while global_batch % mb:
+        mb -= dp
+    return max(mb, dp)
+
+
+def dp_size(mesh) -> int:
+    return int(jax.numpy.prod(jnp.asarray(
+        [mesh.shape[a] for a in ("pod", "data") if a in mesh.axis_names])))
+
+
+def _abstract(tree):
+    return jax.tree_util.tree_map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), tree)
+
+
+def _mem_analysis(compiled) -> Dict[str, Any]:
+    try:
+        ma = compiled.memory_analysis()
+        keys = ["argument_size_in_bytes", "output_size_in_bytes",
+                "temp_size_in_bytes", "generated_code_size_in_bytes",
+                "alias_size_in_bytes"]
+        return {k: int(getattr(ma, k)) for k in keys if hasattr(ma, k)}
+    except Exception as e:  # some backends don't implement it
+        return {"error": str(e)}
+
+
+def _cost_analysis(compiled) -> Dict[str, float]:
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, list):
+            ca = ca[0]
+        return {k: float(v) for k, v in ca.items()
+                if isinstance(v, (int, float)) and (
+                    k in ("flops", "bytes accessed", "optimal_seconds")
+                    or k.startswith("bytes accessed"))}
+    except Exception as e:
+        return {"error": str(e)}
+
+
+def run_cell(arch: str, shape_name: str, mesh_name: str,
+             attn: Optional[str] = None, s: int = 2,
+             mtla_train_impl: Optional[str] = None,
+             seq_shard_cache: bool = False,
+             softmax_dtype: Optional[str] = None, ssd_dtype: Optional[str] = None,
+             remat: str = "full", microbatch: int = 0,
+             out_dir: str = OUT_DIR, force: bool = False,
+             tag: str = "") -> Dict[str, Any]:
+    cell = f"{arch}__{shape_name}__{mesh_name}"
+    if attn:
+        cell += f"__{attn}{s if attn == 'mtla' else ''}"
+    if tag:
+        cell += f"__{tag}"
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, cell + ".json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+
+    rec: Dict[str, Any] = {"cell": cell, "arch": arch, "shape": shape_name,
+                           "mesh": mesh_name, "attn": attn or "default",
+                           "s": s}
+    try:
+        cfg = get_config(arch, attn=attn, s=s,
+                         mtla_train_impl=mtla_train_impl)
+        if softmax_dtype:
+            cfg = cfg.with_attn(softmax_dtype=softmax_dtype)
+        if ssd_dtype and cfg.ssm is not None:
+            import dataclasses as _dc
+            cfg = cfg.replace(ssm=_dc.replace(cfg.ssm, ssd_dtype=ssd_dtype))
+        shape = SHAPES[shape_name]
+        ok, reason = applicability(cfg, shape_name)
+        rec["applicable"] = ok
+        rec["reason"] = reason
+        if not ok:
+            rec["status"] = "skipped"
+            _write(path, rec)
+            return rec
+
+        mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
+        chips = mesh.devices.size
+        dp = dp_size(mesh)
+        shd.set_activation_mesh(mesh)
+        t0 = time.time()
+
+        state_abs = jax.eval_shape(
+            lambda k: init_train_state(k, cfg), jax.random.PRNGKey(0))
+        params_abs = state_abs["params"]
+        n_params = sum(int(a.size) for a in
+                       jax.tree_util.tree_leaves(params_abs))
+        rec["n_params"] = n_params
+        batch_abs = input_specs(cfg, shape_name)
+
+        if shape.kind == "train":
+            mb = microbatch or choose_microbatch(
+                cfg, shape.seq_len, shape.global_batch, dp)
+            rec["microbatch"] = mb
+            tcfg = TrainConfig(
+                global_batch=shape.global_batch, seq_len=shape.seq_len,
+                microbatch=0 if mb == shape.global_batch else mb,
+                remat=remat, compute_dtype="bfloat16",
+                logit_chunk=2048)
+            state_sh = shd.params_shardings(state_abs, mesh)
+            batch_sh = shd.batch_shardings(batch_abs, mesh)
+            gcon = shd.make_tree_constrainer(
+                shd.params_shardings(params_abs, mesh))
+            # microbatch slices keep the batch's DP sharding
+            mb_abs = jax.tree_util.tree_map(
+                lambda a: jax.ShapeDtypeStruct(
+                    (mb,) + a.shape[1:], a.dtype), batch_abs) \
+                if mb != shape.global_batch else batch_abs
+            bcon = shd.make_tree_constrainer(
+                shd.batch_shardings(mb_abs, mesh))
+            step = make_train_step(cfg, tcfg, grad_constrainer=gcon,
+                                   batch_constrainer=bcon)
+            metrics_abs = jax.eval_shape(step, state_abs, batch_abs)[1]
+            out_sh = (state_sh, shd.replicated(metrics_abs, mesh))
+            with mesh:
+                lowered = jax.jit(
+                    step, in_shardings=(state_sh, batch_sh),
+                    out_shardings=out_sh, donate_argnums=(0,),
+                ).lower(state_abs, batch_abs)
+                rec["lower_s"] = time.time() - t0
+                t1 = time.time()
+                compiled = lowered.compile()
+                rec["compile_s"] = time.time() - t1
+        else:
+            prefill_step, decode_step = make_serve_steps(cfg)
+            params_sh = shd.params_shardings(params_abs, mesh)
+            if shape.kind == "prefill":
+                caches_abs = jax.eval_shape(
+                    lambda: api.init_caches(
+                        cfg, shape.global_batch, shape.seq_len,
+                        dtype=jnp.bfloat16, src_len=1024))
+                caches_sh = shd.cache_shardings(
+                    caches_abs, mesh, stacked=True)
+                batch_sh = shd.batch_shardings(batch_abs, mesh)
+                fn, args = prefill_step, (params_abs, batch_abs, caches_abs)
+                in_sh = (params_sh, batch_sh, caches_sh)
+                out_abs = jax.eval_shape(fn, *args)
+                out_sh = (shd.batch_shardings(out_abs[0], mesh), caches_sh)
+                donate = (2,)
+            else:
+                caches_abs = jax.eval_shape(
+                    lambda: api.init_caches(
+                        cfg, shape.global_batch, shape.seq_len,
+                        dtype=jnp.bfloat16, src_len=1024))
+                caches_sh = shd.cache_shardings(
+                    caches_abs, mesh, stacked=True,
+                    seq_shard=seq_shard_cache)
+                token_abs = batch_abs["token"]
+                token_sh = shd.batch_shardings(token_abs, mesh)
+                fn, args = decode_step, (params_abs, token_abs, caches_abs)
+                in_sh = (params_sh, token_sh, caches_sh)
+                out_abs = jax.eval_shape(fn, *args)
+                out_sh = (shd.batch_shardings(out_abs[0], mesh), caches_sh)
+                donate = (2,)
+            with mesh:
+                lowered = jax.jit(fn, in_shardings=in_sh,
+                                  out_shardings=out_sh,
+                                  donate_argnums=donate).lower(*args)
+                rec["lower_s"] = time.time() - t0
+                t1 = time.time()
+                compiled = lowered.compile()
+                rec["compile_s"] = time.time() - t1
+
+        rec["memory_analysis"] = _mem_analysis(compiled)
+        rec["cost_analysis_raw"] = _cost_analysis(compiled)  # loop bodies x1
+        hlo = compiled.as_text()
+        cost = analyze(hlo)  # trip-count-corrected per-device program cost
+        rec["collectives"] = {k: float(v) for k, v in cost.coll.items()}
+        rec["collectives"].setdefault("total", 0.0)
+        rec["hlo_bytes"] = len(hlo)
+
+        flops = cost.flops
+        hbm = cost.bytes
+        rl = Roofline(flops, hbm, rec["collectives"]["total"])
+        rec["roofline"] = rl.to_dict()
+        rec["model_flops"] = model_flops(cfg, shape, n_params, chips)
+        mf = rec["model_flops"]["model_flops_per_device"]
+        rec["useful_flops_ratio"] = (mf / flops) if flops else None
+        rec["status"] = "ok"
+    except Exception as e:
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    finally:
+        shd.set_activation_mesh(None)
+    _write(path, rec)
+    return rec
+
+
+def _write(path, rec):
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1, default=str)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS + ["mtla_paper"])
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--mesh", choices=["single", "multi"], default="single")
+    ap.add_argument("--attn", default=None,
+                    choices=[None, "mha", "mqa", "gqa", "mla", "mtla"])
+    ap.add_argument("--s", type=int, default=2)
+    ap.add_argument("--mtla-train-impl", default=None,
+                    choices=[None, "masked", "compressed"])
+    ap.add_argument("--seq-shard-cache", action="store_true")
+    ap.add_argument("--softmax-dtype", default=None,
+                    choices=[None, "float32", "bfloat16"])
+    ap.add_argument("--ssd-dtype", default=None,
+                    choices=[None, "float32", "bfloat16"])
+    ap.add_argument("--remat", default="full",
+                    choices=["full", "dots", "none"])
+    ap.add_argument("--microbatch", type=int, default=0)
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=OUT_DIR)
+    args = ap.parse_args()
+
+    if args.all:
+        cells = [(a, sh, m) for a in ARCH_IDS for sh in SHAPES
+                 for m in ("single", "multi")]
+        for a, sh, m in cells:
+            rec = run_cell(a, sh, m, out_dir=args.out, force=args.force)
+            print(f"{rec['cell']}: {rec['status']}"
+                  + (f" ({rec.get('error', '')})"
+                     if rec["status"] == "error" else ""))
+        return
+
+    assert args.arch and args.shape
+    rec = run_cell(args.arch, args.shape, args.mesh, attn=args.attn,
+                   s=args.s, mtla_train_impl=args.mtla_train_impl,
+                   seq_shard_cache=args.seq_shard_cache,
+                   softmax_dtype=args.softmax_dtype, ssd_dtype=args.ssd_dtype,
+                   remat=args.remat,
+                   microbatch=args.microbatch,
+                   out_dir=args.out, force=args.force, tag=args.tag)
+    print(json.dumps(
+        {k: rec.get(k) for k in
+         ("cell", "status", "reason", "error", "microbatch", "lower_s",
+          "compile_s", "memory_analysis", "roofline",
+          "useful_flops_ratio")}, indent=1, default=str))
+    if rec["status"] == "error":
+        print(rec.get("traceback", ""))
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

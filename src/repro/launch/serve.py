@@ -1,0 +1,69 @@
+"""Serving driver: batched incremental decode with the continuous-batching
+engine; reports tokens/s and KV-cache bytes (the paper's efficiency axes).
+
+    PYTHONPATH=src python -m repro.launch.serve --arch mtla_paper --smoke \
+        --requests 8 --batch 4 --max-new 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import ALL_IDS, get_config, smoke_config
+from ..core.types import mla_variant, mtla_variant
+from ..models import api
+from ..serving.engine import DecodeEngine, Request, cache_bytes
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mtla_paper", choices=ALL_IDS)
+    ap.add_argument("--attn", default=None)
+    ap.add_argument("--s", type=int, default=2)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--max-new", type=int, default=32)
+    ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        cfg = smoke_config(args.arch)
+        if args.attn == "mtla":
+            cfg = mtla_variant(cfg, s=args.s)
+        elif args.attn == "mla":
+            cfg = mla_variant(cfg)
+        elif args.attn:
+            cfg = cfg.with_attn(kind=args.attn)
+    else:
+        cfg = get_config(args.arch, attn=args.attn, s=args.s)
+
+    params = api.init_model(jax.random.PRNGKey(args.seed), cfg)
+    eng = DecodeEngine(params, cfg, batch=args.batch, max_len=args.max_len,
+                       dtype=jnp.float32)
+    rng = np.random.default_rng(args.seed)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size,
+                                        size=(args.prompt_len,)),
+                    max_new=args.max_new)
+            for i in range(args.requests)]
+    t0 = time.time()
+    out = eng.run(reqs)
+    dt = time.time() - t0
+    total_toks = sum(len(v) for v in out.values())
+    print(f"arch={cfg.name} attn={cfg.attn.kind} s={cfg.attn.s}")
+    print(f"{len(out)} requests, {total_toks} tokens in {dt:.2f}s "
+          f"({total_toks / dt:.1f} tok/s incl. compile)")
+    print(f"kv-cache bytes: {cache_bytes(eng.caches):,} "
+          f"({cfg.attn.kv_cache_per_token} elems/token/layer)")
+    return out
+
+
+if __name__ == "__main__":
+    main()

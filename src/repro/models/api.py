@@ -1,0 +1,74 @@
+"""Family-dispatching model API: one interface for all 11 configs.
+
+batch dict keys by family:
+  dense/moe/ssm/hybrid : tokens [B,T], labels [B,T]
+  vlm / audio-prompted : frontend_embeds [B,Lp,Df], tokens [B,Tt], labels [B,Tt]
+  encdec               : frontend_embeds [B,Ls,Df] (source), tokens [B,Tt]
+                         (teacher-forced target), labels [B,Tt]
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..core.types import ModelConfig
+from . import encdec as encdec_mod
+from . import lm as lm_mod
+
+
+def init_model(key, cfg: ModelConfig, dtype=jnp.float32):
+    if cfg.family == "encdec":
+        return encdec_mod.init_encdec(key, cfg, dtype)
+    return lm_mod.init_lm(key, cfg, dtype)
+
+
+def model_hidden(params, cfg: ModelConfig, batch: Dict[str, Any], *,
+                 dtype=jnp.bfloat16, remat: str = "none"):
+    """Forward to final hidden states aligned with batch['labels'].
+
+    Returns (hidden [B, T_labels, d], aux)."""
+    if cfg.family == "encdec":
+        hidden, aux = encdec_mod.encdec_apply(
+            params, cfg, batch["frontend_embeds"], batch["tokens"],
+            dtype=dtype, remat=remat)
+        return hidden, aux
+    prefix = batch.get("frontend_embeds")
+    hidden, aux = lm_mod.lm_apply(params, cfg, batch["tokens"],
+                                  prefix_embeds=prefix, dtype=dtype,
+                                  remat=remat)
+    if prefix is not None:
+        hidden = hidden[:, prefix.shape[1]:]
+    return hidden, aux
+
+
+def head_weights(params, cfg: ModelConfig):
+    if cfg.family != "encdec" and cfg.tie_embeddings:
+        return jnp.swapaxes(params["embed"]["embedding"], 0, 1)
+    return params["lm_head"]["w"]
+
+
+def init_caches(cfg: ModelConfig, batch: int, max_len: int,
+                dtype=jnp.bfloat16, src_len: int = 1024):
+    if cfg.family == "encdec":
+        return encdec_mod.init_encdec_caches(cfg, batch, max_len, src_len,
+                                             dtype)
+    return lm_mod.init_lm_caches(cfg, batch, max_len, dtype)
+
+
+def prefill(params, cfg: ModelConfig, batch, caches, *, dtype=jnp.bfloat16):
+    if cfg.family == "encdec":
+        caches = encdec_mod.encdec_start(
+            params, cfg, batch["frontend_embeds"], caches, dtype)
+        return encdec_mod.encdec_decode(params, cfg, batch["tokens"][:, :1],
+                                        caches, dtype)
+    return lm_mod.lm_prefill(params, cfg, batch["tokens"], caches,
+                             prefix_embeds=batch.get("frontend_embeds"),
+                             dtype=dtype)
+
+
+def decode(params, cfg: ModelConfig, token, caches, *, dtype=jnp.bfloat16):
+    if cfg.family == "encdec":
+        return encdec_mod.encdec_decode(params, cfg, token, caches, dtype)
+    return lm_mod.lm_decode(params, cfg, token, caches, dtype=dtype)

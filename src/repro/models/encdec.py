@@ -1,0 +1,221 @@
+"""Encoder-decoder model (seamless-m4t family): audio-frame frontend stub →
+bidirectional Transformer encoder → autoregressive decoder with selectable
+self-attention kind (MTLA applies to decoder self-attention; DESIGN.md
+§Arch-applicability) + cross-attention over encoder states.
+
+The paper's own experimental architecture (encoder output prepended to the
+decoder input as a prompt, no cross-attention) is available as
+``configs/mtla_paper.py`` via the plain LM with a frontend.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..core.attention import (attn_decode, attn_prefill, attn_train,
+                              init_attention, init_attn_cache)
+from ..core.nn import (dense, dense_init, embed, embed_init, mlp_apply,
+                       mlp_init, norm_apply, norm_init)
+from ..core.types import ModelConfig
+from ..core import mtla as mtla_mod
+
+NEG_INF = -1e30
+
+
+# --- cross-attention (plain MHA over encoder states, no RoPE) --------------
+
+def init_cross_attn(key, cfg: ModelConfig, dtype):
+    H, dh = cfg.attn.num_heads, cfg.attn.head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], cfg.d_model, (H, dh), dtype=dtype),
+        "wk": dense_init(ks[1], cfg.d_model, (H, dh), dtype=dtype),
+        "wv": dense_init(ks[2], cfg.d_model, (H, dh), dtype=dtype),
+        "wo": dense_init(ks[3], H * dh, cfg.d_model,
+                         scale=1.0 / math.sqrt(H * dh), dtype=dtype),
+    }
+
+
+def cross_attn_apply(p, cfg: ModelConfig, x, enc_kv):
+    """x [B,Tq,d]; enc_kv = (k,v) [B,Ts,H,dh] precomputed from encoder."""
+    k, v = enc_kv
+    q = dense(p["wq"], x)
+    scale = 1.0 / math.sqrt(cfg.attn.head_dim)
+    logits = jnp.einsum("bthd,bshd->bhts", q, k) * scale
+    pr = jax.nn.softmax(logits.astype(jnp.float32), -1).astype(v.dtype)
+    ctx = jnp.einsum("bhts,bshd->bthd", pr, v)
+    return dense(p["wo"], ctx.reshape(x.shape[0], x.shape[1], -1))
+
+
+def cross_kv(p, enc_out):
+    return dense(p["wk"], enc_out), dense(p["wv"], enc_out)
+
+
+# --- init -------------------------------------------------------------------
+
+def _init_enc_layer(key, cfg: ModelConfig, dtype):
+    ks = jax.random.split(key, 2)
+    enc_attn = cfg.attn.__class__(
+        kind="mha", num_heads=cfg.attn.num_heads,
+        num_kv_heads=cfg.attn.num_heads, head_dim=cfg.attn.head_dim,
+        use_rope=True, q_chunk=cfg.attn.q_chunk)
+    return {
+        "ln1": norm_init(cfg.d_model, cfg.norm, dtype),
+        "attn": init_attention(ks[0], enc_attn, cfg.d_model, dtype),
+        "ln2": norm_init(cfg.d_model, cfg.norm, dtype),
+        "mlp": mlp_init(ks[1], cfg.d_model, cfg.d_ff, gated=cfg.gated_mlp,
+                        dtype=dtype),
+    }
+
+
+def _init_dec_layer(key, cfg: ModelConfig, dtype):
+    ks = jax.random.split(key, 3)
+    return {
+        "ln1": norm_init(cfg.d_model, cfg.norm, dtype),
+        "attn": init_attention(ks[0], cfg.attn, cfg.d_model, dtype),
+        "ln_x": norm_init(cfg.d_model, cfg.norm, dtype),
+        "xattn": init_cross_attn(ks[1], cfg, dtype),
+        "ln2": norm_init(cfg.d_model, cfg.norm, dtype),
+        "mlp": mlp_init(ks[2], cfg.d_model, cfg.d_ff, gated=cfg.gated_mlp,
+                        dtype=dtype),
+    }
+
+
+def init_encdec(key, cfg: ModelConfig, dtype=jnp.float32):
+    ks = jax.random.split(key, 6)
+    ekeys = jax.random.split(ks[0], cfg.encoder_layers)
+    dkeys = jax.random.split(ks[1], cfg.num_layers)
+    return {
+        "projector": dense_init(ks[2], cfg.frontend_dim, cfg.d_model,
+                                dtype=dtype),
+        "enc_layers": jax.vmap(
+            lambda k: _init_enc_layer(k, cfg, dtype))(ekeys),
+        "enc_norm": norm_init(cfg.d_model, cfg.norm, dtype),
+        "embed": embed_init(ks[3], cfg.vocab_size, cfg.d_model, dtype),
+        "dec_layers": jax.vmap(
+            lambda k: _init_dec_layer(k, cfg, dtype))(dkeys),
+        "final_norm": norm_init(cfg.d_model, cfg.norm, dtype),
+        "lm_head": dense_init(ks[4], cfg.d_model, cfg.vocab_size,
+                              dtype=dtype),
+    }
+
+
+# --- forward ----------------------------------------------------------------
+
+def encode(params, cfg: ModelConfig, src_embeds, dtype=jnp.bfloat16):
+    """src_embeds [B,Ts,frontend_dim] (precomputed frames, stub frontend)."""
+    x = dense(params["projector"], src_embeds.astype(dtype))
+    enc_attn_cfg = cfg.attn.__class__(
+        kind="mha", num_heads=cfg.attn.num_heads,
+        num_kv_heads=cfg.attn.num_heads, head_dim=cfg.attn.head_dim,
+        use_rope=True, q_chunk=cfg.attn.q_chunk)
+
+    def body(h, lp):
+        a = attn_train(lp["attn"], enc_attn_cfg,
+                       norm_apply(lp["ln1"], h, eps=cfg.norm_eps,
+                                  kind=cfg.norm), causal=False)
+        h = h + a
+        m = mlp_apply(lp["mlp"],
+                      norm_apply(lp["ln2"], h, eps=cfg.norm_eps,
+                                 kind=cfg.norm),
+                      act=cfg.act, gated=cfg.gated_mlp)
+        return h + m, None
+
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return norm_apply(params["enc_norm"], x, eps=cfg.norm_eps, kind=cfg.norm)
+
+
+def decode_train(params, cfg: ModelConfig, tgt_tokens, enc_out,
+                 dtype=jnp.bfloat16):
+    """Teacher-forced decoder forward -> hidden [B,Tt,d]."""
+    x = embed(params["embed"], tgt_tokens, dtype)
+
+    def body(h, lp):
+        a = attn_train(lp["attn"], cfg.attn,
+                       norm_apply(lp["ln1"], h, eps=cfg.norm_eps,
+                                  kind=cfg.norm))
+        h = h + a
+        kv = cross_kv(lp["xattn"], enc_out)
+        c = cross_attn_apply(lp["xattn"], cfg,
+                             norm_apply(lp["ln_x"], h, eps=cfg.norm_eps,
+                                        kind=cfg.norm), kv)
+        h = h + c
+        m = mlp_apply(lp["mlp"],
+                      norm_apply(lp["ln2"], h, eps=cfg.norm_eps,
+                                 kind=cfg.norm),
+                      act=cfg.act, gated=cfg.gated_mlp)
+        return h + m, None
+
+    x, _ = jax.lax.scan(body, x, params["dec_layers"])
+    return norm_apply(params["final_norm"], x, eps=cfg.norm_eps,
+                      kind=cfg.norm)
+
+
+def encdec_apply(params, cfg: ModelConfig, src_embeds, tgt_tokens,
+                 dtype=jnp.bfloat16, remat: str = "none"):
+    enc_out = encode(params, cfg, src_embeds, dtype)
+    hidden = decode_train(params, cfg, tgt_tokens, enc_out, dtype)
+    aux = {"lb_loss": jnp.zeros((), jnp.float32),
+           "z_loss": jnp.zeros((), jnp.float32)}
+    return hidden, aux
+
+
+# --- serving ----------------------------------------------------------------
+
+def init_encdec_caches(cfg: ModelConfig, batch: int, max_len: int,
+                       src_len: int, dtype=jnp.bfloat16):
+    one = lambda: {
+        "attn": init_attn_cache(cfg.attn, batch, max_len, dtype),
+        "xk": jnp.zeros((batch, src_len, cfg.attn.num_heads,
+                         cfg.attn.head_dim), dtype),
+        "xv": jnp.zeros((batch, src_len, cfg.attn.num_heads,
+                         cfg.attn.head_dim), dtype),
+    }
+    caches = [one() for _ in range(cfg.num_layers)]
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *caches)
+
+
+def encdec_start(params, cfg: ModelConfig, src_embeds, caches,
+                 dtype=jnp.bfloat16):
+    """Encode source and populate per-layer cross-attention KV caches."""
+    enc_out = encode(params, cfg, src_embeds, dtype)
+
+    def body(_, scanned):
+        lp, c = scanned
+        k, v = cross_kv(lp["xattn"], enc_out)
+        c = dict(c, xk=k.astype(c["xk"].dtype), xv=v.astype(c["xv"].dtype))
+        return 0, c
+
+    _, caches = jax.lax.scan(body, 0, (params["dec_layers"], caches))
+    return caches
+
+
+def encdec_decode(params, cfg: ModelConfig, token, caches,
+                  dtype=jnp.bfloat16):
+    """One decoder step. token [B,1] -> (logits [B,vocab], caches)."""
+    x = embed(params["embed"], token, dtype)
+
+    def body(h, scanned):
+        lp, c = scanned
+        a, ac = attn_decode(lp["attn"], cfg.attn,
+                            norm_apply(lp["ln1"], h, eps=cfg.norm_eps,
+                                       kind=cfg.norm), c["attn"])
+        h = h + a
+        xc = cross_attn_apply(
+            lp["xattn"], cfg,
+            norm_apply(lp["ln_x"], h, eps=cfg.norm_eps, kind=cfg.norm),
+            (c["xk"].astype(h.dtype), c["xv"].astype(h.dtype)))
+        h = h + xc
+        m = mlp_apply(lp["mlp"],
+                      norm_apply(lp["ln2"], h, eps=cfg.norm_eps,
+                                 kind=cfg.norm),
+                      act=cfg.act, gated=cfg.gated_mlp)
+        return h + m, dict(c, attn=ac)
+
+    x, caches = jax.lax.scan(body, x, (params["dec_layers"], caches))
+    x = norm_apply(params["final_norm"], x, eps=cfg.norm_eps, kind=cfg.norm)
+    logits = dense(params["lm_head"], x)
+    return logits[:, 0], caches

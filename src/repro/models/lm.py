@@ -1,0 +1,320 @@
+"""Decoder-only LM covering the dense / moe / ssm / hybrid families.
+
+Homogeneous stacks (dense, moe, ssm, vlm backbones) are `lax.scan`ned over
+stacked layer params — essential to keep HLO size and compile time bounded at
+88 layers. The hybrid family (hymba: per-layer global-vs-SWA attention and
+different cache shapes) uses a python loop with static per-layer windows.
+
+``lm_apply`` returns final hidden states; the vocab projection lives in
+``train/losses.py`` (chunked CE never materializes [tokens, vocab] logits)
+and in the serve heads below.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.attention import (attn_decode, attn_prefill, attn_train,
+                              init_attention, init_attn_cache)
+from ..core.nn import (dense, dense_init, embed, embed_init, mlp_apply,
+                       mlp_init, norm_apply, norm_init)
+from ..core.types import ModelConfig
+from ..runtime.sharding import constrain_batch_dim, dp_total
+from . import moe as moe_mod
+from . import ssm as ssm_mod
+
+
+# ---------------------------------------------------------------------------
+# per-layer init
+# ---------------------------------------------------------------------------
+
+def _init_layer(key, cfg: ModelConfig, dtype):
+    ks = jax.random.split(key, 4)
+    fam = cfg.family
+    p: Dict[str, Any] = {}
+    if fam in ("dense", "moe", "vlm"):
+        p["ln1"] = norm_init(cfg.d_model, cfg.norm, dtype)
+        p["attn"] = init_attention(ks[0], cfg.attn, cfg.d_model, dtype)
+        p["ln2"] = norm_init(cfg.d_model, cfg.norm, dtype)
+        if fam == "moe":
+            p["moe"] = moe_mod.init_moe(ks[1], cfg.moe, cfg.d_model, dtype)
+        else:
+            p["mlp"] = mlp_init(ks[1], cfg.d_model, cfg.d_ff,
+                                gated=cfg.gated_mlp, dtype=dtype)
+    elif fam == "ssm":
+        p["ln1"] = norm_init(cfg.d_model, cfg.norm, dtype)
+        p["ssm"] = ssm_mod.init_ssm(ks[0], cfg.ssm, cfg.d_model, dtype)
+    elif fam == "hybrid":
+        p["ln1"] = norm_init(cfg.d_model, cfg.norm, dtype)
+        p["attn"] = init_attention(ks[0], cfg.attn, cfg.d_model, dtype)
+        p["ssm"] = ssm_mod.init_ssm(ks[1], cfg.ssm, cfg.d_model, dtype)
+        p["attn_out_norm"] = norm_init(cfg.d_model, "rmsnorm", dtype)
+        p["ssm_out_norm"] = norm_init(cfg.d_model, "rmsnorm", dtype)
+        p["beta"] = jnp.ones((2,), dtype)
+        p["ln2"] = norm_init(cfg.d_model, cfg.norm, dtype)
+        p["mlp"] = mlp_init(ks[2], cfg.d_model, cfg.d_ff,
+                            gated=cfg.gated_mlp, dtype=dtype)
+    else:
+        raise ValueError(fam)
+    return p
+
+
+def init_lm(key, cfg: ModelConfig, dtype=jnp.float32):
+    ks = jax.random.split(key, 5)
+    p: Dict[str, Any] = {
+        "embed": embed_init(ks[0], cfg.vocab_size, cfg.d_model, dtype),
+        "final_norm": norm_init(cfg.d_model, cfg.norm, dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(ks[1], cfg.d_model, cfg.vocab_size,
+                                  dtype=dtype)
+    if cfg.frontend != "none":
+        p["projector"] = dense_init(ks[2], cfg.frontend_dim, cfg.d_model,
+                                    dtype=dtype)
+    lkeys = jax.random.split(ks[3], cfg.num_layers)
+    if cfg.family == "hybrid":
+        # homogeneous layer GROUPS (global-attn vs SWA) so each group scans:
+        # an unrolled 32-layer hybrid stack compiles ~30x slower
+        p["groups"] = [
+            jax.vmap(lambda k: _init_layer(k, cfg, dtype))(
+                jnp.stack([lkeys[i] for i in idxs]))
+            for _, idxs in hybrid_groups(cfg)]
+    else:
+        p["layers"] = jax.vmap(
+            lambda k: _init_layer(k, cfg, dtype))(lkeys)
+    return p
+
+
+def hybrid_groups(cfg: ModelConfig):
+    """Consecutive same-window layer groups: [(window, [layer idxs]), ...]."""
+    groups = []
+    for i in range(cfg.num_layers):
+        w = 0 if i in cfg.global_attn_layers else cfg.sliding_window
+        if groups and groups[-1][0] == w:
+            groups[-1][1].append(i)
+        else:
+            groups.append((w, [i]))
+    return groups
+
+
+# ---------------------------------------------------------------------------
+# blocks (train path)
+# ---------------------------------------------------------------------------
+
+def _block_train(lp, cfg: ModelConfig, x, window: int):
+    fam = cfg.family
+    eps = cfg.norm_eps
+    aux = {"lb_loss": jnp.zeros((), jnp.float32),
+           "z_loss": jnp.zeros((), jnp.float32)}
+    if fam == "ssm":
+        h = ssm_mod.ssm_train(lp["ssm"], cfg.ssm,
+                              norm_apply(lp["ln1"], x, eps=eps, kind=cfg.norm),
+                              cfg.d_model)
+        return x + h, aux
+    if fam == "hybrid":
+        xin = norm_apply(lp["ln1"], x, eps=eps, kind=cfg.norm)
+        a = attn_train(lp["attn"], cfg.attn, xin, window=window)
+        s = ssm_mod.ssm_train(lp["ssm"], cfg.ssm, xin, cfg.d_model)
+        a = norm_apply(lp["attn_out_norm"], a, eps=eps)
+        s = norm_apply(lp["ssm_out_norm"], s, eps=eps)
+        beta = lp["beta"].astype(x.dtype)
+        h = x + 0.5 * (beta[0] * a + beta[1] * s)
+        m = mlp_apply(lp["mlp"], norm_apply(lp["ln2"], h, eps=eps,
+                                            kind=cfg.norm),
+                      act=cfg.act, gated=cfg.gated_mlp)
+        return h + m, aux
+    # dense / moe / vlm
+    a = attn_train(lp["attn"], cfg.attn,
+                   norm_apply(lp["ln1"], x, eps=eps, kind=cfg.norm),
+                   window=window)
+    h = x + a
+    hin = norm_apply(lp["ln2"], h, eps=eps, kind=cfg.norm)
+    if fam == "moe":
+        m, moe_aux = moe_mod.moe_apply(lp["moe"], cfg.moe, hin, act=cfg.act,
+                                       dp_shards=dp_total())
+        aux = {"lb_loss": moe_aux["lb_loss"], "z_loss": moe_aux["z_loss"]}
+    else:
+        m = mlp_apply(lp["mlp"], hin, act=cfg.act, gated=cfg.gated_mlp)
+    return h + m, aux
+
+
+def _remat_wrap(fn, remat: str):
+    if remat == "none":
+        return fn
+    if remat == "dots":
+        pol = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        return jax.checkpoint(fn, policy=pol)
+    return jax.checkpoint(fn)  # "full"
+
+
+def lm_apply(params, cfg: ModelConfig, tokens, *,
+             prefix_embeds: Optional[jnp.ndarray] = None,
+             dtype=jnp.bfloat16, remat: str = "none"):
+    """tokens [B,T] -> (hidden [B,T',d], aux). With a frontend, projected
+    prefix embeddings are prepended (T' = T + prefix len)."""
+    x = embed(params["embed"], tokens, dtype)
+    if prefix_embeds is not None:
+        pe = dense(params["projector"], prefix_embeds.astype(dtype))
+        x = jnp.concatenate([pe, x], axis=1)
+    x = constrain_batch_dim(x.astype(dtype))
+
+    if cfg.family == "hybrid":
+        aux_tot = {"lb_loss": jnp.zeros((), jnp.float32),
+                   "z_loss": jnp.zeros((), jnp.float32)}
+        for (window, _), gp in zip(hybrid_groups(cfg), params["groups"]):
+            blk = _remat_wrap(
+                lambda lp_, h_, w=window: _block_train(lp_, cfg, h_, w),
+                remat)
+
+            def gbody(h, lp):
+                h2, _ = blk(lp, h)
+                return constrain_batch_dim(h2), None
+
+            x, _ = jax.lax.scan(gbody, x, gp)
+        x = norm_apply(params["final_norm"], x, eps=cfg.norm_eps,
+                       kind=cfg.norm)
+        return x, aux_tot
+
+    blk = _remat_wrap(lambda lp_, h_: _block_train(lp_, cfg, h_, 0), remat)
+
+    def body(carry, lp):
+        h, lb, zl = carry
+        h, aux = blk(lp, h)
+        h = constrain_batch_dim(h)
+        return (h, lb + aux["lb_loss"], zl + aux["z_loss"]), None
+
+    (x, lb, zl), _ = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        params["layers"])
+    x = norm_apply(params["final_norm"], x, eps=cfg.norm_eps, kind=cfg.norm)
+    return x, {"lb_loss": lb, "z_loss": zl}
+
+
+def lm_head(params, cfg: ModelConfig, hidden):
+    if cfg.tie_embeddings:
+        return hidden @ params["embed"]["embedding"].astype(hidden.dtype).T
+    return dense(params["lm_head"], hidden)
+
+
+# ---------------------------------------------------------------------------
+# serving paths
+# ---------------------------------------------------------------------------
+
+
+
+def init_lm_caches(cfg: ModelConfig, batch: int, max_len: int,
+                   dtype=jnp.bfloat16):
+    def one(window: int):
+        c: Dict[str, Any] = {}
+        if cfg.family != "ssm":
+            c["attn"] = init_attn_cache(cfg.attn, batch, max_len, dtype,
+                                        window=window)
+        if cfg.family in ("ssm", "hybrid"):
+            c["ssm"] = ssm_mod.init_ssm_cache(cfg.ssm, cfg.d_model, batch,
+                                              jnp.float32)
+        return c
+
+    def stack(n, window):
+        caches = [one(window) for _ in range(n)]
+        return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *caches)
+
+    if cfg.family == "hybrid":
+        return [stack(len(idxs), w) for w, idxs in hybrid_groups(cfg)]
+    return stack(cfg.num_layers, cfg.attn.sliding_window)
+
+
+def _block_serve(lp, cfg: ModelConfig, x, cache, window: int, phase: str):
+    """phase: 'prefill' or 'decode'. Returns (y, cache)."""
+    eps = cfg.norm_eps
+    fam = cfg.family
+    attn_fn = attn_prefill if phase == "prefill" else attn_decode
+    if fam == "ssm":
+        xin = norm_apply(lp["ln1"], x, eps=eps, kind=cfg.norm)
+        if phase == "prefill":
+            h, c2 = ssm_mod.ssm_prefill(lp["ssm"], cfg.ssm, xin,
+                                        cache["ssm"], cfg.d_model)
+        else:
+            h, c2 = ssm_mod.ssm_decode(lp["ssm"], cfg.ssm, xin,
+                                       cache["ssm"], cfg.d_model)
+        cache = dict(cache, ssm=c2)
+        return x + h, cache
+    if fam == "hybrid":
+        xin = norm_apply(lp["ln1"], x, eps=eps, kind=cfg.norm)
+        a, ac = attn_fn(lp["attn"], cfg.attn, xin, cache["attn"],
+                        window=window)
+        if phase == "prefill":
+            s, sc = ssm_mod.ssm_prefill(lp["ssm"], cfg.ssm, xin,
+                                        cache["ssm"], cfg.d_model)
+        else:
+            s, sc = ssm_mod.ssm_decode(lp["ssm"], cfg.ssm, xin,
+                                       cache["ssm"], cfg.d_model)
+        cache = dict(cache, attn=ac, ssm=sc)
+        a = norm_apply(lp["attn_out_norm"], a, eps=eps)
+        s = norm_apply(lp["ssm_out_norm"], s, eps=eps)
+        beta = lp["beta"].astype(x.dtype)
+        h = x + 0.5 * (beta[0] * a + beta[1] * s)
+        m = mlp_apply(lp["mlp"],
+                      norm_apply(lp["ln2"], h, eps=eps, kind=cfg.norm),
+                      act=cfg.act, gated=cfg.gated_mlp)
+        return h + m, cache
+    a, ac = attn_fn(lp["attn"], cfg.attn,
+                    norm_apply(lp["ln1"], x, eps=eps, kind=cfg.norm),
+                    cache["attn"], window=window)
+    cache = dict(cache, attn=ac)
+    h = x + a
+    hin = norm_apply(lp["ln2"], h, eps=eps, kind=cfg.norm)
+    if fam == "moe":
+        m, _ = moe_mod.moe_apply(lp["moe"], cfg.moe, hin, act=cfg.act,
+                                 dp_shards=dp_total())
+    else:
+        m = mlp_apply(lp["mlp"], hin, act=cfg.act, gated=cfg.gated_mlp)
+    return h + m, cache
+
+
+def _serve_stack(params, cfg: ModelConfig, x, caches, phase: str):
+    if cfg.family == "hybrid":
+        new_caches = []
+        for (window, _), gp, gc in zip(hybrid_groups(cfg),
+                                       params["groups"], caches):
+            def gbody(h, scanned, w=window):
+                lp, c = scanned
+                h, c2 = _block_serve(lp, cfg, h, c, w, phase)
+                return h, c2
+
+            x, gc2 = jax.lax.scan(gbody, x, (gp, gc))
+            new_caches.append(gc2)
+        return x, new_caches
+
+    def body(h, scanned):
+        lp, c = scanned
+        h, c2 = _block_serve(lp, cfg, h, c, cfg.attn.sliding_window, phase)
+        return h, c2
+
+    x, caches = jax.lax.scan(body, x, (params["layers"], caches))
+    return x, caches
+
+
+def lm_prefill(params, cfg: ModelConfig, tokens, caches, *,
+               prefix_embeds=None, dtype=jnp.bfloat16):
+    """Returns (last-position logits [B,vocab], caches)."""
+    x = embed(params["embed"], tokens, dtype)
+    if prefix_embeds is not None:
+        pe = dense(params["projector"], prefix_embeds.astype(dtype))
+        x = jnp.concatenate([pe, x], axis=1)
+    x, caches = _serve_stack(params, cfg, x.astype(dtype), caches, "prefill")
+    x = norm_apply(params["final_norm"], x, eps=cfg.norm_eps, kind=cfg.norm)
+    logits = lm_head(params, cfg, x[:, -1:])
+    return logits[:, 0], caches
+
+
+def lm_decode(params, cfg: ModelConfig, token, caches, *,
+              dtype=jnp.bfloat16):
+    """token [B,1] int32 -> (logits [B,vocab], caches)."""
+    x = embed(params["embed"], token, dtype)
+    x, caches = _serve_stack(params, cfg, x, caches, "decode")
+    x = norm_apply(params["final_norm"], x, eps=cfg.norm_eps, kind=cfg.norm)
+    logits = lm_head(params, cfg, x)
+    return logits[:, 0], caches

@@ -1,0 +1,157 @@
+"""Mixture-of-Experts FFN with top-k routing (qwen2-moe / dbrx families).
+
+Capacity-based scatter/gather dispatch (differentiable, GSPMD-shardable):
+experts are padded to a multiple of the model-axis size and sharded across
+it (EP); dispatch runs per DP shard; outputs combine with the same collective
+shape as a TP FFN. Aux losses: switch-style load balancing + router z-loss.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.nn import act_fn, dense, dense_init
+from ..core.types import MoEConfig
+from ..runtime.sharding import constrain_ep
+
+
+def padded_experts(cfg: MoEConfig, model_axis: int = 16) -> int:
+    E = cfg.num_experts
+    return -(-E // model_axis) * model_axis
+
+
+def init_moe(key, cfg: MoEConfig, d_model: int, dtype=jnp.float32,
+             model_axis: int = 16):
+    Ep = padded_experts(cfg, model_axis)
+    ks = jax.random.split(key, 6)
+    f = cfg.d_expert
+    sc_in = 1.0 / math.sqrt(d_model)
+    sc_out = 1.0 / math.sqrt(f)
+    p = {
+        "router": dense_init(ks[0], d_model, cfg.num_experts, dtype=dtype),
+        "w_gate": jax.random.truncated_normal(
+            ks[1], -2, 2, (Ep, d_model, f), dtype) * sc_in,
+        "w_up": jax.random.truncated_normal(
+            ks[2], -2, 2, (Ep, d_model, f), dtype) * sc_in,
+        "w_down": jax.random.truncated_normal(
+            ks[3], -2, 2, (Ep, f, d_model), dtype) * sc_out,
+    }
+    if cfg.num_shared_experts:
+        fs = cfg.d_shared_expert * cfg.num_shared_experts
+        p["shared_gate"] = dense_init(ks[4], d_model, fs, dtype=dtype)
+        p["shared_up"] = dense_init(ks[5], d_model, fs, dtype=dtype)
+        p["shared_down"] = dense_init(
+            jax.random.fold_in(ks[5], 1), fs, d_model, dtype=dtype)
+    return p
+
+
+def moe_apply(p, cfg: MoEConfig, x, *, act: str = "silu",
+              capacity_factor: float = 1.25, dp_shards: int = 1
+              ) -> Tuple[jnp.ndarray, dict]:
+    # under a multi-device mesh route through the explicit shard_map EP
+    # (one psum over 'model'; see moe_sharded.py + EXPERIMENTS.md §Perf B)
+    from ..runtime.sharding import _ACT_MESH
+    mesh = _ACT_MESH[0]
+    if mesh is not None and "model" in mesh.axis_names \
+            and mesh.shape["model"] > 1 \
+            and p["w_gate"].shape[0] % mesh.shape["model"] == 0:
+        from .moe_sharded import moe_apply_shardmap
+        return moe_apply_shardmap(p, cfg, x, act=act, mesh=mesh,
+                                  capacity_factor=capacity_factor)
+    return _moe_apply_pjit(p, cfg, x, act=act,
+                           capacity_factor=capacity_factor,
+                           dp_shards=dp_shards)
+
+
+def _moe_apply_pjit(p, cfg: MoEConfig, x, *, act: str = "silu",
+                    capacity_factor: float = 1.25, dp_shards: int = 1
+                    ) -> Tuple[jnp.ndarray, dict]:
+    """x [B,T,d] -> (y [B,T,d], aux {lb_loss, z_loss, fraction_dropped}).
+
+    Shard-local dispatch: tokens are viewed as [S, N/S] where S maps onto
+    the DP axes, and every cumsum/scatter happens *within* a shard row, so
+    under pjit the dispatch buffers are [S(dp), E(model), C_local, d] with
+    no cross-shard data motion. The original global-capacity formulation
+    made GSPMD materialize [E, C_global, d] per device and all-gather f32
+    expert activations (measured: collective-bound at 83s/step on
+    dbrx-132b x train_4k — see EXPERIMENTS.md §Perf cell B).
+    """
+    B, T, d = x.shape
+    N = B * T
+    E, K = cfg.num_experts, cfg.num_experts_per_tok
+    Ep = p["w_gate"].shape[0]
+    S = dp_shards if N % dp_shards == 0 else 1
+    NL = N // S                                              # tokens/shard
+    xs = x.reshape(S, NL, d)
+
+    logits = dense(p["router"], xs).astype(jnp.float32)      # [S,NL,E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, eids = jax.lax.top_k(probs, K)                # [S,NL,K]
+    gate_vals = gate_vals / jnp.sum(gate_vals, -1, keepdims=True)
+
+    # aux losses
+    me = jnp.mean(probs, axis=(0, 1))                        # [E]
+    ce = jnp.mean(jnp.sum(
+        jax.nn.one_hot(eids, E, dtype=jnp.float32), axis=2), axis=(0, 1))
+    lb_loss = E * jnp.sum(me * ce) / K
+    z_loss = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+
+    # shard-local capacity dispatch
+    C = int(capacity_factor * K * NL / E) + 1
+    onehot = jax.nn.one_hot(
+        eids.reshape(S, NL * K), E, dtype=jnp.int32)         # [S,NL*K,E]
+    pos = jnp.cumsum(onehot, axis=1) - onehot                # exclusive
+    pie = jnp.sum(pos * onehot, axis=-1)                     # [S,NL*K]
+    keep = pie < C
+    flat_eid = eids.reshape(S, NL * K)
+    slot = jnp.where(keep, flat_eid * C + pie, Ep * C)       # trash row
+    buf = jnp.zeros((S, Ep * C + 1, d), x.dtype)
+    sidx = jnp.arange(S)[:, None]
+    buf = buf.at[sidx, slot].add(jnp.repeat(xs, K, axis=1))
+    ein = constrain_ep(buf[:, :Ep * C].reshape(S, Ep, C, d))
+
+    f = act_fn(act)
+    h = f(jnp.einsum("secd,edf->secf", ein, p["w_gate"].astype(x.dtype)))
+    h = h * jnp.einsum("secd,edf->secf", ein, p["w_up"].astype(x.dtype))
+    eout = constrain_ep(
+        jnp.einsum("secf,efd->secd", h, p["w_down"].astype(x.dtype)))
+    eout = jnp.concatenate(
+        [eout.reshape(S, Ep * C, d), jnp.zeros((S, 1, d), x.dtype)], axis=1)
+
+    gathered = eout[sidx, slot].reshape(S, NL, K, d)
+    w = (gate_vals * keep.reshape(S, NL, K)).astype(x.dtype)
+    y = jnp.einsum("snkd,snk->snd", gathered, w)
+
+    if "shared_gate" in p:
+        hs = f(dense(p["shared_gate"], xs)) * dense(p["shared_up"], xs)
+        y = y + dense(p["shared_down"], hs)
+
+    aux = {"lb_loss": lb_loss, "z_loss": z_loss,
+           "fraction_dropped": 1.0 - jnp.mean(keep.astype(jnp.float32))}
+    return y.reshape(B, T, d), aux
+
+
+def moe_ref_dense(p, cfg: MoEConfig, x, *, act: str = "silu"):
+    """O(N·E) dense oracle (every expert computes every token) for tests."""
+    B, T, d = x.shape
+    N = B * T
+    E, K = cfg.num_experts, cfg.num_experts_per_tok
+    xf = x.reshape(N, d)
+    logits = dense(p["router"], xf).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, -1)
+    gate_vals, eids = jax.lax.top_k(probs, K)
+    gate_vals = gate_vals / jnp.sum(gate_vals, -1, keepdims=True)
+    f = act_fn(act)
+    h = f(jnp.einsum("nd,edf->enf", xf, p["w_gate"][:E].astype(x.dtype)))
+    h = h * jnp.einsum("nd,edf->enf", xf, p["w_up"][:E].astype(x.dtype))
+    allout = jnp.einsum("enf,efd->end", h, p["w_down"][:E].astype(x.dtype))
+    sel = jnp.take_along_axis(
+        jnp.swapaxes(allout, 0, 1), eids[..., None], axis=1)  # [N,K,d]
+    y = jnp.einsum("nkd,nk->nd", sel, gate_vals.astype(x.dtype))
+    if "shared_gate" in p:
+        hs = f(dense(p["shared_gate"], xf)) * dense(p["shared_up"], xf)
+        y = y + dense(p["shared_down"], hs)
+    return y.reshape(B, T, d)

@@ -1,0 +1,116 @@
+"""Explicit shard_map expert parallelism (hillclimb B, EXPERIMENTS.md §Perf).
+
+GSPMD cannot partition the capacity-dispatch scatter (batched scatter over
+a DP-sharded token axis into a model-sharded expert axis): both the global-
+capacity and shard-local pjit formulations end up replicating f32 expert
+buffers (measured 83s -> 530s collective terms on dbrx x train_4k).
+
+Here the collective schedule is explicit: every (data, model) device routes
+its LOCAL tokens to its LOCAL experts (router weights replicated); the only
+communication is ONE psum of the combined output over 'model' — identical
+shape to a TP MLP reduction. Differentiable (shard_map + psum transpose).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+from ..core.nn import act_fn
+from ..core.types import MoEConfig
+
+
+def moe_apply_shardmap(p, cfg: MoEConfig, x, *, act: str = "silu",
+                       mesh=None, capacity_factor: float = 1.25
+                       ) -> Tuple[jnp.ndarray, dict]:
+    """x [B,T,d] (batch sharded over DP, replicated over 'model').
+    Expert stacks [Ep, ...] sharded over 'model'. Returns (y, aux)."""
+    B, T, d = x.shape
+    E, K = cfg.num_experts, cfg.num_experts_per_tok
+    Ep = p["w_gate"].shape[0]
+    model = mesh.shape["model"]
+    E_loc = Ep // model
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    f = act_fn(act)
+
+    has_shared = "shared_gate" in p
+    shared_in = (p["shared_gate"]["w"], p["shared_up"]["w"],
+                 p["shared_down"]["w"]) if has_shared else ()
+
+    in_specs = [P(dp, None, None),            # x
+                P(),                          # router w
+                P("model", None, None),       # w_gate
+                P("model", None, None),       # w_up
+                P("model", None, None)]       # w_down
+    if has_shared:
+        in_specs += [P(None, "model"), P(None, "model"), P("model", None)]
+
+    @functools.partial(
+        shard_map, mesh=mesh, in_specs=tuple(in_specs),
+        out_specs=(P(dp, None, None), P(), P(), P()), check_rep=False)
+    def run(xl, router_w, wg, wu, wd, *shared):
+        Bl, Tl, _ = xl.shape
+        N = Bl * Tl
+        xf = xl.reshape(N, d)
+        logits = (xf @ router_w.astype(xl.dtype)).astype(jnp.float32)
+        probs = jax.nn.softmax(logits, axis=-1)                 # [N,E]
+        gate_vals, eids = jax.lax.top_k(probs, K)
+        gate_vals = gate_vals / jnp.sum(gate_vals, -1, keepdims=True)
+
+        me = jnp.mean(probs, axis=0)
+        ce = jnp.mean(jnp.sum(
+            jax.nn.one_hot(eids, E, dtype=jnp.float32), axis=1), axis=0)
+        lb = E * jnp.sum(me * ce) / K
+        zl = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+
+        # local expert range on this model rank
+        rank = jax.lax.axis_index("model")
+        offset = rank * E_loc
+        rel = eids.reshape(-1) - offset                         # [N*K]
+        local = (rel >= 0) & (rel < E_loc)
+
+        C = int(capacity_factor * K * N / E) + 1
+        onehot = jnp.where(local[:, None],
+                           jax.nn.one_hot(jnp.where(local, rel, 0), E_loc,
+                                          dtype=jnp.int32), 0)
+        pos = jnp.cumsum(onehot, axis=0) - onehot
+        pie = jnp.sum(pos * onehot, axis=-1)
+        keep = local & (pie < C)
+        slot = jnp.where(keep, rel * C + pie, E_loc * C)
+        buf = jnp.zeros((E_loc * C + 1, d), xl.dtype)
+        buf = buf.at[slot].add(jnp.repeat(xf, K, axis=0))
+        ein = buf[:E_loc * C].reshape(E_loc, C, d)
+
+        h = f(jnp.einsum("ecd,edf->ecf", ein, wg.astype(xl.dtype)))
+        h = h * jnp.einsum("ecd,edf->ecf", ein, wu.astype(xl.dtype))
+        eout = jnp.einsum("ecf,efd->ecd", h, wd.astype(xl.dtype))
+        eout = jnp.concatenate(
+            [eout.reshape(E_loc * C, d), jnp.zeros((1, d), xl.dtype)], 0)
+        gathered = eout[slot].reshape(N, K, d)
+        w = (gate_vals * keep.reshape(N, K)).astype(xl.dtype)
+        y = jnp.einsum("nkd,nk->nd", gathered, w)               # partial
+
+        if shared:
+            sg, su, sd = shared   # f-dim sharded over model: partial too
+            hs = f(xf @ sg.astype(xl.dtype)) * (xf @ su.astype(xl.dtype))
+            y = y + hs @ sd.astype(xl.dtype)
+
+        y = jax.lax.psum(y, "model")
+        dropped = 1.0 - jax.lax.psum(
+            jnp.sum(keep.astype(jnp.float32)), "model") / (N * K)
+        # aux stats are identical across model ranks (router replicated)
+        # but differ across DP shards -> mean them so out_spec P() holds
+        if dp:
+            lb = jax.lax.pmean(lb, dp)
+            zl = jax.lax.pmean(zl, dp)
+            dropped = jax.lax.pmean(dropped, dp)
+        return (y.reshape(Bl, Tl, d), lb, zl, dropped)
+
+    args = [x, p["router"]["w"], p["w_gate"], p["w_up"], p["w_down"]]
+    args += list(shared_in)
+    y, lb, zl, dropped = run(*args)
+    return y, {"lb_loss": lb, "z_loss": zl, "fraction_dropped": dropped}

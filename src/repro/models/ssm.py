@@ -1,0 +1,230 @@
+"""Mamba2 SSD (state-space duality) mixer — pure JAX chunked implementation.
+
+Train path uses the SSD chunked algorithm (intra-chunk quadratic term +
+inter-chunk state passing via an associative scan); decode is the O(1)
+recurrence  h' = exp(dt a) h + dt B ⊗ x,  y = C h + D x.
+
+MTLA note (DESIGN.md §Arch-applicability): attention-free — there is no KV
+cache to compress, so the paper's technique is inapplicable here by design.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.nn import dense, dense_init, norm_apply, norm_init
+from ..core.types import SSMConfig
+
+
+def init_ssm(key, cfg: SSMConfig, d_model: int, dtype=jnp.float32):
+    d_in = cfg.expand * d_model
+    H = d_in // cfg.head_dim
+    G, N = cfg.n_groups, cfg.d_state
+    conv_dim = d_in + 2 * G * N
+    ks = jax.random.split(key, 5)
+    p = {
+        # fused input projection: [z | x | B | C | dt]
+        "w_in": dense_init(ks[0], d_model,
+                           2 * d_in + 2 * G * N + H, dtype=dtype),
+        "conv_w": jax.random.normal(ks[1], (cfg.d_conv, conv_dim), dtype)
+        * (1.0 / math.sqrt(cfg.d_conv)),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H).astype(dtype)),
+        "D": jnp.ones((H,), dtype),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(
+                ks[2], (H,), minval=math.log(cfg.dt_min),
+                maxval=math.log(cfg.dt_max))))).astype(dtype),
+        "out_norm": norm_init(d_in, "rmsnorm", dtype),
+        "w_out": dense_init(ks[3], d_in, d_model,
+                            scale=1.0 / math.sqrt(d_in), dtype=dtype),
+    }
+    return p
+
+
+def _split_in(p, cfg: SSMConfig, d_model: int, xz):
+    d_in = cfg.expand * d_model
+    H = d_in // cfg.head_dim
+    G, N = cfg.n_groups, cfg.d_state
+    z, xBC, dt = jnp.split(xz, [d_in, 2 * d_in + 2 * G * N], axis=-1)
+    return z, xBC, dt, d_in, H, G, N
+
+
+def _conv1d(xBC, conv_w, conv_b):
+    """Causal depthwise conv along time. xBC [B,T,Cd], conv_w [K,Cd]."""
+    K = conv_w.shape[0]
+    pad = jnp.pad(xBC, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xBC)
+    for i in range(K):  # K=4: tiny unroll, fuses into one kernel
+        out = out + pad[:, i:i + xBC.shape[1]] * conv_w[i]
+    return out + conv_b
+
+
+def ssd_chunked(x, dt, A, B, C, D, chunk: int, intra_dtype=jnp.float32):
+    """SSD forward. x [b,T,H,P], dt [b,T,H] (post-softplus), A [H] (<0),
+    B,C [b,T,G,N]. Returns y [b,T,H,P] and final state [b,H,P,N].
+
+    intra_dtype controls the quadratic intra-chunk term (the [b,nc,Q,Q,H]
+    L/score tensors — the dominant HBM traffic); inter-chunk decay/state
+    accumulation stays fp32."""
+    b, T, H, P = x.shape
+    G, N = B.shape[2], B.shape[3]
+    Q = min(chunk, T)
+    pad = (-T) % Q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Tp = T + pad
+    nc = Tp // Q
+    rs = lambda a: a.reshape((b, nc, Q) + a.shape[2:])
+    xc, dtc, Bc, Cc = rs(x), rs(dt), rs(B), rs(C)
+    # heads per group
+    hg = H // G
+    Bh = jnp.repeat(Bc, hg, axis=3)          # [b,nc,Q,H,N]
+    Ch = jnp.repeat(Cc, hg, axis=3)
+    da = dtc * A[None, None, None, :]        # [b,nc,Q,H] (negative)
+    cum = jnp.cumsum(da, axis=2)             # within-chunk cumulative
+    # intra-chunk (quadratic in Q): L[i,j] = exp(cum_i - cum_j) for i >= j
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # [b,nc,Qi,Qj,H]
+    mask = (jnp.arange(Q)[:, None] >= jnp.arange(Q)[None, :])
+    Lmat = jnp.where(mask[None, None, :, :, None],
+                     jnp.exp(diff), 0.0).astype(intra_dtype)
+    xdt = xc * dtc[..., None]                # [b,nc,Q,H,P]
+    scores = jnp.einsum("bcihn,bcjhn->bcijh", Ch.astype(intra_dtype),
+                        Bh.astype(intra_dtype))            # [b,nc,Qi,Qj,H]
+    y_intra = jnp.einsum("bcijh,bcijh,bcjhp->bcihp", scores, Lmat,
+                         xdt.astype(intra_dtype)).astype(jnp.float32)
+    # chunk states: S_c = sum_j exp(cum_last - cum_j) B_j (x_j dt_j)^T
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)        # [b,nc,Q,H]
+    S = jnp.einsum("bcjhn,bcjh,bcjhp->bchnp", Bh, decay_to_end, xdt)
+    # inter-chunk: associative scan over chunks
+    chunk_decay = jnp.exp(jnp.sum(da, axis=2))             # [b,nc,H]
+
+    def combine(a, b_):
+        d1, s1 = a
+        d2, s2 = b_
+        return d1 * d2, s2 + s1 * d2[..., None, None]
+
+    dec_sc, S_sc = jax.lax.associative_scan(
+        combine, (chunk_decay, S), axis=1)
+    # state entering chunk c = S_sc[c-1]
+    S_prev = jnp.concatenate(
+        [jnp.zeros_like(S_sc[:, :1]), S_sc[:, :-1]], axis=1)
+    y_inter = jnp.einsum("bcihn,bcih,bchnp->bcihp",
+                         Ch, jnp.exp(cum), S_prev)
+    y = (y_intra + y_inter).reshape(b, Tp, H, P)[:, :T]
+    y = y + x.reshape(b, Tp, H, P)[:, :T] * D[None, None, :, None]
+    final_state = S_sc[:, -1]                              # [b,H,N,P]
+    return y, jnp.swapaxes(final_state, -1, -2)            # [b,H,P,N]
+
+
+def ssm_train(p, cfg: SSMConfig, x, d_model: int):
+    y, _ = _ssm_forward(p, cfg, x, d_model)
+    return y
+
+
+def _ssm_forward(p, cfg: SSMConfig, x, d_model: int):
+    b, T, _ = x.shape
+    xz = dense(p["w_in"], x)
+    z, xBC, dt, d_in, H, G, N = _split_in(p, cfg, d_model, xz)
+    xBC = jax.nn.silu(_conv1d(xBC, p["conv_w"].astype(x.dtype),
+                              p["conv_b"].astype(x.dtype)))
+    xs, B, C = jnp.split(xBC, [d_in, d_in + G * N], axis=-1)
+    xs = xs.reshape(b, T, H, cfg.head_dim)
+    B = B.reshape(b, T, G, N)
+    C = C.reshape(b, T, G, N)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    idt = jnp.bfloat16 if cfg.ssd_dtype == "bfloat16" else jnp.float32
+    y, state = ssd_chunked(xs.astype(jnp.float32), dt, A,
+                           B.astype(jnp.float32), C.astype(jnp.float32),
+                           p["D"].astype(jnp.float32), cfg.chunk,
+                           intra_dtype=idt)
+    y = y.astype(x.dtype).reshape(b, T, d_in)
+    y = y * jax.nn.silu(z)
+    y = norm_apply(p["out_norm"], y)
+    return dense(p["w_out"], y), state
+
+
+def init_ssm_cache(cfg: SSMConfig, d_model: int, batch: int,
+                   dtype=jnp.float32):
+    d_in = cfg.expand * d_model
+    H = d_in // cfg.head_dim
+    G, N = cfg.n_groups, cfg.d_state
+    conv_dim = d_in + 2 * G * N
+    return {
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, conv_dim), dtype),
+        "state": jnp.zeros((batch, H, cfg.head_dim, N), jnp.float32),
+    }
+
+
+def ssm_prefill(p, cfg: SSMConfig, x, cache, d_model: int):
+    """Run the train path and leave decode-ready state in the cache."""
+    b, T, _ = x.shape
+    xz = dense(p["w_in"], x)
+    z, xBC_raw, dt, d_in, H, G, N = _split_in(p, cfg, d_model, xz)
+    xBC = jax.nn.silu(_conv1d(xBC_raw, p["conv_w"].astype(x.dtype),
+                              p["conv_b"].astype(x.dtype)))
+    xs, B, C = jnp.split(xBC, [d_in, d_in + G * N], axis=-1)
+    xs = xs.reshape(b, T, H, cfg.head_dim)
+    B = B.reshape(b, T, G, N)
+    C = C.reshape(b, T, G, N)
+    dt_sp = jax.nn.softplus(dt.astype(jnp.float32)
+                            + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    idt = jnp.bfloat16 if cfg.ssd_dtype == "bfloat16" else jnp.float32
+    y, state = ssd_chunked(xs.astype(jnp.float32), dt_sp, A,
+                           B.astype(jnp.float32), C.astype(jnp.float32),
+                           p["D"].astype(jnp.float32), cfg.chunk,
+                           intra_dtype=idt)
+    y = y.astype(x.dtype).reshape(b, T, d_in)
+    y = y * jax.nn.silu(z)
+    y = norm_apply(p["out_norm"], y)
+    K = cfg.d_conv
+    tail = xBC_raw[:, -(K - 1):] if T >= K - 1 else jnp.pad(
+        xBC_raw, ((0, 0), (K - 1 - T, 0), (0, 0)))
+    cache["conv"] = tail.astype(cache["conv"].dtype)
+    cache["state"] = state
+    return dense(p["w_out"], y), cache
+
+
+def ssm_decode(p, cfg: SSMConfig, x_t, cache, d_model: int):
+    """x_t [B,1,d] -> (y [B,1,d], cache). O(1) per step."""
+    b = x_t.shape[0]
+    xz = dense(p["w_in"], x_t)
+    z, xBC_raw, dt, d_in, H, G, N = _split_in(p, cfg, d_model, xz)
+    # conv over [cache | new]
+    K = cfg.d_conv
+    window = jnp.concatenate(
+        [cache["conv"].astype(x_t.dtype), xBC_raw], axis=1)  # [B,K,Cd]
+    conv_w = p["conv_w"].astype(x_t.dtype)
+    xBC = jnp.einsum("bkc,kc->bc", window, conv_w) + p["conv_b"].astype(x_t.dtype)
+    xBC = jax.nn.silu(xBC)[:, None, :]
+    cache["conv"] = window[:, 1:].astype(cache["conv"].dtype)
+    xs, B, C = jnp.split(xBC[:, 0], [d_in, d_in + G * N], axis=-1)
+    xs = xs.reshape(b, H, cfg.head_dim).astype(jnp.float32)
+    B = B.reshape(b, G, N).astype(jnp.float32)
+    C = C.reshape(b, G, N).astype(jnp.float32)
+    hg = H // G
+    Bh = jnp.repeat(B, hg, axis=1)           # [b,H,N]
+    Ch = jnp.repeat(C, hg, axis=1)
+    dt_sp = jax.nn.softplus(dt[:, 0].astype(jnp.float32)
+                            + p["dt_bias"].astype(jnp.float32))  # [b,H]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    decay = jnp.exp(dt_sp * A)               # [b,H]
+    h = cache["state"]                       # [b,H,P,N]
+    h = h * decay[..., None, None] + jnp.einsum(
+        "bhp,bhn->bhpn", xs * dt_sp[..., None], Bh)
+    cache["state"] = h
+    y = jnp.einsum("bhpn,bhn->bhp", h, Ch)
+    y = y + xs * p["D"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(b, 1, d_in).astype(x_t.dtype)
+    y = y * jax.nn.silu(z)
+    y = norm_apply(p["out_norm"], y)
+    return dense(p["w_out"], y), cache

@@ -1,0 +1,124 @@
+"""Roofline terms from compiled dry-run artifacts.
+
+  compute    = HLO_FLOPs(per device) / PEAK_FLOPS
+  memory     = HLO_bytes(per device) / HBM_BW
+  collective = collective_bytes(per device) / ICI_BW
+
+``cost_analysis`` of a GSPMD-partitioned executable reports the PER-DEVICE
+program (verified in tests/test_distributed.py::test_cost_analysis_is_per_
+device), so no chip division is applied to its numbers. Collective bytes are
+NOT in cost_analysis: we parse the compiled HLO text and, per the assignment
+spec, sum operand sizes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute (async *-start forms counted once).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+from ..launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# one HLO instruction: "%name = TYPE[dims]{layout} opcode(OPERANDS...)"
+_INSTR_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|[a-z0-9]+\[[^\]]*\][^ ]*)\s+"
+    r"(all-gather-start|all-reduce-start|reduce-scatter-start|"
+    r"all-to-all-start|collective-permute-start|"
+    r"all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"\(([^)]*)\)")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum operand sizes per collective kind from compiled HLO text."""
+    out: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    out["total"] = 0
+    for m in _INSTR_RE.finditer(hlo_text):
+        op = m.group(1).replace("-start", "")
+        operands = m.group(2)
+        b = sum(_shape_bytes(dt, dims)
+                for dt, dims in _SHAPE_RE.findall(operands))
+        out[op] += b
+        out["total"] += b
+    return out
+
+
+@dataclass
+class Roofline:
+    flops: float                 # per-device HLO flops
+    hbm_bytes: float             # per-device HLO bytes accessed
+    coll_bytes: float            # per-device collective operand bytes
+    compute_s: float = field(init=False)
+    memory_s: float = field(init=False)
+    collective_s: float = field(init=False)
+    bound: str = field(init=False)
+
+    def __post_init__(self):
+        self.compute_s = self.flops / PEAK_FLOPS_BF16
+        self.memory_s = self.hbm_bytes / HBM_BW
+        self.collective_s = self.coll_bytes / ICI_BW
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        self.bound = max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Roofline lower bound assuming perfect overlap of the three
+        engines: the max term."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def to_dict(self):
+        return {
+            "flops_per_device": self.flops,
+            "hbm_bytes_per_device": self.hbm_bytes,
+            "collective_bytes_per_device": self.coll_bytes,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "bound": self.bound,
+            "step_time_lower_bound_s": self.step_time_s,
+        }
+
+
+def model_flops(cfg, shape, n_params: int, chips: int) -> Dict[str, float]:
+    """MODEL_FLOPS = 6·N·D (train) or 2·N·D (inference fwd), with N =
+    active params for MoE. Per-device value for comparison with
+    cost_analysis. The classic estimate excludes the quadratic attention
+    term — the ratio column in EXPERIMENTS.md is read with that in mind."""
+    n_active = n_params
+    if cfg.moe is not None:
+        E = cfg.moe.num_experts
+        k = cfg.moe.num_experts_per_tok
+        expert_params = 3 * cfg.d_model * cfg.moe.d_expert * E * cfg.num_layers
+        # padding experts never receive tokens; subtract inactive routed
+        n_active = n_params - expert_params * (1 - k / E)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        total = 6.0 * n_active * tokens
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        total = 2.0 * n_active * tokens
+    else:  # decode: one token per sequence
+        total = 2.0 * n_active * shape.global_batch
+    return {"model_flops_total": total,
+            "model_flops_per_device": total / chips,
+            "n_params": n_params, "n_active_params": n_active}

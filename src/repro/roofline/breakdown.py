@@ -1,0 +1,94 @@
+"""Debug tool: top-K flop-dominating dots and collective ops from compiled
+HLO, with while-trip multipliers — the 'profile' used by §Perf iterations
+(we reason from lowered IR, not wall-clock; see assignment brief)."""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Tuple
+
+from .hlo_analyzer import (_SHAPE_RE, _TRIP, _shape_dims, _type_bytes,
+                           COLLECTIVES, parse_computations)
+
+
+def _call_multipliers(comps) -> Dict[str, float]:
+    """computation name -> total invocation multiplier from ENTRY."""
+    mult: Dict[str, float] = {}
+    edges: Dict[str, List[Tuple[str, float]]] = {c: [] for c in comps}
+    for cname, instrs in comps.items():
+        for ins in instrs:
+            ms = re.findall(r"(?:calls|body|condition|to_apply)=%?"
+                            r"([\w\.\-]+)", ins.rest)
+            trip = 1
+            if ins.opcode == "while":
+                mt = _TRIP.search(ins.rest)
+                trip = int(mt.group(1)) if mt else 1
+            for m in ms:
+                if m in comps:
+                    edges[cname].append((m, trip))
+    # find entry = computation never called
+    called = {m for es in edges.values() for m, _ in es}
+    roots = [c for c in comps if c not in called]
+
+    def visit(c, k):
+        mult[c] = mult.get(c, 0.0) + k
+        for m, t in edges.get(c, []):
+            visit(m, k * t)
+
+    for r in roots:
+        visit(r, 1.0)
+    return mult
+
+
+def top_dots(hlo: str, k: int = 25):
+    comps = parse_computations(hlo)
+    mult = _call_multipliers(comps)
+    rows = []
+    for cname, instrs in comps.items():
+        sym = {i.name: i.type_str for i in instrs}
+        for ins in instrs:
+            if ins.opcode != "dot":
+                continue
+            dims = _shape_dims(ins.type_str)
+            out = 1
+            for d in dims:
+                out *= d
+            lhs = _shape_dims(sym.get(ins.operands[0], "")) \
+                if ins.operands else []
+            m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.rest)
+            contracted = 1
+            if m and lhs:
+                for idx in m.group(1).split(","):
+                    if idx:
+                        contracted *= lhs[int(idx)]
+            fl = 2.0 * out * contracted * mult.get(cname, 1.0)
+            meta = re.search(r'op_name="([^"]+)"', ins.rest)
+            rows.append((fl, ins.type_str[:40], mult.get(cname, 1.0),
+                         (meta.group(1) if meta else ins.name)[-80:]))
+    rows.sort(reverse=True)
+    return rows[:k]
+
+
+def top_collectives(hlo: str, k: int = 25):
+    comps = parse_computations(hlo)
+    mult = _call_multipliers(comps)
+    rows = []
+    for cname, instrs in comps.items():
+        for ins in instrs:
+            base = ins.opcode.replace("-start", "")
+            if base not in COLLECTIVES or ins.opcode.endswith("-done"):
+                continue
+            b = _type_bytes(ins.type_str) * mult.get(cname, 1.0)
+            meta = re.search(r'op_name="([^"]+)"', ins.rest)
+            rows.append((b, base, ins.type_str[:60], mult.get(cname, 1.0),
+                         (meta.group(1) if meta else ins.name)[-90:]))
+    rows.sort(reverse=True)
+    return rows[:k]
+
+
+def print_breakdown(hlo: str, k: int = 20):
+    print("=== top dots (flops x calls) ===")
+    for fl, tstr, m, name in top_dots(hlo, k):
+        print(f"{fl:12.3e} x{m:6.0f} {tstr:42s} {name}")
+    print("=== top collectives (result bytes x calls) ===")
+    for b, kind, tstr, m, name in top_collectives(hlo, k):
+        print(f"{b:12.3e} x{m:6.0f} {kind:18s} {tstr:60s} {name}")

@@ -1,0 +1,274 @@
+"""Trip-count-aware HLO cost analyzer.
+
+XLA's ``compiled.cost_analysis()`` counts while-loop bodies ONCE — useless
+for scan-over-layers programs (an 88-layer model reports 1/88th of its
+FLOPs). This analyzer parses ``compiled.as_text()`` into a computation call
+graph and accumulates, with ``known_trip_count`` multipliers:
+
+  * flops        — from dot ops: 2 * prod(result_dims) * prod(contracted)
+  * hbm bytes    — per instruction: operand + result bytes, with fusion
+                   internals elided (fusion counts only its boundary I/O,
+                   matching HLO fusion semantics)
+  * collective operand bytes by kind (assignment spec: all-gather operand =
+    result/group, reduce-scatter operand = result*group, others = result)
+
+Used by launch/dryrun.py for the §Roofline terms; validated against known
+matmul programs in tests/test_roofline.py.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->")
+_INSTR = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.*?)\s+([\w\-]+)\((.*)$")
+_TRIP = re.compile(r'known_trip_count[":{]+n[":]+(\d+)')
+_GROUPS_NEW = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_OLD = re.compile(r"replica_groups=\{\{([0-9, ]*)\}")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SKIP_BYTES_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota",
+    # control flow: data is not moved by the op itself; bodies are billed
+    # via the call graph
+    "while", "call", "conditional",
+}
+
+_SLICE_LIKE = {"dynamic-slice", "slice", "gather"}
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str) -> List[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclass
+class Instr:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str
+    operands: List[str] = field(default_factory=list)
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: Dict[str, float] = field(default_factory=dict)
+
+    def add(self, other: "Cost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        for k, v in other.coll.items():
+            self.coll[k] = self.coll.get(k, 0.0) + v * mult
+
+
+def parse_computations(hlo: str) -> Dict[str, List[Instr]]:
+    comps: Dict[str, List[Instr]] = {}
+    cur: Optional[str] = None
+    for line in hlo.splitlines():
+        if cur is None:
+            m = _COMP_HDR.match(line.strip())
+            if m and line.rstrip().endswith("{"):
+                cur = m.group(1)
+                comps[cur] = []
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _INSTR.match(line)
+        if m:
+            name, tstr, opcode, rest = m.groups()
+            # operand names = %refs inside the first balanced paren group
+            depth, end = 0, len(rest)
+            for i, ch in enumerate(rest):
+                if ch == "(":
+                    depth += 1
+                elif ch == ")":
+                    if depth == 0:
+                        end = i
+                        break
+                    depth -= 1
+            ops = re.findall(r"%([\w\.\-]+)", rest[:end])
+            comps[cur].append(Instr(name, tstr, opcode, rest, ops))
+    return comps
+
+
+def _group_size(rest: str, default: int = 1) -> int:
+    m = _GROUPS_NEW.search(rest)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_OLD.search(rest)
+    if m:
+        ids = [x for x in m.group(1).split(",") if x.strip()]
+        return max(len(ids), 1)
+    return default
+
+
+def _calls_target(ins: Instr) -> str:
+    m = re.search(r"calls=%?([\w\.\-]+)", ins.rest)
+    return m.group(1) if m else ""
+
+
+def _dus_fusion_update_bytes(body: List[Instr], fallback: float) -> float:
+    """For a fusion rooted in dynamic-update-slice, bill the update size."""
+    sym = {i.name: i.type_str for i in body}
+    for ins in body:
+        if ins.opcode == "dynamic-update-slice" and len(ins.operands) > 1:
+            return _type_bytes(sym.get(ins.operands[1], "")) or fallback
+    return fallback
+
+
+def analyze(hlo: str) -> Cost:
+    comps = parse_computations(hlo)
+    # computations called as fusion bodies: bytes elided
+    fused: set = set()
+    called_by: Dict[str, List[Tuple[str, float]]] = {}
+    for cname, instrs in comps.items():
+        for ins in instrs:
+            if ins.opcode == "fusion":
+                m = re.search(r"calls=%?([\w\.\-]+)", ins.rest)
+                if m:
+                    fused.add(m.group(1))
+
+    symtabs = {c: {i.name: i.type_str for i in instrs}
+               for c, instrs in comps.items()}
+    # parameters also define names (appear as instructions w/ opcode
+    # 'parameter'), already covered by _INSTR.
+
+    memo: Dict[Tuple[str, bool], Cost] = {}
+
+    def comp_cost(cname: str, in_fusion: bool) -> Cost:
+        key = (cname, in_fusion)
+        if key in memo:
+            return memo[key]
+        memo[key] = Cost()          # break cycles defensively
+        total = Cost()
+        sym = symtabs.get(cname, {})
+        for ins in comps.get(cname, []):
+            op = ins.opcode
+            rbytes = _type_bytes(ins.type_str)
+            # --- flops ---
+            if op == "dot":
+                dims = _shape_dims(ins.type_str)
+                out = 1
+                for d in dims:
+                    out *= d
+                lhs_t = sym.get(ins.operands[0], "") if ins.operands else ""
+                lhs_dims = _shape_dims(lhs_t)
+                m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.rest)
+                contracted = 1
+                if m and lhs_dims:
+                    for idx in m.group(1).split(","):
+                        if idx:
+                            contracted *= lhs_dims[int(idx)]
+                total.flops += 2.0 * out * contracted
+            # --- collectives ---
+            base = op.replace("-start", "")
+            if base in COLLECTIVES and not op.endswith("-done"):
+                if op.endswith("-start"):
+                    # result is a tuple (in, out[, ...]): take the LAST
+                    # array as the logical result
+                    shapes = _SHAPE_RE.findall(ins.type_str)
+                    if base == "all-gather" and len(shapes) >= 2:
+                        res_b = _type_bytes(
+                            f"{shapes[-1][0]}[{shapes[-1][1]}]")
+                    else:
+                        res_b = _type_bytes(ins.type_str) // max(
+                            1, len(shapes)) if shapes else 0
+                else:
+                    res_b = rbytes
+                g = _group_size(ins.rest)
+                if base == "all-gather":
+                    operand_b = res_b / max(g, 1)
+                elif base == "reduce-scatter":
+                    operand_b = res_b * g
+                else:
+                    operand_b = res_b
+                total.coll[base] = total.coll.get(base, 0.0) + operand_b
+            # --- bytes ---
+            # Traffic model: every materialized result is written once and
+            # read once downstream (x2 applied in analyze()); fusion
+            # internals are elided; control flow moves nothing; update
+            # slices bill the update, not the aliased buffer. Operand-based
+            # billing double-counts scan-carried/stacked buffers by 10-30x.
+            if not in_fusion and op not in _SKIP_BYTES_OPS:
+                if op in ("dynamic-update-slice", "scatter"):
+                    total.bytes += (_type_bytes(sym.get(ins.operands[1], ""))
+                                    if len(ins.operands) > 1 else rbytes)
+                elif op == "fusion" and "dynamic-update-slice" in ins.rest \
+                        and "dynamic-update-slice_" in ins.name:
+                    # DUS-rooted fusion: result aliases the buffer
+                    root_upd = _dus_fusion_update_bytes(
+                        comps.get(_calls_target(ins), []), rbytes)
+                    total.bytes += root_upd
+                else:
+                    total.bytes += rbytes
+            # --- called computations ---
+            if op == "fusion":
+                m = re.search(r"calls=%?([\w\.\-]+)", ins.rest)
+                if m:
+                    total.add(comp_cost(m.group(1), True))
+            elif op == "while":
+                mb = re.search(r"body=%?([\w\.\-]+)", ins.rest)
+                mc = re.search(r"condition=%?([\w\.\-]+)", ins.rest)
+                mt = _TRIP.search(ins.rest)
+                trip = int(mt.group(1)) if mt else 1
+                if mb:
+                    total.add(comp_cost(mb.group(1), in_fusion), trip)
+                if mc:
+                    total.add(comp_cost(mc.group(1), in_fusion), trip)
+            elif op in ("call", "conditional", "async-start"):
+                for m in re.finditer(
+                        r"(?:to_apply|called_computations?|branch_computations)"
+                        r"=\{?%?([\w\.\-, %]+)\}?", ins.rest):
+                    for nm in re.findall(r"[\w\.\-]+", m.group(1)):
+                        if nm in comps:
+                            total.add(comp_cost(nm, in_fusion))
+        memo[key] = total
+        return total
+
+    entry = None
+    for line in hlo.splitlines():
+        if line.startswith("ENTRY"):
+            m = re.search(r"ENTRY\s+%?([\w\.\-]+)", line)
+            if m:
+                entry = m.group(1)
+            break
+    if entry is None or entry not in comps:
+        # fall back: the computation with the most instructions
+        entry = max(comps, key=lambda c: len(comps[c])) if comps else None
+    if entry is None:
+        return Cost()
+    c = comp_cost(entry, False)
+    c.bytes *= 2.0  # written once + read once downstream
+    c.coll["total"] = sum(v for k, v in c.coll.items())
+    return c

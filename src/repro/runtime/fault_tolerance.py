@@ -1,0 +1,106 @@
+"""Fault tolerance & elasticity primitives.
+
+* StepWatchdog — EWMA step-time tracker with k-sigma straggler flagging and
+  pluggable callbacks (log / preempt / re-mesh). Host-side logic, unit-tested
+  with simulated slow steps; on a real cluster each host runs one and the
+  coordinator aggregates flags.
+* ElasticRunner — device-loss recovery: rebuild a mesh from surviving
+  devices (any factorization), re-shard the last checkpoint onto it, resume.
+  Checkpoints are mesh-agnostic (logical arrays), so this is a pure restore.
+* retry_step — transient-failure wrapper around a compiled step.
+"""
+from __future__ import annotations
+
+import logging
+import math
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+log = logging.getLogger("repro.ft")
+
+
+@dataclass
+class StepWatchdog:
+    alpha: float = 0.1           # EWMA smoothing
+    k_sigma: float = 4.0         # outlier threshold
+    warmup_steps: int = 5        # ignore compile-dominated first steps
+    on_straggler: Optional[Callable[[int, float, float], None]] = None
+    _mean: float = 0.0
+    _var: float = 0.0
+    _n: int = 0
+    events: List[Tuple[int, float]] = field(default_factory=list)
+
+    def observe(self, step: int, dt: float) -> bool:
+        """Returns True if the step is flagged as a straggler."""
+        self._n += 1
+        if self._n <= self.warmup_steps:
+            self._mean = dt
+            return False
+        flagged = False
+        std = math.sqrt(self._var) if self._var > 0 else self._mean * 0.5
+        if self._n > self.warmup_steps + 3 and dt > self._mean + \
+                self.k_sigma * max(std, 1e-9):
+            flagged = True
+            self.events.append((step, dt))
+            log.warning("straggler: step %d took %.3fs (mean %.3fs)",
+                        step, dt, self._mean)
+            if self.on_straggler:
+                self.on_straggler(step, dt, self._mean)
+        # update stats with clipped dt so one outlier does not poison them
+        d = min(dt, self._mean * 3 if self._mean else dt) - self._mean
+        self._mean += self.alpha * d
+        self._var = (1 - self.alpha) * (self._var + self.alpha * d * d)
+        return flagged
+
+
+def usable_mesh_shape(n_devices: int, model_parallel: int
+                      ) -> Tuple[int, int]:
+    """Largest (data, model) grid from surviving devices; shrinks TP if the
+    preferred model size no longer divides."""
+    model = model_parallel
+    while model > 1 and n_devices % model:
+        model //= 2
+    return max(n_devices // model, 1), model
+
+
+class ElasticRunner:
+    """Coordinates lose-devices -> re-mesh -> restore -> resume."""
+
+    def __init__(self, *, make_step, make_state_like, ckpt_dir: str,
+                 model_parallel: int = 1):
+        self.make_step = make_step              # (mesh) -> compiled step fn
+        self.make_state_like = make_state_like  # () -> abstract state pytree
+        self.ckpt_dir = ckpt_dir
+        self.model_parallel = model_parallel
+
+    def build(self, devices=None):
+        from ..checkpoint.checkpoint import latest_step, restore_checkpoint
+        devices = devices if devices is not None else jax.devices()
+        dshape = usable_mesh_shape(len(devices), self.model_parallel)
+        mesh = jax.sharding.Mesh(
+            np.asarray(devices[:dshape[0] * dshape[1]]).reshape(dshape),
+            ("data", "model"))
+        step_fn = self.make_step(mesh)
+        step = latest_step(self.ckpt_dir)
+        state = None
+        extra = {}
+        if step is not None:
+            like = self.make_state_like()
+            state, extra = restore_checkpoint(self.ckpt_dir, step, like)
+        return mesh, step_fn, state, extra, step
+
+
+def retry_step(fn, *args, retries: int = 2, backoff: float = 0.1):
+    last = None
+    for i in range(retries + 1):
+        try:
+            return fn(*args)
+        except jax.errors.JaxRuntimeError as e:  # transient device errors
+            last = e
+            log.warning("step failed (%s); retry %d/%d", e, i + 1, retries)
+            time.sleep(backoff * (2 ** i))
+    raise last

@@ -1,0 +1,243 @@
+"""GSPMD sharding rules: key-path pattern matching -> PartitionSpec.
+
+Layout (MaxText-like 2D sharding):
+  * TP  ('model')        : attention heads, FFN hidden, vocab, experts (EP)
+  * FSDP ('data')        : the non-TP dim of every large matrix — makes
+                           AdamW state ZeRO-sharded for free (granite-34b
+                           fp32 m+v 272 GB -> ~1.06 GB/chip on 16x16)
+  * DP  ('pod','data')   : batch dim of activations; gradients all-reduce
+                           across pod+data
+Dims are only sharded when divisible by the axis size — rules degrade
+gracefully for small models and odd head counts (granite kv=1 stays
+replicated on TP, etc.).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.axis_names else 1
+
+
+def _fits(dim: int, size: int) -> bool:
+    return size > 1 and dim % size == 0
+
+
+def param_pspec(path: str, leaf, mesh: Mesh, *, fsdp: bool = True) -> P:
+    """path: '/'-joined key path; leaf: array or ShapeDtypeStruct."""
+    shape = leaf.shape
+    model = _axis_size(mesh, "model")
+    data = _axis_size(mesh, "data")
+    # layer-stacked params carry a leading L axis: dense families use
+    # params['layers'], hybrid uses params['groups'][i], encdec uses
+    # enc_layers/dec_layers
+    scanned = bool(re.search(
+        r"(^|/)(layers|enc_layers|dec_layers|groups/\d+)/", path))
+    lead: Tuple[Optional[str], ...] = (None,) if scanned else ()
+    body = shape[1:] if scanned else shape
+
+    def fs(dim: int) -> Optional[str]:
+        return "data" if (fsdp and _fits(dim, data)) else None
+
+    def tp(dim: int) -> Optional[str]:
+        return "model" if _fits(dim, model) else None
+
+    name = path.split("/")
+    leafname = name[-1]
+    parent = name[-2] if len(name) >= 2 else ""
+
+    if leafname in ("scale", "bias", "A_log", "D", "dt_bias", "beta"):
+        return P(*lead, *([None] * len(body)))
+
+    if parent == "embed" or leafname == "embedding":
+        # [V, d]: vocab over TP only. 2D-sharding the table makes the
+        # token gather unpartitionable (GSPMD "involuntary full remat"
+        # replicates every activation downstream — measured 6x flops).
+        return P(*lead, tp(body[0]), None)
+    if parent == "lm_head":
+        return P(*lead, None, tp(body[1]))
+    if parent == "router" or parent in ("w_hc", "w_hp"):
+        return P(*lead, *([None] * len(body)))
+    if parent == "projector":
+        return P(*lead, None, fs(body[-1]))
+
+    if "moe" in name and leafname in ("w_gate", "w_up", "w_down"):
+        # stacked experts [E, d_in, d_out]: EP over model + FSDP inner dim
+        return P(*lead, tp(body[0]), fs(body[1]), None)
+
+    if parent in ("wq", "wk", "wv") and len(body) == 3:
+        # [d, H, dh]: heads over model (if divisible), d over data
+        return P(*lead, fs(body[0]), tp(body[1]), None)
+    if parent in ("wq", "wk", "wv") and len(body) == 2:  # bias [H, dh]
+        return P(*lead, tp(body[0]), None)
+    if parent == "wo":
+        # [H*dh, d]: head dim over model, d over data
+        return P(*lead, tp(body[0]), fs(body[1]))
+    if parent in ("w_uk", "w_uv"):
+        # [r, H, dh]: heads over model
+        return P(*lead, None, tp(body[1]), None)
+    if parent in ("w_dkv", "w_kr"):
+        return P(*lead, fs(body[0]), None)
+
+    if parent in ("w_gate", "w_up", "shared_gate", "shared_up"):
+        return P(*lead, fs(body[0]), tp(body[1]))
+    if parent in ("w_out", "w_down", "shared_down"):
+        return P(*lead, tp(body[0]), fs(body[1]))
+
+    if parent == "w_in":       # ssm fused in-proj [d, big]
+        return P(*lead, fs(body[0]), tp(body[1]))
+    if leafname == "conv_w":   # [K, conv_dim]
+        return P(*lead, None, tp(body[-1]))
+
+    if len(body) == 2:
+        return P(*lead, fs(body[0]), tp(body[1]))
+    return P(*lead, *([None] * len(body)))
+
+
+def params_shardings(params, mesh: Mesh, *, fsdp: bool = True):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+
+    def mk(path, leaf):
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                       for k in path)
+        return NamedSharding(mesh, param_pspec(key, leaf, mesh, fsdp=fsdp))
+
+    return jax.tree_util.tree_unflatten(
+        treedef, [mk(p, l) for p, l in flat])
+
+
+def batch_pspec(mesh: Mesh) -> P:
+    return P(dp_axes(mesh))
+
+
+def _dp_if_fits(mesh: Mesh, dim: int):
+    dp = dp_axes(mesh)
+    size = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+    return dp if (dp and dim % size == 0 and size > 1) else None
+
+
+def batch_shardings(batch, mesh: Mesh):
+    def mk(leaf):
+        rest = [None] * (len(leaf.shape) - 1)
+        return NamedSharding(mesh, P(_dp_if_fits(mesh, leaf.shape[0]), *rest))
+
+    return jax.tree_util.tree_map(mk, batch)
+
+
+def cache_shardings(caches, mesh: Mesh, *, stacked: bool = True,
+                    seq_shard: bool = False):
+    """Decode caches: batch over DP (when divisible). Stacked-layer caches
+    carry a leading L axis. ``seq_shard=True`` additionally shards the cache
+    sequence dim over 'data' — the flash-decoding layout for batch=1
+    long-context cells (partial-softmax combine is then a psum)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(caches)
+    model = _axis_size(mesh, "model")
+
+    def mk(path, leaf):
+        name = str(getattr(path[-1], "key", path[-1]))
+        shape = leaf.shape
+        lead: list = [None] if stacked else []
+        body = shape[1:] if stacked else shape
+        if len(body) == 0:
+            return NamedSharding(mesh, P(*lead))
+        dims: list = [_dp_if_fits(mesh, body[0])] + [None] * (len(body) - 1)
+        if name in ("c", "kr", "k", "v", "xk", "xv", "slot_pos") \
+                and len(body) >= 2:
+            if seq_shard and body[1] % _axis_size(mesh, "data") == 0 \
+                    and dims[0] is None:
+                dims[1] = "data"
+        if name in ("k", "v", "xk", "xv") and len(body) >= 3 \
+                and _fits(body[2], model):
+            dims[2] = "model"          # shard KV heads over TP when divisible
+        if name == "state" and len(body) >= 2 and _fits(body[1], model):
+            dims[1] = "model"          # SSM state heads over TP
+        if name == "conv" and len(body) >= 3 and _fits(body[2], model):
+            dims[2] = "model"
+        return NamedSharding(mesh, P(*lead, *dims))
+
+    return jax.tree_util.tree_unflatten(
+        treedef, [mk(p, l) for p, l in flat])
+
+
+def replicated(tree, mesh: Mesh):
+    return jax.tree_util.tree_map(
+        lambda l: NamedSharding(mesh, P()), tree)
+
+
+# --- activation constraints --------------------------------------------
+# Model code is mesh-agnostic; launchers opt in by installing the mesh here
+# (see launch/dryrun.py). constrain_batch_dim() then pins the leading batch
+# dim of activations to the DP axes at every layer boundary — without this
+# GSPMD pessimizes scan carries to replicated at 256-device scale.
+_ACT_MESH: list = [None]
+
+
+def set_activation_mesh(mesh: Optional[Mesh]):
+    _ACT_MESH[0] = mesh
+
+
+def constrain_batch_dim(x, extra_dims: Optional[Tuple] = None):
+    mesh = _ACT_MESH[0]
+    if mesh is None:
+        return x
+    dp = dp_axes(mesh)
+    size = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+    if not dp or x.ndim == 0 or x.shape[0] % size:
+        return x
+    rest = tuple(extra_dims) if extra_dims is not None \
+        else (None,) * (x.ndim - 1)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(dp, *rest)))
+
+
+def dp_total() -> int:
+    """Total DP shard count of the installed activation mesh (1 if none)."""
+    mesh = _ACT_MESH[0]
+    if mesh is None:
+        return 1
+    dp = dp_axes(mesh)
+    return int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+
+
+def constrain_ep(x):
+    """Pin an expert-dispatch tensor to EP: [S, E, C, d] -> (dp, model) or
+    [E, C, d] -> (model,) on the expert dim."""
+    mesh = _ACT_MESH[0]
+    if mesh is None:
+        return x
+    model = _axis_size(mesh, "model")
+    if x.ndim == 4:
+        dp = _dp_if_fits(mesh, x.shape[0])
+        e_ax = "model" if _fits(x.shape[1], model) else None
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, P(dp, e_ax, None, None)))
+    if not _fits(x.shape[0], model):
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P("model", *(None,) * (x.ndim - 1))))
+
+
+def make_tree_constrainer(shardings):
+    """Returns fn(tree) applying with_sharding_constraint leaf-wise with a
+    prebuilt sharding tree (used to pin scan-carried grads / microbatch
+    slices, which GSPMD otherwise pessimizes to replicated)."""
+
+    def constrain(tree):
+        return jax.tree_util.tree_map(
+            jax.lax.with_sharding_constraint, tree, shardings)
+
+    return constrain
+
+
+def grads_shardings(params_abs, mesh: Mesh, *, fsdp: bool = True):
+    return params_shardings(params_abs, mesh, fsdp=fsdp)

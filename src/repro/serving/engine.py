@@ -1,0 +1,127 @@
+"""Continuous-batching decode engine with MTLA phase-aware caches.
+
+Requests arrive with prompts of different lengths; the engine packs up to
+``batch`` concurrent sequences into fixed slots, prefilling new requests
+into free slots and decoding all active slots each step. Per-slot state
+(absolute position -> MTLA chunk phase i mod s) lives in the cache pytree,
+so a slot whose sequence is mid-chunk keeps accumulating into its partial
+latent vector while its neighbour opens a new chunk — the batched
+``decode_step_s`` handles both in one fused update.
+
+The KV-cache memory accounting (``cache_bytes``) backs the paper-table
+benchmarks (GPU-memory columns of Tables 1-5).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.types import ModelConfig
+from ..models import api
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                  # [Tp] int32
+    max_new: int = 32
+    out: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+def cache_bytes(caches) -> int:
+    return sum(a.size * a.dtype.itemsize
+               for a in jax.tree_util.tree_leaves(caches)
+               if hasattr(a, "dtype"))
+
+
+class DecodeEngine:
+    """Greedy decoding engine. One model, `batch` slots, shared cache."""
+
+    def __init__(self, params, cfg: ModelConfig, *, batch: int,
+                 max_len: int, dtype=jnp.float32, eos: Optional[int] = None):
+        self.params, self.cfg = params, cfg
+        self.batch, self.max_len, self.eos = batch, max_len, eos
+        self.dtype = dtype
+        self.caches = api.init_caches(cfg, batch, max_len, dtype=dtype,
+                                      src_len=max(cfg.frontend_len, 4))
+        self.slots: List[Optional[Request]] = [None] * batch
+        self._decode = jax.jit(
+            lambda p, tok, c: api.decode(p, cfg, tok, c, dtype=dtype))
+        self.steps = 0
+
+    # --- slot management ---------------------------------------------------
+    def _free_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots) if s is None]
+
+    def add_request(self, req: Request) -> bool:
+        free = self._free_slots()
+        if not free:
+            return False
+        slot = free[0]
+        self.slots[slot] = req
+        self._prefill_slot(slot, req)
+        return True
+
+    def _prefill_slot(self, slot: int, req: Request):
+        """Single-sequence prefill into one slot of the shared cache. Runs
+        the whole prompt through decode steps of batch 1 region (correct,
+        simple; a production engine would use a dedicated prefill graph)."""
+        cfg = self.cfg
+        single = api.init_caches(cfg, 1, self.max_len, dtype=self.dtype,
+                                 src_len=max(cfg.frontend_len, 4))
+        batch = {"tokens": jnp.asarray(req.prompt[None, :], jnp.int32)}
+        logits, single = api.prefill(self.params, cfg, batch, single,
+                                     dtype=self.dtype)
+        tok = int(jnp.argmax(logits[0]))
+        req.out.append(tok)
+        # splice the single-sequence cache into the batched cache at `slot`
+        # (all cache leaves are layer-stacked: [L, B, ...])
+        def splice(big, small):
+            if big.ndim < 2:
+                return big
+            return big.at[:, slot:slot + 1].set(small.astype(big.dtype))
+        self.caches = jax.tree_util.tree_map(splice, self.caches, single)
+
+    # --- decode loop ---------------------------------------------------------
+    def step(self):
+        """One batched decode step across all active slots."""
+        toks = np.zeros((self.batch, 1), np.int32)
+        active = []
+        for i, s in enumerate(self.slots):
+            if s is not None and not s.done:
+                toks[i, 0] = s.out[-1]
+                active.append(i)
+        if not active:
+            return []
+        logits, self.caches = self._decode(
+            self.params, jnp.asarray(toks), self.caches)
+        nxt = np.asarray(jnp.argmax(logits, -1))
+        finished = []
+        for i in active:
+            s = self.slots[i]
+            tok = int(nxt[i])
+            s.out.append(tok)
+            if (self.eos is not None and tok == self.eos) or \
+                    len(s.out) >= s.max_new:
+                s.done = True
+                finished.append(s)
+                self.slots[i] = None
+        self.steps += 1
+        return finished
+
+    def run(self, requests: List[Request], max_steps: int = 10_000
+            ) -> Dict[int, List[int]]:
+        pending = list(requests)
+        done: Dict[int, List[int]] = {}
+        while (pending or any(s is not None for s in self.slots)) \
+                and self.steps < max_steps:
+            while pending and self._free_slots():
+                self.add_request(pending.pop(0))
+            for fin in self.step():
+                done[fin.rid] = fin.out
+        return done

@@ -1,0 +1,108 @@
+"""Train-step factory: pure functions wired for pjit by launch/train.py and
+launch/dryrun.py.
+
+Features: microbatch gradient accumulation (lax.scan), configurable remat,
+bf16 compute with fp32 master params/optimizer, warmup-cosine schedule,
+global-norm clipping, chunked-vocab CE, MoE aux losses, z-loss.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.types import ModelConfig, TrainConfig
+from ..models import api
+from ..optim.adamw import AdamWState, adamw_update, init_adamw, warmup_cosine
+from .losses import total_loss
+
+
+def init_train_state(key, cfg: ModelConfig) -> Dict[str, Any]:
+    params = api.init_model(key, cfg, dtype=jnp.float32)
+    return {"params": params, "opt": init_adamw(params)}
+
+
+def _dtype(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+            "float16": jnp.float16}[name]
+
+
+def make_loss_fn(cfg: ModelConfig, tcfg: TrainConfig):
+    cdt = _dtype(tcfg.compute_dtype)
+
+    def loss_fn(params, batch):
+        return total_loss(params, cfg, batch, dtype=cdt, remat=tcfg.remat,
+                          logit_chunk=tcfg.logit_chunk, z_loss=tcfg.z_loss)
+
+    return loss_fn
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig,
+                    grad_constrainer=None, batch_constrainer=None):
+    """Returns step(state, batch) -> (state, metrics). Mesh-agnostic; the
+    caller jits with in/out shardings + donation. Optional constrainers pin
+    scan-carried gradient accumulators / microbatch slices to the param /
+    batch shardings (GSPMD otherwise pessimizes loop carries to replicated,
+    which blows per-device temp memory at 34B scale)."""
+    loss_fn = make_loss_fn(cfg, tcfg)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+    gc = grad_constrainer or (lambda t: t)
+    bc = batch_constrainer or (lambda t: t)
+
+    def accumulate(params, batch):
+        if not tcfg.microbatch:
+            (loss, metrics), grads = grad_fn(params, batch)
+            return loss, metrics, grads
+        mb = tcfg.microbatch
+        B = batch["tokens"].shape[0]
+        assert B % mb == 0, (B, mb)
+        nm = B // mb
+        split = jax.tree_util.tree_map(
+            lambda a: a.reshape((nm, mb) + a.shape[1:]), batch)
+
+        def body(carry, mbatch):
+            loss_acc, g_acc = carry
+            (loss, metrics), grads = grad_fn(params, bc(mbatch))
+            g_acc = jax.tree_util.tree_map(
+                lambda a, b: a + b.astype(jnp.float32), g_acc, grads)
+            return (loss_acc + loss, gc(g_acc)), metrics
+
+        g0 = gc(jax.tree_util.tree_map(
+            lambda a: jnp.zeros(a.shape, jnp.float32), params))
+        (loss_sum, grads), metrics = jax.lax.scan(
+            body, (jnp.zeros((), jnp.float32), g0), split)
+        grads = jax.tree_util.tree_map(lambda g: g / nm, grads)
+        metrics = jax.tree_util.tree_map(lambda a: a[-1], metrics)
+        return loss_sum / nm, metrics, grads
+
+    def step(state, batch):
+        params, opt = state["params"], state["opt"]
+        loss, metrics, grads = accumulate(params, batch)
+        if tcfg.grad_reduce_dtype == "bfloat16":
+            # cast before the (GSPMD-inserted) DP all-reduce consumes them
+            grads = jax.tree_util.tree_map(
+                lambda g: g.astype(jnp.bfloat16), grads)
+        lr = warmup_cosine(opt.step, peak_lr=tcfg.learning_rate,
+                           warmup=tcfg.warmup_steps, total=tcfg.total_steps)
+        new_params, new_opt, om = adamw_update(
+            params, grads, opt, lr=lr, b1=tcfg.b1, b2=tcfg.b2, eps=tcfg.eps,
+            weight_decay=tcfg.weight_decay, grad_clip=tcfg.grad_clip)
+        out_metrics = {"loss": loss, "lr": lr, **om,
+                       "ce": metrics["ce"], "tokens": metrics["tokens"]}
+        return {"params": new_params, "opt": new_opt}, out_metrics
+
+    return step
+
+
+def make_serve_steps(cfg: ModelConfig, dtype=jnp.bfloat16):
+    """Returns (prefill_step, decode_step) pure fns for pjit."""
+
+    def prefill_step(params, batch, caches):
+        return api.prefill(params, cfg, batch, caches, dtype=dtype)
+
+    def decode_step(params, token, caches):
+        return api.decode(params, cfg, token, caches, dtype=dtype)
+
+    return prefill_step, decode_step

@@ -1,0 +1,114 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps + hypothesis
+property tests, executed with interpret=True on CPU (the exact kernel
+bodies run in Python)."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.mtla_attn import mtla_attn_pallas
+from repro.kernels.mtla_decode import mtla_decode_pallas
+from repro.kernels.mtla_merge import mtla_merge_pallas
+
+
+def rnd(key, shape, dtype=jnp.float32):
+    return jax.random.normal(jax.random.PRNGKey(key), shape).astype(dtype)
+
+
+TOL = {jnp.float32: dict(rtol=1e-5, atol=1e-5),
+       jnp.bfloat16: dict(rtol=2e-2, atol=2e-2)}
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,T,r,h,s,bt", [
+    (1, 8, 16, 8, 2, 4), (2, 24, 32, 16, 3, 6), (2, 32, 64, 8, 4, 16),
+    (1, 128, 128, 64, 2, 64), (3, 10, 8, 4, 5, 10),
+])
+def test_merge_kernel_sweep(B, T, r, h, s, bt, dtype):
+    c = rnd(0, (B, T, r), dtype)
+    u = rnd(1, (B, T, h), dtype)
+    vpe = rnd(2, (T, h), dtype)
+    P, C_hat = mtla_merge_pallas(c, u, vpe, s, block_t=bt, interpret=True)
+    Pr, Cr, _ = ref.merge_ref(c, u, vpe, s)
+    np.testing.assert_allclose(np.asarray(P, np.float32),
+                               np.asarray(Pr, np.float32), **TOL[dtype])
+    np.testing.assert_allclose(np.asarray(C_hat, np.float32),
+                               np.asarray(Cr, np.float32), **TOL[dtype])
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,H,T,dh,dr,s,bq,bk", [
+    (1, 2, 8, 16, 8, 2, 4, 4), (2, 3, 24, 32, 16, 3, 8, 8),
+    (1, 4, 64, 64, 32, 2, 32, 16), (2, 2, 20, 16, 8, 4, 8, 4),
+])
+def test_attn_kernel_sweep(B, H, T, dh, dr, s, bq, bk, dtype):
+    t = -(-T // s)
+    q_nope, q_rope = rnd(0, (B, H, T, dh), dtype), rnd(1, (B, H, T, dr), dtype)
+    k_chunk, v_chunk = rnd(2, (B, H, t, dh), dtype), rnd(3, (B, H, t, dh), dtype)
+    kr_chunk = rnd(4, (B, t, dr), dtype)
+    k_self, v_self = rnd(5, (B, H, T, dh), dtype), rnd(6, (B, H, T, dh), dtype)
+    kr_self = rnd(7, (B, T, dr), dtype)
+    scale = 1.0 / math.sqrt(dh)
+    out = mtla_attn_pallas(q_nope, q_rope, k_chunk, v_chunk, kr_chunk,
+                           k_self, v_self, kr_self, s, scale,
+                           block_q=bq, block_k=bk, interpret=True)
+    want = ref.mtla_attn_ref(q_nope, q_rope, k_chunk, v_chunk, kr_chunk,
+                             k_self, v_self, kr_self, s, scale)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **TOL[dtype])
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,H,t,r,dr,bk", [
+    (1, 2, 8, 16, 8, 4), (2, 4, 33, 32, 16, 8), (3, 8, 128, 64, 32, 64),
+])
+def test_decode_kernel_sweep(B, H, t, r, dr, bk, dtype):
+    q_lat, q_rope = rnd(0, (B, H, r), dtype), rnd(1, (B, H, dr), dtype)
+    cache_c, cache_kr = rnd(2, (B, t, r), dtype), rnd(3, (B, t, dr), dtype)
+    j = jnp.arange(B, dtype=jnp.int32) % t
+    scale = 1.0 / math.sqrt(r)
+    out = mtla_decode_pallas(q_lat, q_rope, cache_c, cache_kr, j, scale,
+                             block_k=bk, interpret=True)
+    want = ref.mtla_decode_ref(q_lat, q_rope, cache_c, cache_kr, j, scale)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=3e-2 if dtype == jnp.bfloat16 else 2e-5,
+                               atol=3e-2 if dtype == jnp.bfloat16 else 2e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(T=st.integers(2, 40), s=st.integers(1, 6), seed=st.integers(0, 99))
+def test_merge_kernel_property(T, s, seed):
+    if T % s:
+        T += s - T % s
+    c, u = rnd(seed, (1, T, 16)), rnd(seed + 1, (1, T, 8))
+    vpe = rnd(seed + 2, (T, 8))
+    P, C_hat = mtla_merge_pallas(c, u, vpe, s, block_t=8 * s, interpret=True)
+    Pr, Cr, _ = ref.merge_ref(c, u, vpe, s)
+    np.testing.assert_allclose(np.asarray(P), np.asarray(Pr),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(C_hat), np.asarray(Cr),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_attn_kernel_matches_model_path():
+    """Kernel output == the model's compressed attention (mtla.py)."""
+    from repro.core import mtla
+    B, H, T, dh, dr, s = 2, 2, 12, 16, 8, 3
+    t = -(-T // s)
+    args = [rnd(i, sh) for i, sh in enumerate([
+        (B, H, T, dh), (B, H, T, dr), (B, H, t, dh), (B, H, t, dh),
+        (B, t, dr), (B, H, T, dh), (B, H, T, dh), (B, T, dr)])]
+    scale = 1.0 / math.sqrt(dh)
+    out = mtla_attn_pallas(*args, s, scale, block_q=4, block_k=4,
+                           interpret=True)
+    # model path uses [B,T,H,d] layout
+    tr = lambda a: jnp.swapaxes(a, 1, 2)
+    want = mtla.attention_compressed(
+        tr(args[0]), tr(args[1]), tr(args[2]), tr(args[3]), args[4],
+        tr(args[5]), tr(args[6]), args[7], s, scale)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(tr(want)),
+                               rtol=1e-4, atol=1e-5)

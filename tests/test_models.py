@@ -1,0 +1,133 @@
+"""Model-family correctness: MoE vs dense oracle, Mamba2 SSD vs naive
+recurrence, train==serve consistency for ssm/hybrid/encdec."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import smoke_config
+from repro.core.types import MoEConfig, SSMConfig
+from repro.models import api, moe as moe_mod, ssm as ssm_mod
+
+
+def test_moe_matches_dense_oracle():
+    """Capacity dispatch == dense all-experts oracle when nothing drops."""
+    cfg = MoEConfig(num_experts=8, num_experts_per_tok=2, d_expert=16,
+                    num_shared_experts=2, d_shared_expert=8)
+    p = moe_mod.init_moe(jax.random.PRNGKey(0), cfg, 32, model_axis=4)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 12, 32))
+    y, aux = moe_mod.moe_apply(p, cfg, x, capacity_factor=8.0)
+    y_ref = moe_mod.moe_ref_dense(p, cfg, x)
+    assert float(aux["fraction_dropped"]) == 0.0
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=2e-4, atol=2e-5)
+    assert float(aux["lb_loss"]) > 0.5  # ~1 for near-uniform routing
+
+
+def test_moe_capacity_drops_counted():
+    cfg = MoEConfig(num_experts=4, num_experts_per_tok=2, d_expert=8)
+    p = moe_mod.init_moe(jax.random.PRNGKey(2), cfg, 16, model_axis=4)
+    x = jax.random.normal(jax.random.PRNGKey(3), (1, 64, 16))
+    _, aux = moe_mod.moe_apply(p, cfg, x, capacity_factor=0.25)
+    assert float(aux["fraction_dropped"]) > 0.1
+
+
+def _ssd_naive(x, dt, A, B, C, D):
+    """O(T^2-free) exact recurrence oracle."""
+    b, T, H, P = x.shape
+    N = B.shape[-1]
+    hg = H // B.shape[2]
+    Bh = np.repeat(np.asarray(B), hg, axis=2)
+    Ch = np.repeat(np.asarray(C), hg, axis=2)
+    x, dt, A, D = map(np.asarray, (x, dt, A, D))
+    state = np.zeros((b, H, P, N))
+    ys = np.zeros((b, T, H, P))
+    for t in range(T):
+        decay = np.exp(dt[:, t] * A)                       # [b,H]
+        state = state * decay[..., None, None] + np.einsum(
+            "bhp,bhn->bhpn", x[:, t] * dt[:, t][..., None], Bh[:, t])
+        ys[:, t] = np.einsum("bhpn,bhn->bhp", state, Ch[:, t]) \
+            + x[:, t] * D[None, :, None]
+    return ys, state
+
+
+@settings(max_examples=8, deadline=None)
+@given(T=st.integers(3, 33), chunk=st.sampled_from([4, 8, 16]),
+       seed=st.integers(0, 50))
+def test_ssd_chunked_matches_recurrence(T, chunk, seed):
+    b, H, P, G, N = 2, 4, 8, 2, 8
+    k = jax.random.PRNGKey(seed)
+    x = jax.random.normal(k, (b, T, H, P))
+    dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(k, 1),
+                                           (b, T, H)))
+    A = -jnp.exp(jax.random.normal(jax.random.fold_in(k, 2), (H,)) * 0.3)
+    B = jax.random.normal(jax.random.fold_in(k, 3), (b, T, G, N))
+    C = jax.random.normal(jax.random.fold_in(k, 4), (b, T, G, N))
+    D = jnp.ones((H,))
+    y, state = ssm_mod.ssd_chunked(x, dt, A, B, C, D, chunk)
+    y_ref, state_ref = _ssd_naive(x, dt, A, B, C, D)
+    np.testing.assert_allclose(np.asarray(y), y_ref, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(state), state_ref,
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("arch", ["mamba2_780m", "hymba_1_5b"])
+def test_ssm_hybrid_train_equals_serve(arch):
+    """Teacher-forced hidden states == prefill+decode rollout logits."""
+    cfg = smoke_config(arch)
+    params = api.init_model(jax.random.PRNGKey(0), cfg)
+    B, T = 2, 9
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, T), 0,
+                              cfg.vocab_size)
+    from repro.models.lm import lm_apply, lm_head
+    hidden, _ = lm_apply(params, cfg, toks, dtype=jnp.float32)
+    logits_train = lm_head(params, cfg, hidden)              # [B,T,V]
+    caches = api.init_caches(cfg, B, T + 2, dtype=jnp.float32)
+    lg, caches = api.prefill(params, cfg, {"tokens": toks[:, :4]}, caches,
+                             dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(lg), np.asarray(
+        logits_train[:, 3]), rtol=3e-3, atol=3e-3)
+    for i in range(4, T):
+        lg, caches = api.decode(params, cfg, toks[:, i:i + 1], caches,
+                                dtype=jnp.float32)
+        np.testing.assert_allclose(np.asarray(lg), np.asarray(
+            logits_train[:, i]), rtol=3e-3, atol=3e-3)
+
+
+def test_encdec_train_equals_serve():
+    cfg = smoke_config("seamless_m4t_medium")
+    params = api.init_model(jax.random.PRNGKey(2), cfg)
+    B, Ls, Tt = 2, 4, 7
+    src = jax.random.normal(jax.random.PRNGKey(3),
+                            (B, Ls, cfg.frontend_dim))
+    tgt = jax.random.randint(jax.random.PRNGKey(4), (B, Tt), 0,
+                             cfg.vocab_size)
+    from repro.models import encdec as ed
+    enc = ed.encode(params, cfg, src, dtype=jnp.float32)
+    hidden = ed.decode_train(params, cfg, tgt, enc, dtype=jnp.float32)
+    from repro.core.nn import dense
+    logits_train = dense(params["lm_head"], hidden)
+    caches = ed.init_encdec_caches(cfg, B, Tt + 2, Ls, dtype=jnp.float32)
+    caches = ed.encdec_start(params, cfg, src, caches, dtype=jnp.float32)
+    for i in range(Tt):
+        lg, caches = ed.encdec_decode(params, cfg, tgt[:, i:i + 1], caches,
+                                      dtype=jnp.float32)
+        np.testing.assert_allclose(np.asarray(lg), np.asarray(
+            logits_train[:, i]), rtol=2e-3, atol=2e-3)
+
+
+def test_vlm_prefix_loss_masking():
+    cfg = smoke_config("internvl2_2b")
+    params = api.init_model(jax.random.PRNGKey(5), cfg)
+    B, Lp, Tt = 2, cfg.frontend_len, 8
+    batch = {
+        "frontend_embeds": jax.random.normal(
+            jax.random.PRNGKey(6), (B, Lp, cfg.frontend_dim)),
+        "tokens": jax.random.randint(jax.random.PRNGKey(7), (B, Tt), 0,
+                                     cfg.vocab_size),
+        "labels": jax.random.randint(jax.random.PRNGKey(8), (B, Tt), 0,
+                                     cfg.vocab_size),
+    }
+    hidden, _ = api.model_hidden(params, cfg, batch, dtype=jnp.float32)
+    assert hidden.shape == (B, Tt, cfg.d_model)  # prefix stripped

@@ -1,0 +1,181 @@
+"""THE core property of the paper (§4.2): parallel training with the
+stride-aware causal mask must reproduce incremental inference exactly —
+per-position outputs of attn_train == step-by-step attn_decode, and the
+masked (paper-faithful) and compressed (beyond-paper) training paths agree.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.attention import (attn_decode, attn_prefill, attn_train,
+                                  init_attention, init_attn_cache)
+from repro.core.types import AttentionConfig
+from repro.core import masks, mtla
+
+jax.config.update("jax_enable_x64", False)
+
+
+def mk_cfg(kind="mtla", s=2, H=4, dh=16, dr=8, r=32, **kw):
+    return AttentionConfig(kind=kind, num_heads=H, num_kv_heads=kw.pop("kv", H),
+                           head_dim=dh, rope_head_dim=dr, kv_lora_rank=r,
+                           hyper_dim=16, s=s, q_chunk=0, **kw)
+
+
+def rollout_decode(p, cfg, x, max_len=None):
+    B, T, d = x.shape
+    cache = init_attn_cache(cfg, B, max_len or T, dtype=jnp.float32)
+    ys = []
+    for i in range(T):
+        y, cache = attn_decode(p, cfg, x[:, i:i + 1], cache)
+        ys.append(y)
+    return jnp.concatenate(ys, axis=1), cache
+
+
+@pytest.mark.parametrize("kind", ["mha", "gqa", "mla", "mtla"])
+@pytest.mark.parametrize("impl", ["compressed", "masked"])
+def test_train_equals_decode(kind, impl):
+    if kind != "mtla" and impl == "masked":
+        pytest.skip("impl only varies for mtla")
+    key = jax.random.PRNGKey(0)
+    cfg = mk_cfg(kind=kind, mtla_train_impl=impl,
+                 kv=2 if kind == "gqa" else 4)
+    d = 24
+    p = init_attention(key, cfg, d)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 7, d))
+    y_train = attn_train(p, cfg, x)
+    y_dec, _ = rollout_decode(p, cfg, x)
+    np.testing.assert_allclose(np.asarray(y_train), np.asarray(y_dec),
+                               rtol=2e-4, atol=2e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(T=st.integers(1, 17), s=st.integers(1, 5),
+       seed=st.integers(0, 2**16))
+def test_mtla_train_decode_property(T, s, seed):
+    cfg = mk_cfg(s=s)
+    key = jax.random.PRNGKey(seed)
+    p = init_attention(key, cfg, 24)
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (1, T, 24))
+    y_train = attn_train(p, cfg, x)
+    y_dec, _ = rollout_decode(p, cfg, x)
+    np.testing.assert_allclose(np.asarray(y_train), np.asarray(y_dec),
+                               rtol=3e-4, atol=3e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(T=st.integers(2, 20), s=st.integers(1, 4), seed=st.integers(0, 99))
+def test_masked_equals_compressed(T, s, seed):
+    """Beyond-paper compressed path == paper-faithful masked path."""
+    key = jax.random.PRNGKey(seed)
+    cfg_m = mk_cfg(s=s, mtla_train_impl="masked")
+    cfg_c = mk_cfg(s=s, mtla_train_impl="compressed")
+    p = init_attention(key, cfg_m, 24)
+    x = jax.random.normal(jax.random.PRNGKey(seed + 7), (2, T, 24))
+    ym = attn_train(p, cfg_m, x)
+    yc = attn_train(p, cfg_c, x)
+    np.testing.assert_allclose(np.asarray(ym), np.asarray(yc),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_prefill_then_decode_continues():
+    """Prefill T tokens, then decode more — must equal full decode rollout."""
+    cfg = mk_cfg(s=3)
+    p = init_attention(jax.random.PRNGKey(3), cfg, 24)
+    x = jax.random.normal(jax.random.PRNGKey(4), (2, 11, 24))
+    T_pre = 7
+    cache = init_attn_cache(cfg, 2, 11, dtype=jnp.float32)
+    y_pre, cache = attn_prefill(p, cfg, x[:, :T_pre], cache)
+    ys = [y_pre]
+    for i in range(T_pre, 11):
+        y, cache = attn_decode(p, cfg, x[:, i:i + 1], cache)
+        ys.append(y)
+    y_mixed = jnp.concatenate(ys, axis=1)
+    y_full, _ = rollout_decode(p, cfg, x)
+    np.testing.assert_allclose(np.asarray(y_mixed), np.asarray(y_full),
+                               rtol=2e-4, atol=2e-5)
+
+
+@pytest.mark.parametrize("kind", ["mha", "gqa", "mla"])
+def test_prefill_decode_std_and_mla(kind):
+    cfg = mk_cfg(kind=kind, kv=2 if kind == "gqa" else 4)
+    p = init_attention(jax.random.PRNGKey(5), cfg, 24)
+    x = jax.random.normal(jax.random.PRNGKey(6), (2, 9, 24))
+    cache = init_attn_cache(cfg, 2, 9, dtype=jnp.float32)
+    y_pre, cache = attn_prefill(p, cfg, x[:, :5], cache)
+    ys = [y_pre]
+    for i in range(5, 9):
+        y, cache = attn_decode(p, cfg, x[:, i:i + 1], cache)
+        ys.append(y)
+    y_mixed = jnp.concatenate(ys, axis=1)
+    y_train = attn_train(p, cfg, x)
+    np.testing.assert_allclose(np.asarray(y_mixed), np.asarray(y_train),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_sliding_window_ring_cache():
+    """SWA ring-buffer decode == train with the same window."""
+    cfg = mk_cfg(kind="gqa", kv=2, sliding_window=4)
+    p = init_attention(jax.random.PRNGKey(7), cfg, 24)
+    x = jax.random.normal(jax.random.PRNGKey(8), (2, 12, 24))
+    y_train = attn_train(p, cfg, x, window=4)
+    cache = init_attn_cache(cfg, 2, 12, dtype=jnp.float32, window=4)
+    assert cache["k"].shape[1] == 4  # ring!
+    ys = []
+    for i in range(12):
+        y, cache = attn_decode(p, cfg, x[:, i:i + 1], cache, window=4)
+        ys.append(y)
+    y_dec = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_train), np.asarray(y_dec),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_stride_aware_mask_matches_reference():
+    for T, s in [(1, 1), (5, 2), (8, 3), (9, 4), (16, 1)]:
+        rows = jnp.arange(T)
+        got = np.asarray(masks.stride_aware_mask(rows, rows, s))
+        np.testing.assert_array_equal(got, masks.np_stride_aware(T, s))
+
+
+def test_merge_matches_literal_eq16():
+    """Chunked merge == literal Eq.16: W = sigmoid(Lin(PE) @ Lin(C)^T),
+    chunk-masked, times C."""
+    from repro.core.nn import dense as _dense
+    from repro.core.rope import sinusoidal_pe
+    key = jax.random.PRNGKey(11)
+    B, T, r, s, h = 2, 9, 8, 3, 5
+    cfg = mk_cfg(s=s, r=r)
+    p = init_attention(key, cfg, 16)
+    c = jax.random.normal(jax.random.PRNGKey(12), (B, T, r))
+    rows = jnp.arange(T)
+    g = mtla.merge_gates(p, c, rows // s)
+    P, C_hat = mtla.temporal_merge(c, g, s)
+    # literal Eq. 15/16
+    pe = sinusoidal_pe(rows // s, r)                    # replicated PE rows
+    lin_pe = _dense(p["w_hp"], pe)                      # [T,h]
+    lin_c = _dense(p["w_hc"], c)                        # [B,T,h]
+    W = jax.nn.sigmoid(jnp.einsum("th,bnh->btn", lin_pe, lin_c))
+    W = jnp.where(masks.chunk_merge_mask(rows, rows, s)[None], W, 0.0)
+    C_prime = jnp.einsum("btn,bnr->btr", W, c)          # == P
+    np.testing.assert_allclose(np.asarray(P), np.asarray(C_prime),
+                               rtol=1e-5, atol=1e-6)
+    # finalized chunks = surrogate at chunk-final positions
+    fin = np.asarray(C_prime)[:, [min(j * s + s - 1, T - 1)
+                                  for j in range(-(-T // s))]]
+    np.testing.assert_allclose(np.asarray(C_hat), fin, rtol=1e-5, atol=1e-6)
+
+
+def test_kv_cache_accounting():
+    """Paper §4.3: MTLA cache per token = 9 d_h l / (2s) with r=4dh, dr=dh/2."""
+    dh, s = 64, 2
+    cfg = AttentionConfig(kind="mtla", num_heads=8, num_kv_heads=8,
+                          head_dim=dh, kv_lora_rank=4 * dh,
+                          rope_head_dim=dh // 2, s=s)
+    assert cfg.kv_cache_per_token == 9 * dh // (2 * s)
+    mha = AttentionConfig(kind="mha", num_heads=8, num_kv_heads=8, head_dim=dh)
+    assert mha.kv_cache_per_token == 2 * 8 * dh
+    # s=2 MTLA ~ MQA-level (2 d_h): paper's motivation for the default
+    mqa = AttentionConfig(kind="mqa", num_heads=8, num_kv_heads=1, head_dim=dh)
+    assert cfg.kv_cache_per_token / mqa.kv_cache_per_token == pytest.approx(
+        2.25 / 2, rel=1e-6)

@@ -1,0 +1,83 @@
+"""HLO analyzer validation: known programs with known flops/collectives."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def run_py(code: str) -> str:
+    env = dict(os.environ, PYTHONPATH=SRC,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8")
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env, timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+def test_scan_trip_count_flops():
+    out = run_py("""
+        import jax, jax.numpy as jnp
+        from repro.roofline.hlo_analyzer import analyze
+        def g(x):
+            def body(c, _):
+                return c @ c, None
+            c, _ = jax.lax.scan(body, x, None, length=10)
+            return c
+        xa = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+        hlo = jax.jit(g).lower(xa).compile().as_text()
+        c = analyze(hlo)
+        print("FLOPS", c.flops)
+    """)
+    flops = float(out.split("FLOPS")[1])
+    want = 2 * 128 ** 3 * 10
+    assert abs(flops - want) / want < 0.02, (flops, want)
+
+
+def test_collective_bytes_all_reduce_and_gather():
+    out = run_py("""
+        import jax, jax.numpy as jnp
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.roofline.hlo_analyzer import analyze
+        mesh = jax.make_mesh((4, 2), ("data", "model"))
+        xs = NamedSharding(mesh, P("data", None))
+        ws = NamedSharding(mesh, P("data", "model"))
+        def f(x, w):
+            return (x @ w).sum()
+        xa = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+        wa = jax.ShapeDtypeStruct((128, 256), jnp.float32)
+        with mesh:
+            comp = jax.jit(f, in_shardings=(xs, ws),
+                           out_shardings=NamedSharding(mesh, P())
+                           ).lower(xa, wa).compile()
+        c = analyze(comp.as_text())
+        print("COLL", dict(c.coll))
+        print("FLOPS", c.flops)
+    """)
+    coll = eval(out.split("COLL")[1].splitlines()[0])
+    # all-gather of w over data axis: operand = per-device shard bytes
+    assert coll.get("all-gather", 0) > 0
+    assert coll.get("all-reduce", 0) > 0
+    flops = float(out.split("FLOPS")[1])
+    # per-device dot: (64/4) x 128 x (256/2) -> 2*16*128*128
+    assert abs(flops - 2 * 16 * 128 * 128) / (2 * 16 * 128 * 128) < 0.3
+
+
+def test_fusion_bytes_elided():
+    out = run_py("""
+        import jax, jax.numpy as jnp
+        from repro.roofline.hlo_analyzer import analyze
+        def f(x):
+            return jnp.sin(x) + jnp.cos(x) * 2.0 - x
+        xa = jax.ShapeDtypeStruct((1024, 1024), jnp.float32)
+        hlo = jax.jit(f).lower(xa).compile().as_text()
+        c = analyze(hlo)
+        print("BYTES", c.bytes)
+    """)
+    b = float(out.split("BYTES")[1])
+    # elementwise chain fuses: ~1 read + 1 write = 8 MB (allow some slack)
+    assert b <= 4 * 1024 * 1024 * 6, b
+    assert b >= 4 * 1024 * 1024 * 2, b
