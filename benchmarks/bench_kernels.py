@@ -1,7 +1,12 @@
 """Pallas kernel microbenchmarks (interpret mode on CPU: correctness-path
 timing only — TPU wall-time comes from the roofline analysis). Also reports
 the FLOP ratio of the compressed vs masked MTLA training path — the
-beyond-paper win measured analytically (exact op counts)."""
+beyond-paper win measured analytically (exact op counts).
+
+The dispatch rows time the model-facing backend entry points
+(core/dispatch.py) on whatever backend ``auto`` resolves to — on TPU they
+measure the fused kernels against the same harness as the ref rows, so every
+later perf PR has a fused baseline in the same CSV."""
 from __future__ import annotations
 
 import math
@@ -10,6 +15,7 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro.core import dispatch
 from repro.kernels import ref
 
 
@@ -50,6 +56,23 @@ def run():
     us = _time(jax.jit(lambda *a: ref.mtla_decode_ref(*a, scale=scale)),
                q_lat, q_rope, cc, ck, j)
     rows.append(f"bench_kernels/mtla_decode_ref_jit,{us:.1f},cache={t}x{r}")
+
+    # backend-dispatch entry points on the resolved default backend
+    # ('pallas' fused kernels on TPU, 'ref' jnp elsewhere): the serving /
+    # training hot paths exactly as the models call them
+    be = dispatch.resolve("auto")
+    us = _time(jax.jit(lambda *a: dispatch.mtla_decode_attention(
+        *a, scale, backend=be)), q_lat, q_rope, cc, ck, j)
+    rows.append(f"bench_kernels/mtla_decode_dispatch_{be},{us:.1f},"
+                f"cache={t}x{r}")
+    # model layout [B,T,H,d] for the train-attention entry point
+    tr = lambda a: jnp.swapaxes(a, 1, 2)
+    us = _time(jax.jit(lambda *a: dispatch.mtla_train_attention(
+        *a, s, scale, backend=be)),
+        tr(args[0]), tr(args[1]), tr(args[2]), tr(args[3]), args[4],
+        tr(args[5]), tr(args[6]), args[7])
+    rows.append(f"bench_kernels/mtla_attn_dispatch_{be},{us:.1f},"
+                f"TxT_over_s={T}x{t + 1}")
 
     # analytic train-attention FLOPs: masked (paper) vs compressed (ours)
     def attn_flops_masked(T_, H_, dh_, dr_):

@@ -1,17 +1,33 @@
 """Benchmark driver: one module per paper table. Prints
 ``name,us_per_call,derived`` CSV rows (CPU-container timings: per-variant
 ratios are the meaningful columns; TPU projections live in EXPERIMENTS.md
-§Roofline)."""
+§Roofline).
+
+    PYTHONPATH=src python -m benchmarks.run [--only SUBSTR]
+
+``--only`` filters modules by name substring (CI runs ``--only
+bench_kernels`` as a fast smoke of the benchmark entry points).
+"""
 from __future__ import annotations
 
+import argparse
 import sys
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="",
+                    help="run only modules whose name contains this "
+                         "substring (e.g. 'bench_kernels')")
+    args = ap.parse_args()
     from . import (bench_asr, bench_kernels, bench_related, bench_slu,
                    bench_st, bench_summarisation)
     mods = [bench_st, bench_summarisation, bench_asr, bench_slu,
             bench_related, bench_kernels]
+    if args.only:
+        mods = [m for m in mods if args.only in m.__name__]
+        if not mods:
+            raise SystemExit(f"no benchmark module matches {args.only!r}")
     print("name,us_per_call,derived")
     for m in mods:
         for row in m.run():

@@ -4,7 +4,8 @@ columns), at CPU scale: train identical models with MHA / MLA / MTLA
 decode speed + cache memory. MTLA should match MHA quality while cutting
 cache by ~(r+d_h^R)/(2 H d_h s).
 
-    PYTHONPATH=src python examples/compare_attention.py [--steps 150]
+    PYTHONPATH=src python examples/compare_attention.py [--steps 150] \
+        [--backend auto|ref|pallas]
 """
 import argparse
 import time
@@ -20,10 +21,11 @@ from repro.serving.engine import cache_bytes
 from repro.train.trainer import init_train_state, make_train_step
 
 
-def build(kind, s=2):
+def build(kind, s=2, backend="auto"):
     dh = 32
     H = 4
     return ModelConfig(
+        backend=backend,
         name=f"{kind}{s if kind == 'mtla' else ''}", family="dense",
         num_layers=3, d_model=H * dh, d_ff=4 * H * dh, vocab_size=97,
         attn=AttentionConfig(
@@ -73,13 +75,16 @@ def decode_speed(state, cfg, prompt_len=96, n=32, batch=4):
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=150)
+    ap.add_argument("--backend", default="auto",
+                    choices=["auto", "ref", "pallas"],
+                    help="attention backend for MLA/MTLA variants")
     args = ap.parse_args()
     variants = [("mha", 2), ("mla", 2), ("mtla", 2), ("mtla", 3)]
     base_ms = base_bytes = None
     print(f"{'model':10s} {'final_loss':>10s} {'ms/step':>8s} "
           f"{'speedup':>8s} {'cache_bytes':>12s} {'reduction':>9s}")
     for kind, s in variants:
-        cfg = build(kind, s)
+        cfg = build(kind, s, backend=args.backend)
         state, loss = train_one(cfg, args.steps)
         ms, cb = decode_speed(state, cfg)
         if base_ms is None:

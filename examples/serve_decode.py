@@ -1,8 +1,10 @@
 """Continuous-batching serving demo: more requests than slots, mixed prompt
 lengths, MTLA phase-aware batched cache (paper §4.1 inference).
 
-    PYTHONPATH=src python examples/serve_decode.py
+    PYTHONPATH=src python examples/serve_decode.py [--backend auto|ref|pallas]
 """
+import argparse
+
 import numpy as np
 import jax
 import jax.numpy as jnp
@@ -14,9 +16,16 @@ from repro.serving.engine import DecodeEngine, Request, cache_bytes
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--backend", default="auto",
+                    choices=["auto", "ref", "pallas"],
+                    help="attention backend (pallas = fused kernels; "
+                         "interpret mode off-TPU)")
+    args = ap.parse_args()
     cfg = mtla_variant(smoke_config("qwen2_7b"), s=2)
     params = api.init_model(jax.random.PRNGKey(0), cfg)
-    eng = DecodeEngine(params, cfg, batch=3, max_len=64, dtype=jnp.float32)
+    eng = DecodeEngine(params, cfg, batch=3, max_len=64, dtype=jnp.float32,
+                       backend=args.backend)
     rng = np.random.default_rng(7)
     reqs = [Request(rid=i, prompt=rng.integers(0, 97, size=(4 + 3 * i,)),
                     max_new=6 + i) for i in range(7)]
@@ -25,6 +34,8 @@ def main():
         print(f"req {rid}: {len(out[rid])} tokens -> {out[rid]}")
     print(f"decode steps: {eng.steps} (continuous batching across "
           f"{len(reqs)} requests on 3 slots)")
+    print(f"prefill calls: {eng.prefill_calls} (one jitted right-padded "
+          f"batch per admission round)")
     print(f"cache bytes: {cache_bytes(eng.caches):,} "
           f"(t = ceil(len/s) slots per sequence)")
 

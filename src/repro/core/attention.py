@@ -18,7 +18,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from . import masks, mtla
+from . import dispatch, masks, mtla
 from .nn import dense, dense_init, norm_apply, norm_init, rms_norm_nd
 from .rope import apply_rope, rope_cos_sin
 from .types import AttentionConfig
@@ -198,15 +198,19 @@ def _mla_train(p, cfg: AttentionConfig, x, positions):
     return dense(p["wo"], ctx), (c, kr)
 
 
-def _mtla_train(p, cfg: AttentionConfig, x, positions, use_kernels: bool = False):
-    """MTLA training; impl selected by cfg.mtla_train_impl."""
+def _mtla_train(p, cfg: AttentionConfig, x, positions, backend: str = "ref",
+                fresh: bool = True):
+    """MTLA training; impl selected by cfg.mtla_train_impl, execution backend
+    by ``backend`` (core/dispatch.py). The fused kernels assume fresh
+    positions 0..T-1; ``fresh=False`` (caller-supplied positions) forces the
+    reference path."""
     B, T, _ = x.shape
     s = cfg.s
     q_nope, q_rope, c, kr = _latent_qcr(p, cfg, x, positions)
     pos_row = positions[0] if positions.ndim == 2 else positions
     chunk_idx = pos_row // s
-    g = mtla.merge_gates(p, c, chunk_idx[None, :].repeat(B, 0))
-    P, C_hat = mtla.temporal_merge(c, g, s)
+    be = backend if fresh else "ref"
+    P, C_hat = dispatch.mtla_train_merge(p, c, chunk_idx, s, backend=be)
     scale = mtla.default_scale(cfg.head_dim, cfg.softmax_scale)
 
     if cfg.mtla_train_impl == "masked":
@@ -220,22 +224,28 @@ def _mtla_train(p, cfg: AttentionConfig, x, positions, use_kernels: bool = False
         v_chunk = dense(p["w_uv"], C_hat)
         k_self = dense(p["w_uk"], P)
         v_self = dense(p["w_uv"], P)
-        ctx = mtla.attention_compressed(
+        ctx = dispatch.mtla_train_attention(
             q_nope, q_rope, k_chunk, v_chunk, kr_chunk,
-            k_self, v_self, kr, s, scale, q_chunk=cfg.q_chunk,
+            k_self, v_self, kr, s, scale, backend=be, q_chunk=cfg.q_chunk,
             positions=pos_row, sm_dtype=_sm_dtype(cfg))
     ctx = ctx.reshape(B, T, -1)
-    return dense(p["wo"], ctx), (c, kr, P, C_hat, g)
+    return dense(p["wo"], ctx), (c, kr, P, C_hat)
 
 
 # ---------------------------------------------------------------------------
 # public API
 # ---------------------------------------------------------------------------
 
+def _resolve_backend(cfg: AttentionConfig, backend):
+    return dispatch.resolve(backend, use_pallas=cfg.use_pallas)
+
+
 def attn_train(p, cfg: AttentionConfig, x, *, positions=None,
-               window: int = 0, causal: bool = True):
-    """x [B,T,d] -> y [B,T,d]. window/causal only apply to standard kinds."""
+               window: int = 0, causal: bool = True, backend=None):
+    """x [B,T,d] -> y [B,T,d]. window/causal only apply to standard kinds;
+    backend ('auto'|'ref'|'pallas', core/dispatch.py) to latent kinds."""
     B, T, _ = x.shape
+    fresh = positions is None
     if positions is None:
         positions = jnp.arange(T)[None, :].repeat(B, 0)
     elif positions.ndim == 1:
@@ -245,7 +255,9 @@ def attn_train(p, cfg: AttentionConfig, x, *, positions=None,
     elif cfg.kind == "mla":
         y, _ = _mla_train(p, cfg, x, positions)
     elif cfg.kind == "mtla":
-        y, _ = _mtla_train(p, cfg, x, positions)
+        y, _ = _mtla_train(p, cfg, x, positions,
+                           backend=_resolve_backend(cfg, backend),
+                           fresh=fresh)
     else:
         raise ValueError(cfg.kind)
     return y
@@ -275,11 +287,21 @@ def init_attn_cache(cfg: AttentionConfig, batch: int, max_len: int,
     }
 
 
-def attn_prefill(p, cfg: AttentionConfig, x, cache, *, window: int = 0):
+def attn_prefill(p, cfg: AttentionConfig, x, cache, *, window: int = 0,
+                 backend=None, lengths=None):
     """Run the train path AND fill the decode cache. Fresh sequences only
-    (positions 0..T-1)."""
+    (positions 0..T-1).
+
+    lengths [B] (optional): per-sequence prompt lengths for right-padded
+    batched prefill — tokens at positions >= lengths[b] are padding. Causal
+    masking keeps pad tokens out of every real position's output; the cache
+    is populated so that decode continues from position lengths[b] exactly
+    as if each sequence had been prefilled alone at its own length.
+    """
     B, T, _ = x.shape
     positions = jnp.arange(T)[None, :].repeat(B, 0)
+    seq_pos = (jnp.full((B,), T, jnp.int32) if lengths is None
+               else lengths.astype(jnp.int32))
     if cfg.kind in ("mha", "mqa", "gqa"):
         y, (k, v) = _std_train(p, cfg, x, positions, window)
         L = cache["k"].shape[1]
@@ -288,9 +310,15 @@ def attn_prefill(p, cfg: AttentionConfig, x, cache, *, window: int = 0):
                 cache["k"], k.astype(cache["k"].dtype), 0, 1)
             cache["v"] = jax.lax.dynamic_update_slice_in_dim(
                 cache["v"], v.astype(cache["v"].dtype), 0, 1)
+            # pad slots carry slot_pos >= lengths[b]: masked out by the
+            # decode rule sp <= pos until overwritten
             cache["slot_pos"] = jax.lax.dynamic_update_slice_in_dim(
                 cache["slot_pos"], positions.astype(jnp.int32), 0, 1)
         else:  # ring buffer: keep the last L positions
+            if lengths is not None:
+                raise ValueError(
+                    "right-padded batched prefill is unsupported for ring "
+                    "(sliding-window) caches; prefill per sequence instead")
             sel = jnp.arange(T - L, T)
             slots = sel % L
             cache["k"] = cache["k"].at[:, slots].set(
@@ -299,32 +327,55 @@ def attn_prefill(p, cfg: AttentionConfig, x, cache, *, window: int = 0):
                 v[:, sel].astype(cache["v"].dtype))
             cache["slot_pos"] = cache["slot_pos"].at[:, slots].set(
                 sel[None, :].astype(jnp.int32).repeat(B, 0))
-        cache["pos"] = jnp.full((B,), T, jnp.int32)
+        cache["pos"] = seq_pos
         return y, cache
     if cfg.kind == "mla":
         y, (c, kr) = _mla_train(p, cfg, x, positions)
+        # pad-position latents land in slots >= lengths[b]: excluded by the
+        # decode validity mask (slot <= pos) until overwritten
         cache["c"] = jax.lax.dynamic_update_slice_in_dim(
             cache["c"], c.astype(cache["c"].dtype), 0, 1)
         cache["kr"] = jax.lax.dynamic_update_slice_in_dim(
             cache["kr"], kr.astype(cache["kr"].dtype), 0, 1)
-        cache["pos"] = jnp.full((B,), T, jnp.int32)
+        cache["pos"] = seq_pos
         return y, cache
     # mtla
-    y, (c, kr, P, C_hat, g) = _mtla_train(p, cfg, x, positions)
+    be = _resolve_backend(cfg, backend)
+    y, (c, kr, P, C_hat) = _mtla_train(p, cfg, x, positions, backend=be)
     s = cfg.s
     t = C_hat.shape[1]
-    kr_chunk = mtla.chunk_final_rope_keys(kr, s)
-    # last (possibly partial) chunk already holds the state at T-1 (padding
-    # contributes zero), and its RoPE slot holds kr[T-1] — both match decode.
+    if lengths is None:
+        kr_chunk = mtla.chunk_final_rope_keys(kr, s)
+        # last (possibly partial) chunk already holds the state at T-1
+        # (padding contributes zero), and its RoPE slot holds kr[T-1] —
+        # both match decode.
+        cc, ckr = C_hat, kr_chunk
+    else:
+        # per-sequence chunk states from the prefix sequence P: slot j holds
+        # the merge state at its final member position, clamped to the last
+        # real token — P at a full chunk's final position equals C_hat[j],
+        # and the clamp keeps pad-token contributions out of the partial
+        # chunk. Slots past the last real chunk are zeroed (decode re-opens
+        # them at phase k == 0).
+        last = seq_pos - 1                                       # [B]
+        chunk_ids = jnp.arange(t)
+        idx = jnp.minimum(chunk_ids[None, :] * s + (s - 1),
+                          last[:, None])                         # [B,t]
+        cc = jnp.take_along_axis(P, idx[:, :, None], axis=1)
+        ckr = jnp.take_along_axis(kr, idx[:, :, None], axis=1)
+        live = (chunk_ids[None, :] <= (last // s)[:, None])[..., None]
+        cc = jnp.where(live, cc, 0).astype(P.dtype)
+        ckr = jnp.where(live, ckr, 0).astype(kr.dtype)
     cache["c"] = jax.lax.dynamic_update_slice_in_dim(
-        cache["c"], C_hat.astype(cache["c"].dtype), 0, 1)
+        cache["c"], cc.astype(cache["c"].dtype), 0, 1)
     cache["kr"] = jax.lax.dynamic_update_slice_in_dim(
-        cache["kr"], kr_chunk.astype(cache["kr"].dtype), 0, 1)
-    cache["pos"] = jnp.full((B,), T, jnp.int32)
+        cache["kr"], ckr.astype(cache["kr"].dtype), 0, 1)
+    cache["pos"] = seq_pos
     return y, cache
 
 
-def attn_decode(p, cfg: AttentionConfig, x_t, cache, *, window: int = 0):
+def attn_decode(p, cfg: AttentionConfig, x_t, cache, *, window: int = 0,
+                backend=None):
     """x_t [B,1,d] one new token per sequence; returns (y [B,1,d], cache)."""
     B = x_t.shape[0]
     pos = cache["pos"]                                   # [B]
@@ -361,30 +412,22 @@ def attn_decode(p, cfg: AttentionConfig, x_t, cache, *, window: int = 0):
     q_nope, q_rope, c, kr = _latent_qcr(p, cfg, x_t, pos[:, None])
     q_lat = mtla.absorbed_queries(q_nope[:, 0], p["w_uk"]["w"])   # [B,H,r]
     qr = q_rope[:, 0]                                             # [B,H,dr]
+    be = _resolve_backend(cfg, backend)
     if cfg.kind == "mla":
         bidx = jnp.arange(B)
         cache["c"] = cache["c"].at[bidx, pos].set(
             c[:, 0].astype(cache["c"].dtype))
         cache["kr"] = cache["kr"].at[bidx, pos].set(
             kr[:, 0].astype(cache["kr"].dtype))
-        tmax = cache["c"].shape[1]
-        logits = jnp.einsum("bhr,btr->bht", q_lat.astype(jnp.float32),
-                            cache["c"].astype(jnp.float32))
-        logits += jnp.einsum("bhp,btp->bht", qr.astype(jnp.float32),
-                             cache["kr"].astype(jnp.float32))
-        logits *= scale
-        valid = jnp.arange(tmax)[None, :] <= pos[:, None]
-        logits = jnp.where(valid[:, None, :], logits, NEG_INF)
-        pr = jax.nn.softmax(logits, -1)
-        ctx_lat = jnp.einsum("bht,btr->bhr", pr,
-                             cache["c"].astype(jnp.float32))
-        ctx = jnp.einsum("bhr,rhd->bhd", ctx_lat,
-                         p["w_uv"]["w"].astype(jnp.float32)).astype(x_t.dtype)
-    else:  # mtla
+        j = pos                                     # one cache slot per token
+    else:  # mtla: in-place chunk merge, then attend over j+1 chunk slots
         g_t = mtla.merge_gates(p, c[:, 0], pos // cfg.s)          # [B]
-        ctx, cache["c"], cache["kr"] = mtla.decode_step_s(
-            cache["c"], cache["kr"], pos, c[:, 0], kr[:, 0], g_t,
-            q_lat, qr, p["w_uv"]["w"], scale, cfg.s)
+        cache["c"], cache["kr"], j = mtla.decode_cache_update(
+            cache["c"], cache["kr"], pos, c[:, 0], kr[:, 0], g_t, cfg.s)
+    ctx_lat = dispatch.mtla_decode_attention(
+        q_lat, qr, cache["c"], cache["kr"], j, scale, backend=be)
+    ctx = jnp.einsum("bhr,rhd->bhd", ctx_lat,
+                     p["w_uv"]["w"].astype(jnp.float32)).astype(x_t.dtype)
     y = dense(p["wo"], ctx.reshape(B, 1, H * dh))
     cache["pos"] = pos + 1
     return y, cache

@@ -1,0 +1,171 @@
+"""Attention-backend dispatch: ``ref`` (pure jnp) vs ``pallas`` (fused).
+
+Every MTLA hot path has two interchangeable implementations:
+
+  - ``ref``    — the pure-jnp math in ``core/mtla.py`` / ``kernels/ref.py``
+                 (always available, differentiable, runs anywhere)
+  - ``pallas`` — the fused TPU kernels in ``kernels/`` (``kernels/ops.py``
+                 switches to ``interpret=True`` automatically off-TPU so the
+                 exact kernel bodies still run on CPU)
+
+``resolve`` turns a user-facing backend name (``auto`` | ``ref`` |
+``pallas``) into one of the two concrete backends; ``auto`` picks the fused
+kernels exactly when they compile natively (TPU). ``ModelConfig.backend``
+carries the knob through models and serving; the attention entry points in
+``core/attention.py`` accept it per call.
+
+The pallas training-path ops carry a ``jax.custom_vjp`` whose backward pass
+re-derives gradients through the reference implementation, so
+``backend="pallas"`` composes with ``jax.grad`` / training (fused forward,
+reference backward — the standard recompute trade).
+
+Constraint: the fused training kernels assume *fresh* sequences (positions
+``0..T-1``, the layout used by training and prefill). Callers with scattered
+positions must stay on ``ref`` — ``core/attention.py`` enforces this via its
+``fresh`` flag.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import mtla
+from .nn import dense
+from .rope import sinusoidal_pe
+from ..kernels import ops as kops
+from ..kernels import ref as kref
+
+BACKENDS = ("auto", "ref", "pallas")
+
+
+def resolve(backend: Optional[str] = None, *, use_pallas: bool = False) -> str:
+    """Map a requested backend to a concrete one ('ref' or 'pallas').
+
+    ``None``/'auto' prefers the fused kernels when they compile natively
+    (TPU) or when the legacy ``AttentionConfig.use_pallas`` flag is set;
+    otherwise the pure-jnp reference path.
+    """
+    if backend is None:
+        backend = "auto"
+    if backend == "auto":
+        if use_pallas or jax.default_backend() == "tpu":
+            return "pallas"
+        return "ref"
+    if backend not in ("ref", "pallas"):
+        raise ValueError(
+            f"unknown attention backend {backend!r}; expected one of "
+            f"{BACKENDS}")
+    return backend
+
+
+# ---------------------------------------------------------------------------
+# fused temporal merge (training): pallas forward, reference backward
+# ---------------------------------------------------------------------------
+
+def _merge_ref_puv(c, u, vpe, s: int):
+    P, C_hat, _ = kref.merge_ref(c, u, vpe, s)
+    return P, C_hat
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def _merge_fused(c, u, vpe, s: int):
+    return kops.mtla_merge(c, u, vpe, s)
+
+
+def _merge_fused_fwd(c, u, vpe, s: int):
+    return _merge_fused(c, u, vpe, s), (c, u, vpe)
+
+
+def _merge_fused_bwd(s: int, res, g):
+    c, u, vpe = res
+    _, vjp = jax.vjp(lambda c_, u_, v_: _merge_ref_puv(c_, u_, v_, s),
+                     c, u, vpe)
+    return vjp(g)
+
+
+_merge_fused.defvjp(_merge_fused_fwd, _merge_fused_bwd)
+
+
+def mtla_train_merge(p, c, chunk_idx, s: int, *, backend: str):
+    """Hyper-gate + chunked temporal merge -> (P [B,T,r], C_hat [B,t,r]).
+
+    p: attention params holding the hyper-net tracks ``w_hc``/``w_hp``;
+    c [B,T,r] post-norm latents; chunk_idx [T] = positions // s (fresh).
+    """
+    B, T, r = c.shape
+    if backend != "pallas":
+        g = mtla.merge_gates(p, c, jnp.broadcast_to(chunk_idx, (B, T)))
+        return mtla.temporal_merge(c, g, s)
+    u = dense(p["w_hc"], c)                               # [B,T,h]
+    pe = sinusoidal_pe(chunk_idx, r).astype(c.dtype)
+    vpe = dense(p["w_hp"], pe)                            # [T,h]
+    pad = (-T) % s
+    if pad:  # zero latents contribute nothing to the gated prefix-sum
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+        u = jnp.pad(u, ((0, 0), (0, pad), (0, 0)))
+        vpe = jnp.pad(vpe, ((0, pad), (0, 0)))
+    P, C_hat = _merge_fused(c, u, vpe, s)
+    return P[:, :T], C_hat
+
+
+# ---------------------------------------------------------------------------
+# fused compressed training attention: pallas forward, reference backward
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(8, 9))
+def _attn_fused(qn, qr, kc, vc, krc, ks, vs, krs, s: int, scale: float):
+    return kops.mtla_attn(qn, qr, kc, vc, krc, ks, vs, krs,
+                          s=s, scale=scale)
+
+
+def _attn_fused_fwd(qn, qr, kc, vc, krc, ks, vs, krs, s, scale):
+    out = _attn_fused(qn, qr, kc, vc, krc, ks, vs, krs, s, scale)
+    return out, (qn, qr, kc, vc, krc, ks, vs, krs)
+
+
+def _attn_fused_bwd(s, scale, res, g):
+    _, vjp = jax.vjp(
+        lambda *a: kref.mtla_attn_ref(*a, s=s, scale=scale), *res)
+    return vjp(g)
+
+
+_attn_fused.defvjp(_attn_fused_fwd, _attn_fused_bwd)
+
+
+def mtla_train_attention(q_nope, q_rope, k_chunk, v_chunk, kr_chunk,
+                         k_self, v_self, kr_self, s: int, scale: float, *,
+                         backend: str, q_chunk: int = 0,
+                         positions=None, sm_dtype=jnp.float32):
+    """Compressed MTLA training attention in model layout [B,T,H,d].
+
+    Dispatches to the fused streaming kernel (backend='pallas'; requires
+    fresh positions 0..T-1) or the chunked jnp path.
+    """
+    if backend != "pallas":
+        return mtla.attention_compressed(
+            q_nope, q_rope, k_chunk, v_chunk, kr_chunk,
+            k_self, v_self, kr_self, s, scale, q_chunk=q_chunk,
+            positions=positions, sm_dtype=sm_dtype)
+    tr = lambda a: jnp.swapaxes(a, 1, 2)                  # [B,T,H,d]<->[B,H,T,d]
+    ctx = _attn_fused(tr(q_nope), tr(q_rope), tr(k_chunk), tr(v_chunk),
+                      kr_chunk, tr(k_self), tr(v_self), kr_self, s, scale)
+    return tr(ctx)
+
+
+# ---------------------------------------------------------------------------
+# decode-step attention over the latent cache (MLA and MTLA hot loop)
+# ---------------------------------------------------------------------------
+
+def mtla_decode_attention(q_lat, q_rope, cache_c, cache_kr, j, scale: float,
+                          *, backend: str):
+    """Absorbed decode attention -> ctx_lat [B,H,r] fp32.
+
+    q_lat [B,H,r], q_rope [B,H,dr], cache_c [B,t,r], cache_kr [B,t,dr],
+    j [B] last valid cache slot per sequence.
+    """
+    if backend == "pallas":
+        return kops.mtla_decode(q_lat, q_rope, cache_c, cache_kr, j, scale)
+    return mtla.decode_attend_ref(q_lat, q_rope, cache_c, cache_kr, j, scale)

@@ -167,22 +167,18 @@ def attention_compressed(q_nope, q_rope, k_chunk, v_chunk, kr_chunk,
 # incremental decode (absorbed form, Eq. 12/17)
 # ---------------------------------------------------------------------------
 
-def decode_step_s(cache_c, cache_kr, pos, c_t, kr_t, g_t,
-                  q_lat, q_rope, w_uv, scale: float, s: int):
-    """One MTLA decode step (§4.1), batched with per-sequence positions.
+def decode_cache_update(cache_c, cache_kr, pos, c_t, kr_t, g_t, s: int):
+    """In-place chunk merge of one incoming token (§4.1 'merge or open').
 
     cache_c  [B, tmax, r]    latent chunk cache
     cache_kr [B, tmax, dr]   per-chunk RoPE key cache
     pos      [B] int32       absolute position i of the incoming token
     c_t      [B, r]          new latent (post-norm), kr_t [B, dr] RoPE'd key
     g_t      [B]             hyper-network gate for the new token
-    q_lat    [B, H, r]       absorbed queries (q_nope @ W_UK per head)
-    q_rope   [B, H, dr]
-    w_uv     [r, H, dh]
     s        static temporal compression ratio
-    Returns (ctx [B,H,dh], cache_c, cache_kr).
+    Returns (cache_c, cache_kr, j [B] — each sequence's last valid slot).
     """
-    B, tmax, r = cache_c.shape
+    B = cache_c.shape[0]
     j = pos // s                       # chunk slot of the incoming token
     k = pos % s                        # phase within the chunk
     bidx = jnp.arange(B)
@@ -193,7 +189,14 @@ def decode_step_s(cache_c, cache_kr, pos, c_t, kr_t, g_t,
                     * c_t.astype(jnp.float32)).astype(cache_c.dtype)
     cache_c = cache_c.at[bidx, j].set(new_c)
     cache_kr = cache_kr.at[bidx, j].set(kr_t.astype(cache_kr.dtype))
+    return cache_c, cache_kr, j
 
+
+def decode_attend_ref(q_lat, q_rope, cache_c, cache_kr, j, scale: float):
+    """Absorbed decode attention over the latent cache -> ctx_lat [B,H,r]
+    fp32 (the pure-jnp side of the backend dispatch; kernel equivalent in
+    kernels/mtla_decode.py)."""
+    tmax = cache_c.shape[1]
     logits = jnp.einsum("bhr,btr->bht", q_lat.astype(jnp.float32),
                         cache_c.astype(jnp.float32))
     logits = logits + jnp.einsum("bhp,btp->bht", q_rope.astype(jnp.float32),
@@ -202,7 +205,22 @@ def decode_step_s(cache_c, cache_kr, pos, c_t, kr_t, g_t,
     valid = jnp.arange(tmax)[None, :] <= j[:, None]     # slots 0..j
     logits = jnp.where(valid[:, None, :], logits, NEG_INF)
     p = _softmax(logits)
-    ctx_lat = jnp.einsum("bht,btr->bhr", p, cache_c.astype(jnp.float32))
+    return jnp.einsum("bht,btr->bhr", p, cache_c.astype(jnp.float32))
+
+
+def decode_step_s(cache_c, cache_kr, pos, c_t, kr_t, g_t,
+                  q_lat, q_rope, w_uv, scale: float, s: int):
+    """One MTLA decode step (§4.1), batched with per-sequence positions.
+
+    q_lat [B, H, r] absorbed queries (q_nope @ W_UK per head), q_rope
+    [B, H, dr], w_uv [r, H, dh]; remaining args as decode_cache_update.
+    Returns (ctx [B,H,dh], cache_c, cache_kr). Reference composition of
+    decode_cache_update + decode_attend_ref; the serving hot loop routes
+    the attend through core/dispatch.py instead.
+    """
+    cache_c, cache_kr, j = decode_cache_update(cache_c, cache_kr, pos,
+                                               c_t, kr_t, g_t, s)
+    ctx_lat = decode_attend_ref(q_lat, q_rope, cache_c, cache_kr, j, scale)
     ctx = jnp.einsum("bhr,rhd->bhd", ctx_lat, w_uv.astype(jnp.float32))
     return ctx.astype(c_t.dtype), cache_c, cache_kr
 

@@ -93,6 +93,10 @@ class ModelConfig:
     attn: AttentionConfig = field(default_factory=AttentionConfig)
     moe: Optional[MoEConfig] = None
     ssm: Optional[SSMConfig] = None
+    # attention execution backend: "auto" resolves to the fused Pallas
+    # kernels on TPU and the pure-jnp reference path elsewhere
+    # (core/dispatch.py); "ref"/"pallas" force one side.
+    backend: str = "auto"
     norm: str = "rmsnorm"   # rmsnorm | layernorm
     norm_eps: float = 1e-5
     act: str = "silu"

@@ -65,8 +65,9 @@ def _attn_kernel(qn_ref, qr_ref, ks_ref, vs_ref, krs_ref,
 
     @pl.when(ki == nk - 1)
     def _final():
-        o_ref[0, 0] = (acc_ref[...]
-                       / l_ref[...][:, None]).astype(o_ref.dtype)
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-30)[:, None]
+                       ).astype(o_ref.dtype)
 
 
 def mtla_attn_pallas(q_nope, q_rope, k_chunk, v_chunk, kr_chunk,

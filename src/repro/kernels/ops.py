@@ -29,7 +29,8 @@ def mtla_merge(c, u, vpe, s: int, block_t: int = 512):
                              interpret=_interpret())
 
 
-@functools.partial(jax.jit, static_argnames=("s", "block_q", "block_k"))
+@functools.partial(jax.jit,
+                   static_argnames=("s", "scale", "block_q", "block_k"))
 def mtla_attn(q_nope, q_rope, k_chunk, v_chunk, kr_chunk,
               k_self, v_self, kr_self, s: int, scale: float,
               block_q: int = 256, block_k: int = 256):
@@ -39,7 +40,7 @@ def mtla_attn(q_nope, q_rope, k_chunk, v_chunk, kr_chunk,
                             interpret=_interpret())
 
 
-@functools.partial(jax.jit, static_argnames=("block_k",))
+@functools.partial(jax.jit, static_argnames=("scale", "block_k"))
 def mtla_decode(q_lat, q_rope, cache_c, cache_kr, j, scale: float,
                 block_k: int = 512):
     return mtla_decode_pallas(q_lat, q_rope, cache_c, cache_kr, j, scale,

@@ -136,7 +136,8 @@ def decode_train(params, cfg: ModelConfig, tgt_tokens, enc_out,
     def body(h, lp):
         a = attn_train(lp["attn"], cfg.attn,
                        norm_apply(lp["ln1"], h, eps=cfg.norm_eps,
-                                  kind=cfg.norm))
+                                  kind=cfg.norm),
+                       backend=cfg.backend)
         h = h + a
         kv = cross_kv(lp["xattn"], enc_out)
         c = cross_attn_apply(lp["xattn"], cfg,
@@ -202,7 +203,8 @@ def encdec_decode(params, cfg: ModelConfig, token, caches,
         lp, c = scanned
         a, ac = attn_decode(lp["attn"], cfg.attn,
                             norm_apply(lp["ln1"], h, eps=cfg.norm_eps,
-                                       kind=cfg.norm), c["attn"])
+                                       kind=cfg.norm), c["attn"],
+                            backend=cfg.backend)
         h = h + a
         xc = cross_attn_apply(
             lp["xattn"], cfg,

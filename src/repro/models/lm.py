@@ -116,7 +116,8 @@ def _block_train(lp, cfg: ModelConfig, x, window: int):
         return x + h, aux
     if fam == "hybrid":
         xin = norm_apply(lp["ln1"], x, eps=eps, kind=cfg.norm)
-        a = attn_train(lp["attn"], cfg.attn, xin, window=window)
+        a = attn_train(lp["attn"], cfg.attn, xin, window=window,
+                       backend=cfg.backend)
         s = ssm_mod.ssm_train(lp["ssm"], cfg.ssm, xin, cfg.d_model)
         a = norm_apply(lp["attn_out_norm"], a, eps=eps)
         s = norm_apply(lp["ssm_out_norm"], s, eps=eps)
@@ -129,7 +130,7 @@ def _block_train(lp, cfg: ModelConfig, x, window: int):
     # dense / moe / vlm
     a = attn_train(lp["attn"], cfg.attn,
                    norm_apply(lp["ln1"], x, eps=eps, kind=cfg.norm),
-                   window=window)
+                   window=window, backend=cfg.backend)
     h = x + a
     hin = norm_apply(lp["ln2"], h, eps=eps, kind=cfg.norm)
     if fam == "moe":
@@ -226,11 +227,18 @@ def init_lm_caches(cfg: ModelConfig, batch: int, max_len: int,
     return stack(cfg.num_layers, cfg.attn.sliding_window)
 
 
-def _block_serve(lp, cfg: ModelConfig, x, cache, window: int, phase: str):
-    """phase: 'prefill' or 'decode'. Returns (y, cache)."""
+def _block_serve(lp, cfg: ModelConfig, x, cache, window: int, phase: str,
+                 lengths=None):
+    """phase: 'prefill' or 'decode'. Returns (y, cache). ``lengths`` [B]
+    enables right-padded batched prefill (prefill phase only)."""
     eps = cfg.norm_eps
     fam = cfg.family
-    attn_fn = attn_prefill if phase == "prefill" else attn_decode
+    akw = {"window": window, "backend": cfg.backend}
+    if phase == "prefill":
+        attn_fn = attn_prefill
+        akw["lengths"] = lengths
+    else:
+        attn_fn = attn_decode
     if fam == "ssm":
         xin = norm_apply(lp["ln1"], x, eps=eps, kind=cfg.norm)
         if phase == "prefill":
@@ -243,8 +251,7 @@ def _block_serve(lp, cfg: ModelConfig, x, cache, window: int, phase: str):
         return x + h, cache
     if fam == "hybrid":
         xin = norm_apply(lp["ln1"], x, eps=eps, kind=cfg.norm)
-        a, ac = attn_fn(lp["attn"], cfg.attn, xin, cache["attn"],
-                        window=window)
+        a, ac = attn_fn(lp["attn"], cfg.attn, xin, cache["attn"], **akw)
         if phase == "prefill":
             s, sc = ssm_mod.ssm_prefill(lp["ssm"], cfg.ssm, xin,
                                         cache["ssm"], cfg.d_model)
@@ -262,7 +269,7 @@ def _block_serve(lp, cfg: ModelConfig, x, cache, window: int, phase: str):
         return h + m, cache
     a, ac = attn_fn(lp["attn"], cfg.attn,
                     norm_apply(lp["ln1"], x, eps=eps, kind=cfg.norm),
-                    cache["attn"], window=window)
+                    cache["attn"], **akw)
     cache = dict(cache, attn=ac)
     h = x + a
     hin = norm_apply(lp["ln2"], h, eps=eps, kind=cfg.norm)
@@ -274,14 +281,15 @@ def _block_serve(lp, cfg: ModelConfig, x, cache, window: int, phase: str):
     return h + m, cache
 
 
-def _serve_stack(params, cfg: ModelConfig, x, caches, phase: str):
+def _serve_stack(params, cfg: ModelConfig, x, caches, phase: str,
+                 lengths=None):
     if cfg.family == "hybrid":
         new_caches = []
         for (window, _), gp, gc in zip(hybrid_groups(cfg),
                                        params["groups"], caches):
             def gbody(h, scanned, w=window):
                 lp, c = scanned
-                h, c2 = _block_serve(lp, cfg, h, c, w, phase)
+                h, c2 = _block_serve(lp, cfg, h, c, w, phase, lengths)
                 return h, c2
 
             x, gc2 = jax.lax.scan(gbody, x, (gp, gc))
@@ -290,7 +298,8 @@ def _serve_stack(params, cfg: ModelConfig, x, caches, phase: str):
 
     def body(h, scanned):
         lp, c = scanned
-        h, c2 = _block_serve(lp, cfg, h, c, cfg.attn.sliding_window, phase)
+        h, c2 = _block_serve(lp, cfg, h, c, cfg.attn.sliding_window, phase,
+                             lengths)
         return h, c2
 
     x, caches = jax.lax.scan(body, x, (params["layers"], caches))
@@ -298,15 +307,33 @@ def _serve_stack(params, cfg: ModelConfig, x, caches, phase: str):
 
 
 def lm_prefill(params, cfg: ModelConfig, tokens, caches, *,
-               prefix_embeds=None, dtype=jnp.bfloat16):
-    """Returns (last-position logits [B,vocab], caches)."""
+               prefix_embeds=None, dtype=jnp.bfloat16, lengths=None):
+    """Returns (last-position logits [B,vocab], caches).
+
+    lengths [B] (optional): per-sequence prompt lengths for right-padded
+    batched prefill (tokens[b, lengths[b]:] is padding). Logits are taken at
+    each sequence's own final real position. Incompatible with
+    prefix_embeds (the prefix would shift per-sequence offsets)."""
+    if lengths is not None and cfg.family in ("ssm", "hybrid"):
+        raise ValueError("right-padded batched prefill is unsupported for "
+                         "recurrent-state families (pad tokens would enter "
+                         "the SSM state); prefill per sequence instead")
     x = embed(params["embed"], tokens, dtype)
     if prefix_embeds is not None:
+        if lengths is not None:
+            raise ValueError("lengths-aware prefill does not support "
+                             "prefix_embeds")
         pe = dense(params["projector"], prefix_embeds.astype(dtype))
         x = jnp.concatenate([pe, x], axis=1)
-    x, caches = _serve_stack(params, cfg, x.astype(dtype), caches, "prefill")
+    x, caches = _serve_stack(params, cfg, x.astype(dtype), caches, "prefill",
+                             lengths)
     x = norm_apply(params["final_norm"], x, eps=cfg.norm_eps, kind=cfg.norm)
-    logits = lm_head(params, cfg, x[:, -1:])
+    if lengths is None:
+        xl = x[:, -1:]
+    else:
+        xl = jnp.take_along_axis(
+            x, (lengths.astype(jnp.int32) - 1)[:, None, None], axis=1)
+    logits = lm_head(params, cfg, xl)
     return logits[:, 0], caches
 
 

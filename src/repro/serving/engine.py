@@ -6,7 +6,20 @@ into free slots and decoding all active slots each step. Per-slot state
 (absolute position -> MTLA chunk phase i mod s) lives in the cache pytree,
 so a slot whose sequence is mid-chunk keeps accumulating into its partial
 latent vector while its neighbour opens a new chunk — the batched
-``decode_step_s`` handles both in one fused update.
+``decode_cache_update`` handles both in one fused update.
+
+Prefill is batched: all requests admitted in one scheduling round share a
+single right-padded jitted prefill call (prompts padded to a common bucketed
+length, per-sequence ``lengths`` keep pad tokens out of every cache), then
+the fresh cache rows are spliced into the live slots. Prompt shapes are
+bucketed to multiples of ``prefill_bucket`` so the prefill graph compiles
+once per bucket, not once per prompt length. Families with recurrent state
+(ssm/hybrid), frontend prefixes, or ring caches fall back to per-request
+prefill — right padding cannot be masked out of a recurrence.
+
+The attention backend (``ref`` jnp vs ``pallas`` fused kernels,
+core/dispatch.py) rides on ``cfg.backend`` into both the prefill graph and
+the decode hot loop; ``DecodeEngine(backend=...)`` overrides it per engine.
 
 The KV-cache memory accounting (``cache_bytes``) backs the paper-table
 benchmarks (GPU-memory columns of Tables 1-5).
@@ -14,7 +27,7 @@ benchmarks (GPU-memory columns of Tables 1-5).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, List, Optional
+from typing import Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -43,44 +56,103 @@ class DecodeEngine:
     """Greedy decoding engine. One model, `batch` slots, shared cache."""
 
     def __init__(self, params, cfg: ModelConfig, *, batch: int,
-                 max_len: int, dtype=jnp.float32, eos: Optional[int] = None):
+                 max_len: int, dtype=jnp.float32, eos: Optional[int] = None,
+                 backend: Optional[str] = None, prefill_bucket: int = 16):
+        if backend is not None:
+            cfg = cfg.replace(backend=backend)
         self.params, self.cfg = params, cfg
         self.batch, self.max_len, self.eos = batch, max_len, eos
         self.dtype = dtype
+        self.prefill_bucket = max(int(prefill_bucket), 1)
         self.caches = api.init_caches(cfg, batch, max_len, dtype=dtype,
                                       src_len=max(cfg.frontend_len, 4))
         self.slots: List[Optional[Request]] = [None] * batch
         self._decode = jax.jit(
             lambda p, tok, c: api.decode(p, cfg, tok, c, dtype=dtype))
+        self._prefill = jax.jit(
+            lambda p, b, c: api.prefill(p, cfg, b, c, dtype=dtype))
+        a = cfg.attn
+        ring = (a.kind in ("mha", "mqa", "gqa") and a.sliding_window
+                and a.sliding_window < max_len)
+        self._batched_prefill = (cfg.family in ("dense", "moe")
+                                 and cfg.frontend == "none" and not ring)
         self.steps = 0
+        self.prefill_calls = 0          # jitted prefill invocations
 
     # --- slot management ---------------------------------------------------
     def _free_slots(self) -> List[int]:
         return [i for i, s in enumerate(self.slots) if s is None]
 
     def add_request(self, req: Request) -> bool:
+        return self.add_requests([req]) == 1
+
+    def add_requests(self, reqs: Sequence[Request]) -> int:
+        """Admit up to len(free slots) requests from ``reqs`` (in order) and
+        prefill them — one jitted prefill call for the whole batch on the
+        batched path. Returns the number admitted."""
         free = self._free_slots()
-        if not free:
-            return False
-        slot = free[0]
-        self.slots[slot] = req
-        self._prefill_slot(slot, req)
-        return True
+        todo = list(reqs[:len(free)])
+        if not todo:
+            return 0
+        if not self._batched_prefill:
+            for slot, req in zip(free, todo):
+                self.slots[slot] = req
+                self._prefill_slot(slot, req)
+            return len(todo)
+
+        slots = free[:len(todo)]
+        lmax = max(len(r.prompt) for r in todo)
+        if lmax > self.max_len:
+            raise ValueError(f"prompt length {lmax} exceeds engine "
+                             f"max_len {self.max_len}")
+        bucket = self.prefill_bucket
+        lpad = min(-(-lmax // bucket) * bucket, self.max_len)
+        # full-width [batch, lpad] graph: shape varies only with the length
+        # bucket, so the prefill compiles once per bucket. Rows not being
+        # admitted run a dummy length-1 prompt and are never spliced.
+        toks = np.zeros((self.batch, lpad), np.int32)
+        lengths = np.ones((self.batch,), np.int32)
+        for slot, req in zip(slots, todo):
+            self.slots[slot] = req
+            toks[slot, :len(req.prompt)] = req.prompt
+            lengths[slot] = len(req.prompt)
+        fresh = api.init_caches(self.cfg, self.batch, self.max_len,
+                                dtype=self.dtype,
+                                src_len=max(self.cfg.frontend_len, 4))
+        logits, fresh = self._prefill(
+            self.params,
+            {"tokens": jnp.asarray(toks), "lengths": jnp.asarray(lengths)},
+            fresh)
+        self.prefill_calls += 1
+        nxt = np.asarray(jnp.argmax(logits, -1))
+        # splice the freshly prefilled rows into the live cache at `slots`
+        # (all cache leaves are layer-stacked: [L, B, ...])
+        idx = jnp.asarray(slots)
+
+        def splice(big, small):
+            if big.ndim < 2:
+                return big
+            return big.at[:, idx].set(small[:, idx].astype(big.dtype))
+
+        self.caches = jax.tree_util.tree_map(splice, self.caches, fresh)
+        for slot, req in zip(slots, todo):
+            req.out.append(int(nxt[slot]))
+        return len(todo)
 
     def _prefill_slot(self, slot: int, req: Request):
-        """Single-sequence prefill into one slot of the shared cache. Runs
-        the whole prompt through decode steps of batch 1 region (correct,
-        simple; a production engine would use a dedicated prefill graph)."""
+        """Fallback single-sequence prefill into one slot of the shared
+        cache (families whose state cannot be right-padded: recurrent ssm /
+        hybrid, frontend prefixes, ring caches)."""
         cfg = self.cfg
         single = api.init_caches(cfg, 1, self.max_len, dtype=self.dtype,
                                  src_len=max(cfg.frontend_len, 4))
         batch = {"tokens": jnp.asarray(req.prompt[None, :], jnp.int32)}
         logits, single = api.prefill(self.params, cfg, batch, single,
                                      dtype=self.dtype)
+        self.prefill_calls += 1
         tok = int(jnp.argmax(logits[0]))
         req.out.append(tok)
-        # splice the single-sequence cache into the batched cache at `slot`
-        # (all cache leaves are layer-stacked: [L, B, ...])
+
         def splice(big, small):
             if big.ndim < 2:
                 return big
@@ -120,8 +192,9 @@ class DecodeEngine:
         done: Dict[int, List[int]] = {}
         while (pending or any(s is not None for s in self.slots)) \
                 and self.steps < max_steps:
-            while pending and self._free_slots():
-                self.add_request(pending.pop(0))
+            if pending and self._free_slots():
+                n = self.add_requests(pending)
+                del pending[:n]
             for fin in self.step():
                 done[fin.rid] = fin.out
         return done

@@ -1,0 +1,26 @@
+"""Optional-hypothesis shim: property tests skip cleanly when the
+``hypothesis`` dev extra is absent, while deterministic tests in the same
+module keep running (the suite must always *collect* — CI installs
+hypothesis so everything runs there)."""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAS_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAS_HYPOTHESIS = False
+
+    def _skip_decorator(*_a, **_k):
+        def deco(fn):
+            return pytest.mark.skip(
+                reason="hypothesis not installed (dev extra)")(fn)
+        return deco
+
+    given = _skip_decorator
+    settings = _skip_decorator
+
+    class _AnyStrategy:
+        def __getattr__(self, _name):
+            return lambda *a, **k: None
+
+    st = _AnyStrategy()
