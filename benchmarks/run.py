@@ -20,10 +20,10 @@ def main() -> None:
                     help="run only modules whose name contains this "
                          "substring (e.g. 'bench_kernels')")
     args = ap.parse_args()
-    from . import (bench_asr, bench_kernels, bench_related, bench_slu,
-                   bench_st, bench_summarisation)
+    from . import (bench_asr, bench_kernels, bench_related, bench_serving,
+                   bench_slu, bench_st, bench_summarisation)
     mods = [bench_st, bench_summarisation, bench_asr, bench_slu,
-            bench_related, bench_kernels]
+            bench_related, bench_kernels, bench_serving]
     if args.only:
         mods = [m for m in mods if args.only in m.__name__]
         if not mods:

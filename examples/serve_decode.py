@@ -1,7 +1,9 @@
 """Continuous-batching serving demo: more requests than slots, mixed prompt
-lengths, MTLA phase-aware batched cache (paper §4.1 inference).
+lengths, MTLA phase-aware batched cache (paper §4.1 inference), K-token
+jitted decode bursts with per-request sampling.
 
-    PYTHONPATH=src python examples/serve_decode.py [--backend auto|ref|pallas]
+    PYTHONPATH=src python examples/serve_decode.py \
+        [--backend auto|ref|pallas] [--burst 8] [--temperature 0.8]
 """
 import argparse
 
@@ -13,6 +15,7 @@ from repro.configs import smoke_config
 from repro.core.types import mtla_variant
 from repro.models import api
 from repro.serving.engine import DecodeEngine, Request, cache_bytes
+from repro.serving.sampling import SamplingParams
 
 
 def main():
@@ -21,19 +24,28 @@ def main():
                     choices=["auto", "ref", "pallas"],
                     help="attention backend (pallas = fused kernels; "
                          "interpret mode off-TPU)")
+    ap.add_argument("--burst", type=int, default=8,
+                    help="decode tokens per jitted call / host sync")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="0 = greedy; > 0 samples per-request streams")
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--top-p", type=float, default=1.0)
     args = ap.parse_args()
     cfg = mtla_variant(smoke_config("qwen2_7b"), s=2)
     params = api.init_model(jax.random.PRNGKey(0), cfg)
     eng = DecodeEngine(params, cfg, batch=3, max_len=64, dtype=jnp.float32,
-                       backend=args.backend)
+                       backend=args.backend, burst=args.burst)
+    sp = SamplingParams(temperature=args.temperature, top_k=args.top_k,
+                        top_p=args.top_p)
     rng = np.random.default_rng(7)
     reqs = [Request(rid=i, prompt=rng.integers(0, 97, size=(4 + 3 * i,)),
-                    max_new=6 + i) for i in range(7)]
+                    max_new=6 + i, sampling=sp) for i in range(7)]
     out = eng.run(reqs)
     for rid in sorted(out):
         print(f"req {rid}: {len(out[rid])} tokens -> {out[rid]}")
-    print(f"decode steps: {eng.steps} (continuous batching across "
-          f"{len(reqs)} requests on 3 slots)")
+    print(f"decode: {eng.steps} device steps in {eng.decode_calls} jitted "
+          f"bursts of <= {args.burst} (continuous batching across "
+          f"{len(reqs)} requests on 3 slots; one host sync per burst)")
     print(f"prefill calls: {eng.prefill_calls} (one jitted right-padded "
           f"batch per admission round)")
     print(f"cache bytes: {cache_bytes(eng.caches):,} "

@@ -376,7 +376,11 @@ def attn_prefill(p, cfg: AttentionConfig, x, cache, *, window: int = 0,
 
 def attn_decode(p, cfg: AttentionConfig, x_t, cache, *, window: int = 0,
                 backend=None):
-    """x_t [B,1,d] one new token per sequence; returns (y [B,1,d], cache)."""
+    """x_t [B,1,d] one new token per sequence; returns (y [B,1,d], cache).
+
+    Pure in its array arguments for every kind and backend, so the step
+    composes under ``lax.scan`` / ``while_loop`` (the serving engine rolls
+    K of these per jitted decode burst)."""
     B = x_t.shape[0]
     pos = cache["pos"]                                   # [B]
     scale = mtla.default_scale(cfg.head_dim, cfg.softmax_scale)
@@ -414,11 +418,13 @@ def attn_decode(p, cfg: AttentionConfig, x_t, cache, *, window: int = 0,
     qr = q_rope[:, 0]                                             # [B,H,dr]
     be = _resolve_backend(cfg, backend)
     if cfg.kind == "mla":
+        # mode="drop": a retired burst slot's pos can run past the cache
+        # capacity (serving/engine.py keeps decoding the full batch)
         bidx = jnp.arange(B)
         cache["c"] = cache["c"].at[bidx, pos].set(
-            c[:, 0].astype(cache["c"].dtype))
+            c[:, 0].astype(cache["c"].dtype), mode="drop")
         cache["kr"] = cache["kr"].at[bidx, pos].set(
-            kr[:, 0].astype(cache["kr"].dtype))
+            kr[:, 0].astype(cache["kr"].dtype), mode="drop")
         j = pos                                     # one cache slot per token
     else:  # mtla: in-place chunk merge, then attend over j+1 chunk slots
         g_t = mtla.merge_gates(p, c[:, 0], pos // cfg.s)          # [B]

@@ -177,18 +177,25 @@ def decode_cache_update(cache_c, cache_kr, pos, c_t, kr_t, g_t, s: int):
     g_t      [B]             hyper-network gate for the new token
     s        static temporal compression ratio
     Returns (cache_c, cache_kr, j [B] — each sequence's last valid slot).
+
+    Scan-compatible: pure in its array arguments, so the serving burst
+    (serving/engine.py) rolls it under ``lax.while_loop``. A retired burst
+    slot keeps advancing ``pos`` past the cache capacity; its writes target
+    slots >= tmax and are dropped explicitly (``mode="drop"`` / ``"clip"``)
+    rather than relying on default scatter semantics.
     """
     B = cache_c.shape[0]
     j = pos // s                       # chunk slot of the incoming token
     k = pos % s                        # phase within the chunk
     bidx = jnp.arange(B)
 
-    prev = cache_c[bidx, j]            # [B, r]
+    prev = cache_c.at[bidx, j].get(mode="clip")          # [B, r]
     base = jnp.where((k == 0)[:, None], jnp.zeros_like(prev), prev)
     new_c = base + (g_t[:, None].astype(jnp.float32)
                     * c_t.astype(jnp.float32)).astype(cache_c.dtype)
-    cache_c = cache_c.at[bidx, j].set(new_c)
-    cache_kr = cache_kr.at[bidx, j].set(kr_t.astype(cache_kr.dtype))
+    cache_c = cache_c.at[bidx, j].set(new_c, mode="drop")
+    cache_kr = cache_kr.at[bidx, j].set(kr_t.astype(cache_kr.dtype),
+                                        mode="drop")
     return cache_c, cache_kr, j
 
 

@@ -1,22 +1,25 @@
 """Serving driver: batched incremental decode with the continuous-batching
-engine; reports tokens/s and KV-cache bytes (the paper's efficiency axes).
+burst engine; reports per-phase timing (prefill seconds vs decode tokens/s)
+and KV-cache bytes split into active vs allocated (the paper's efficiency
+axes, with live occupancy).
 
     PYTHONPATH=src python -m repro.launch.serve --arch mtla_paper --smoke \
-        --requests 8 --batch 4 --max-new 32
+        --requests 8 --batch 4 --max-new 32 --burst 8 --backend auto
 """
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from ..configs import ALL_IDS, get_config, smoke_config
+from ..core import dispatch
 from ..core.types import mla_variant, mtla_variant
 from ..models import api
-from ..serving.engine import DecodeEngine, Request, cache_bytes
+from ..serving.engine import DecodeEngine, Request, cache_bytes_split
+from ..serving.sampling import SamplingParams
 
 
 def main(argv=None):
@@ -25,11 +28,21 @@ def main(argv=None):
     ap.add_argument("--attn", default=None)
     ap.add_argument("--s", type=int, default=2)
     ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--backend", default="auto",
+                    choices=["auto", "ref", "pallas"],
+                    help="attention backend (pallas = fused kernels; "
+                         "interpret mode off-TPU)")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=32)
     ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--burst", type=int, default=8,
+                    help="decode tokens per jitted call / host sync")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="0 = greedy; > 0 samples with per-request seeds")
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--top-p", type=float, default=1.0)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -46,21 +59,42 @@ def main(argv=None):
 
     params = api.init_model(jax.random.PRNGKey(args.seed), cfg)
     eng = DecodeEngine(params, cfg, batch=args.batch, max_len=args.max_len,
-                       dtype=jnp.float32)
+                       dtype=jnp.float32, backend=args.backend,
+                       burst=args.burst)
+    sp = SamplingParams(temperature=args.temperature, top_k=args.top_k,
+                        top_p=args.top_p)
     rng = np.random.default_rng(args.seed)
     reqs = [Request(rid=i,
                     prompt=rng.integers(0, cfg.vocab_size,
                                         size=(args.prompt_len,)),
-                    max_new=args.max_new)
+                    max_new=args.max_new, sampling=sp,
+                    seed=args.seed + i)
             for i in range(args.requests)]
-    t0 = time.time()
     out = eng.run(reqs)
-    dt = time.time() - t0
     total_toks = sum(len(v) for v in out.values())
-    print(f"arch={cfg.name} attn={cfg.attn.kind} s={cfg.attn.s}")
-    print(f"{len(out)} requests, {total_toks} tokens in {dt:.2f}s "
-          f"({total_toks / dt:.1f} tok/s incl. compile)")
-    print(f"kv-cache bytes: {cache_bytes(eng.caches):,} "
+    mode = "greedy" if sp.greedy else (
+        f"T={sp.temperature} top_k={sp.top_k} top_p={sp.top_p}")
+    resolved = dispatch.resolve(eng.cfg.backend,
+                                use_pallas=eng.cfg.attn.use_pallas)
+    be = (resolved if eng.cfg.backend == resolved
+          else f"{resolved} (from {eng.cfg.backend})")
+    print(f"arch={cfg.name} attn={cfg.attn.kind} s={cfg.attn.s} "
+          f"backend={be} burst={args.burst} sampling={mode}")
+    ok = len(out) - len(eng.failed)
+    print(f"{ok} requests served"
+          + (f", {len(eng.failed)} rejected" if eng.failed else "")
+          + f", {total_toks} tokens")
+    print(f"prefill: {eng.prefill_time_s:.2f}s "
+          f"({eng.prefill_calls} calls, {eng.prefill_tokens} prompt toks, "
+          f"incl. compile)")
+    rate = eng.decoded_tokens / max(eng.decode_time_s, 1e-9)
+    print(f"decode:  {eng.decoded_tokens} toks in {eng.decode_time_s:.2f}s "
+          f"({rate:.1f} tok/s incl. compile; {eng.decode_calls} bursts, "
+          f"{eng.steps} device steps, 1 host sync per burst)")
+    active, allocated = cache_bytes_split(eng.caches, eng.peak_active,
+                                          args.batch)
+    print(f"kv-cache bytes: active {active:,} (peak {eng.peak_active}/"
+          f"{args.batch} slots) / allocated {allocated:,} "
           f"({cfg.attn.kv_cache_per_token} elems/token/layer)")
     return out
 

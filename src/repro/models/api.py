@@ -74,3 +74,21 @@ def decode(params, cfg: ModelConfig, token, caches, *, dtype=jnp.bfloat16):
     if cfg.family == "encdec":
         return encdec_mod.encdec_decode(params, cfg, token, caches, dtype)
     return lm_mod.lm_decode(params, cfg, token, caches, dtype=dtype)
+
+
+def decode_step(params, cfg: ModelConfig, tok, caches, *,
+                dtype=jnp.bfloat16):
+    """Scan-compatible decode step: tok [B] int32 -> (logits [B,V], caches).
+
+    A pure pytree -> pytree function of its array arguments (no host syncs,
+    no data-dependent Python control flow), safe to roll under
+    ``jax.lax.scan`` / ``while_loop`` — the device-resident burst loop in
+    serving/engine.py runs K of these per jitted call with on-device token
+    feedback. Both attention backends compose: the MTLA latent-cache merge
+    (core/mtla.py::decode_cache_update) and the fused Pallas decode kernel
+    trace inline into the rolled loop.
+    """
+    if cfg.family == "encdec":
+        return encdec_mod.encdec_decode_step(params, cfg, tok, caches,
+                                             dtype=dtype)
+    return lm_mod.lm_decode_step(params, cfg, tok, caches, dtype=dtype)

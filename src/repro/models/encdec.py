@@ -221,3 +221,15 @@ def encdec_decode(params, cfg: ModelConfig, token, caches,
     x = norm_apply(params["final_norm"], x, eps=cfg.norm_eps, kind=cfg.norm)
     logits = dense(params["lm_head"], x)
     return logits[:, 0], caches
+
+
+def encdec_decode_step(params, cfg: ModelConfig, tok, caches, *,
+                       dtype=jnp.bfloat16):
+    """Scan-compatible step: tok [B] int32 -> (logits [B,vocab], caches).
+
+    Pure in its array arguments (cross-attention KV caches are read-only,
+    self-attention caches update functionally), so multi-token generation
+    can roll this under ``jax.lax.scan`` / ``while_loop`` exactly like the
+    LM families — used by the serving burst loop and tested directly in
+    tests/test_serving_burst.py."""
+    return encdec_decode(params, cfg, tok[:, None], caches, dtype)

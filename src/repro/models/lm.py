@@ -339,9 +339,23 @@ def lm_prefill(params, cfg: ModelConfig, tokens, caches, *,
 
 def lm_decode(params, cfg: ModelConfig, token, caches, *,
               dtype=jnp.bfloat16):
-    """token [B,1] int32 -> (logits [B,vocab], caches)."""
+    """token [B,1] int32 -> (logits [B,vocab], caches).
+
+    Functional in ``caches`` (every cache update builds a new pytree), so
+    the step composes under ``jax.lax.scan`` / ``while_loop`` — see
+    ``lm_decode_step`` for the flat-token wrapper the serving burst rolls.
+    """
     x = embed(params["embed"], token, dtype)
     x, caches = _serve_stack(params, cfg, x, caches, "decode")
     x = norm_apply(params["final_norm"], x, eps=cfg.norm_eps, kind=cfg.norm)
     logits = lm_head(params, cfg, x)
     return logits[:, 0], caches
+
+
+def lm_decode_step(params, cfg: ModelConfig, tok, caches, *,
+                   dtype=jnp.bfloat16):
+    """Scan-compatible step: tok [B] int32 -> (logits [B,vocab], caches).
+
+    The flat token layout matches the carry of the serving burst loop
+    (sampled tokens feed back on device without a host reshape)."""
+    return lm_decode(params, cfg, tok[:, None], caches, dtype=dtype)

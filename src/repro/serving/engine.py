@@ -1,12 +1,24 @@
-"""Continuous-batching decode engine with MTLA phase-aware caches.
+"""Device-resident continuous-batching decode engine with MTLA phase-aware
+caches.
 
 Requests arrive with prompts of different lengths; the engine packs up to
 ``batch`` concurrent sequences into fixed slots, prefilling new requests
-into free slots and decoding all active slots each step. Per-slot state
+into free slots and decoding all active slots together. Per-slot state
 (absolute position -> MTLA chunk phase i mod s) lives in the cache pytree,
 so a slot whose sequence is mid-chunk keeps accumulating into its partial
 latent vector while its neighbour opens a new chunk — the batched
 ``decode_cache_update`` handles both in one fused update.
+
+The decode hot loop is a **burst**: one jitted call rolls up to ``burst``
+decode steps in a ``lax.while_loop`` with on-device token feedback — the
+sampled token of step k is embedded at step k+1 without leaving the device.
+Per-slot lifecycle (done / EOS / max-new / cache-capacity tracking) and
+per-request sampling (greedy, temperature, top-k, top-p with per-slot
+seeded PRNG keys — serving/sampling.py) run inside the loop on a device
+``SlotState`` pytree, so the host syncs **once per K tokens** instead of
+once per token; the loop exits early as soon as every slot finishes
+mid-burst. Scheduling policy (admission order, slot assignment, oversized-
+prompt rejection, burst quota) lives in serving/scheduler.py.
 
 Prefill is batched: all requests admitted in one scheduling round share a
 single right-padded jitted prefill call (prompts padded to a common bucketed
@@ -19,15 +31,17 @@ prefill — right padding cannot be masked out of a recurrence.
 
 The attention backend (``ref`` jnp vs ``pallas`` fused kernels,
 core/dispatch.py) rides on ``cfg.backend`` into both the prefill graph and
-the decode hot loop; ``DecodeEngine(backend=...)`` overrides it per engine.
+the decode burst; ``DecodeEngine(backend=...)`` overrides it per engine.
 
-The KV-cache memory accounting (``cache_bytes``) backs the paper-table
-benchmarks (GPU-memory columns of Tables 1-5).
+The KV-cache memory accounting (``cache_bytes`` allocated,
+``cache_bytes_split`` active vs allocated) backs the paper-table benchmarks
+(GPU-memory columns of Tables 1-5).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -35,6 +49,9 @@ import numpy as np
 
 from ..core.types import ModelConfig
 from ..models import api
+from . import sampling
+from .sampling import SamplingParams
+from .scheduler import Scheduler
 
 
 @dataclasses.dataclass
@@ -42,8 +59,12 @@ class Request:
     rid: int
     prompt: np.ndarray                  # [Tp] int32
     max_new: int = 32
+    sampling: SamplingParams = dataclasses.field(
+        default_factory=SamplingParams)         # greedy by default
+    seed: Optional[int] = None          # per-request PRNG seed; None -> rid
     out: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    error: Optional[str] = None         # set when the request is rejected
 
 
 def cache_bytes(caches) -> int:
@@ -52,59 +73,205 @@ def cache_bytes(caches) -> int:
                if hasattr(a, "dtype"))
 
 
+def done_after_emit(tok, produced, length, max_new, eos, max_len):
+    """Shared per-slot termination predicate, evaluated right after a token
+    is emitted: the request finishes on reaching ``max_new``, on running
+    out of cache capacity (the next feed position would be >= ``max_len``),
+    or on EOS. Works on host scalars (admission-time first token) and on
+    batched device arrays (the jitted burst body) alike."""
+    done = (produced >= max_new) | (length > max_len)
+    if eos is not None:
+        done = done | (tok == eos)
+    return done
+
+
+def cache_bytes_split(caches, active_slots: int, batch: int
+                      ) -> Tuple[int, int]:
+    """(active, allocated) cache bytes: every cache leaf is slot-batched, so
+    live occupancy scales the allocation linearly. ``active_slots`` is
+    typically the engine's peak occupancy (``DecodeEngine.peak_active``)."""
+    allocated = cache_bytes(caches)
+    active = int(round(allocated * active_slots / max(batch, 1)))
+    return active, allocated
+
+
 class DecodeEngine:
-    """Greedy decoding engine. One model, `batch` slots, shared cache."""
+    """Continuous-batching engine: one model, ``batch`` slots, shared cache,
+    K-token jitted decode bursts with per-request sampling."""
 
     def __init__(self, params, cfg: ModelConfig, *, batch: int,
                  max_len: int, dtype=jnp.float32, eos: Optional[int] = None,
-                 backend: Optional[str] = None, prefill_bucket: int = 16):
+                 backend: Optional[str] = None, prefill_bucket: int = 16,
+                 burst: int = 8):
         if backend is not None:
             cfg = cfg.replace(backend=backend)
         self.params, self.cfg = params, cfg
         self.batch, self.max_len, self.eos = batch, max_len, eos
         self.dtype = dtype
         self.prefill_bucket = max(int(prefill_bucket), 1)
+        self.burst = max(int(burst), 1)
+        self.scheduler = Scheduler(batch, max_len)
         self.caches = api.init_caches(cfg, batch, max_len, dtype=dtype,
                                       src_len=max(cfg.frontend_len, 4))
-        self.slots: List[Optional[Request]] = [None] * batch
-        self._decode = jax.jit(
-            lambda p, tok, c: api.decode(p, cfg, tok, c, dtype=dtype))
+        self.state = self._init_state()
         self._prefill = jax.jit(
             lambda p, b, c: api.prefill(p, cfg, b, c, dtype=dtype))
+        self._sample = jax.jit(sampling.sample)
+        self._burst = jax.jit(self._make_burst())
         a = cfg.attn
         ring = (a.kind in ("mha", "mqa", "gqa") and a.sliding_window
                 and a.sliding_window < max_len)
         self._batched_prefill = (cfg.family in ("dense", "moe")
                                  and cfg.frontend == "none" and not ring)
-        self.steps = 0
+        self._finished: List[Request] = []
+        self.failed: List[Request] = []
+        self.burst_traces = 0           # burst graph traces (compilations)
+        self._reset_counters()
+
+    def _reset_counters(self):
+        self.steps = 0                  # decode steps executed on device
         self.prefill_calls = 0          # jitted prefill invocations
+        self.decode_calls = 0           # jitted burst invocations
+        self.decoded_tokens = 0         # tokens emitted by decode bursts
+        self.prefill_tokens = 0         # prompt tokens prefilled
+        self.prefill_time_s = 0.0
+        self.decode_time_s = 0.0
+        self.peak_active = 0
 
-    # --- slot management ---------------------------------------------------
-    def _free_slots(self) -> List[int]:
-        return [i for i, s in enumerate(self.slots) if s is None]
+    def reset(self):
+        """Drop all requests and re-init caches/state; compiled burst and
+        prefill graphs are kept (used by benchmarks to exclude compile)."""
+        self.caches = api.init_caches(self.cfg, self.batch, self.max_len,
+                                      dtype=self.dtype,
+                                      src_len=max(self.cfg.frontend_len, 4))
+        self.state = self._init_state()
+        self.scheduler.reset()
+        self._finished, self.failed = [], []
+        self._reset_counters()
 
+    @property
+    def slots(self):
+        return self.scheduler.slots
+
+    # --- device slot state -------------------------------------------------
+    def _init_state(self):
+        """SlotState pytree: per-slot lifecycle + sampling params as device
+        arrays, carried through the jitted burst loop."""
+        B = self.batch
+        return {
+            "tok": jnp.zeros((B,), jnp.int32),       # feedback token
+            "done": jnp.ones((B,), bool),            # empty slots are done
+            "produced": jnp.zeros((B,), jnp.int32),  # tokens emitted so far
+            "length": jnp.zeros((B,), jnp.int32),    # prompt + emitted
+            "max_new": jnp.zeros((B,), jnp.int32),
+            "rng": jnp.zeros((B, 2), jnp.uint32),    # per-slot PRNG key
+            "temp": jnp.ones((B,), jnp.float32),
+            "top_k": jnp.zeros((B,), jnp.int32),
+            "top_p": jnp.ones((B,), jnp.float32),
+            "greedy": jnp.ones((B,), bool),
+        }
+
+    # --- the jitted decode burst -------------------------------------------
+    def _make_burst(self):
+        cfg, dtype, eos = self.cfg, self.dtype, self.eos
+        K, B, max_len = self.burst, self.batch, self.max_len
+
+        def burst(params, state, caches, k_limit):
+            """Roll up to min(K, k_limit) decode steps in one jitted call.
+
+            Returns (state, caches, out_tok [K,B], out_valid [K,B], steps).
+            out_tok[k] holds the token sampled at step k; out_valid[k] marks
+            slots that were still live when it was drawn. The while_loop
+            exits early once every slot is done."""
+            self.burst_traces += 1      # trace-time side effect: counts
+            # compilations, not executions
+            out_tok = jnp.zeros((K, B), jnp.int32)
+            out_val = jnp.zeros((K, B), bool)
+            k_limit = jnp.minimum(k_limit, K)
+
+            def cond(carry):
+                k, state, _, _, _ = carry
+                return (k < k_limit) & jnp.any(~state["done"])
+
+            def body(carry):
+                k, state, caches, out_tok, out_val = carry
+                logits, caches = api.decode_step(params, cfg, state["tok"],
+                                                 caches, dtype=dtype)
+                nxt, rng = sampling.sample(
+                    state["rng"], logits, state["temp"], state["top_k"],
+                    state["top_p"], state["greedy"])
+                was_done = state["done"]
+                inc = jnp.where(was_done, 0, 1).astype(jnp.int32)
+                produced = state["produced"] + inc
+                length = state["length"] + inc
+                done = was_done | done_after_emit(
+                    nxt, produced, length, state["max_new"], eos, max_len)
+                state = dict(state,
+                             tok=jnp.where(was_done, state["tok"], nxt),
+                             done=done, produced=produced, length=length,
+                             rng=rng)
+                out_tok = out_tok.at[k].set(nxt)
+                out_val = out_val.at[k].set(~was_done)
+                return k + 1, state, caches, out_tok, out_val
+
+            k, state, caches, out_tok, out_val = jax.lax.while_loop(
+                cond, body,
+                (jnp.zeros((), jnp.int32), state, caches, out_tok, out_val))
+            return state, caches, out_tok, out_val, k
+
+        return burst
+
+    # --- admission ---------------------------------------------------------
     def add_request(self, req: Request) -> bool:
-        return self.add_requests([req]) == 1
+        """Admit one request; returns False if it was rejected (oversized)
+        or no slot is free. Rejected requests carry ``req.error``."""
+        plan = self.scheduler.plan([req])
+        self._apply_plan(plan)
+        return bool(plan.assignments)
 
     def add_requests(self, reqs: Sequence[Request]) -> int:
-        """Admit up to len(free slots) requests from ``reqs`` (in order) and
-        prefill them — one jitted prefill call for the whole batch on the
-        batched path. Returns the number admitted."""
-        free = self._free_slots()
-        todo = list(reqs[:len(free)])
-        if not todo:
-            return 0
-        if not self._batched_prefill:
-            for slot, req in zip(free, todo):
-                self.slots[slot] = req
-                self._prefill_slot(slot, req)
-            return len(todo)
+        """One admission round over the front of ``reqs`` (in order):
+        oversized prompts are marked failed and skipped, the rest fill free
+        slots and share a single jitted right-padded prefill call on the
+        batched path. Returns the number of requests consumed (admitted +
+        rejected); completions at admission time (max_new reached, EOS on
+        the first token) land in the finished queue immediately."""
+        plan = self.scheduler.plan(reqs)
+        self._apply_plan(plan)
+        return plan.consumed
 
-        slots = free[:len(todo)]
+    def _apply_plan(self, plan):
+        for req in plan.rejected:
+            req.done = True
+            req.error = (f"prompt length {len(req.prompt)} exceeds engine "
+                         f"max_len {self.max_len}")
+            self.failed.append(req)
+            self._finished.append(req)
+        if not plan.assignments:
+            return
+        self.scheduler.commit(plan)
+        t0 = time.perf_counter()
+        if self._batched_prefill:
+            logits = self._prefill_batched(plan.assignments)
+        else:
+            rows = np.zeros((self.batch, self.cfg.vocab_size), np.float32)
+            for slot, req in plan.assignments:
+                rows[slot] = self._prefill_one(req)
+            logits = jnp.asarray(rows)
+        self._admit_rows(plan.assignments)
+        self._first_tokens(plan.assignments, logits)
+        self.prefill_time_s += time.perf_counter() - t0
+        self.prefill_tokens += sum(len(r.prompt)
+                                   for _, r in plan.assignments)
+        self.peak_active = max(self.peak_active,
+                               len(self.scheduler.occupied()))
+
+    def _prefill_batched(self, assignments) -> jnp.ndarray:
+        """Single right-padded jitted prefill for the admitted slots; splices
+        the fresh cache rows into the live cache. Returns logits [B, V]."""
+        slots = [s for s, _ in assignments]
+        todo = [r for _, r in assignments]
         lmax = max(len(r.prompt) for r in todo)
-        if lmax > self.max_len:
-            raise ValueError(f"prompt length {lmax} exceeds engine "
-                             f"max_len {self.max_len}")
         bucket = self.prefill_bucket
         lpad = min(-(-lmax // bucket) * bucket, self.max_len)
         # full-width [batch, lpad] graph: shape varies only with the length
@@ -112,8 +279,7 @@ class DecodeEngine:
         # admitted run a dummy length-1 prompt and are never spliced.
         toks = np.zeros((self.batch, lpad), np.int32)
         lengths = np.ones((self.batch,), np.int32)
-        for slot, req in zip(slots, todo):
-            self.slots[slot] = req
+        for slot, req in assignments:
             toks[slot, :len(req.prompt)] = req.prompt
             lengths[slot] = len(req.prompt)
         fresh = api.init_caches(self.cfg, self.batch, self.max_len,
@@ -124,7 +290,6 @@ class DecodeEngine:
             {"tokens": jnp.asarray(toks), "lengths": jnp.asarray(lengths)},
             fresh)
         self.prefill_calls += 1
-        nxt = np.asarray(jnp.argmax(logits, -1))
         # splice the freshly prefilled rows into the live cache at `slots`
         # (all cache leaves are layer-stacked: [L, B, ...])
         idx = jnp.asarray(slots)
@@ -135,66 +300,121 @@ class DecodeEngine:
             return big.at[:, idx].set(small[:, idx].astype(big.dtype))
 
         self.caches = jax.tree_util.tree_map(splice, self.caches, fresh)
-        for slot, req in zip(slots, todo):
-            req.out.append(int(nxt[slot]))
-        return len(todo)
+        return logits
 
-    def _prefill_slot(self, slot: int, req: Request):
+    def _prefill_one(self, req: Request) -> np.ndarray:
         """Fallback single-sequence prefill into one slot of the shared
         cache (families whose state cannot be right-padded: recurrent ssm /
-        hybrid, frontend prefixes, ring caches)."""
+        hybrid, frontend prefixes, ring caches). Returns logits [V]."""
         cfg = self.cfg
+        slot = next(i for i, s in enumerate(self.scheduler.slots)
+                    if s is req)
         single = api.init_caches(cfg, 1, self.max_len, dtype=self.dtype,
                                  src_len=max(cfg.frontend_len, 4))
         batch = {"tokens": jnp.asarray(req.prompt[None, :], jnp.int32)}
         logits, single = api.prefill(self.params, cfg, batch, single,
                                      dtype=self.dtype)
         self.prefill_calls += 1
-        tok = int(jnp.argmax(logits[0]))
-        req.out.append(tok)
 
         def splice(big, small):
             if big.ndim < 2:
                 return big
             return big.at[:, slot:slot + 1].set(small.astype(big.dtype))
-        self.caches = jax.tree_util.tree_map(splice, self.caches, single)
 
-    # --- decode loop ---------------------------------------------------------
-    def step(self):
-        """One batched decode step across all active slots."""
-        toks = np.zeros((self.batch, 1), np.int32)
-        active = []
-        for i, s in enumerate(self.slots):
-            if s is not None and not s.done:
-                toks[i, 0] = s.out[-1]
-                active.append(i)
-        if not active:
+        self.caches = jax.tree_util.tree_map(splice, self.caches, single)
+        return np.asarray(logits[0], np.float32)
+
+    def _admit_rows(self, assignments):
+        """Write the admitted requests' lifecycle + sampling rows into the
+        device SlotState (per-slot PRNG keys seeded fresh from req.seed)."""
+        st = {k: np.array(v) for k, v in self.state.items()}
+        for slot, req in assignments:
+            sp = req.sampling
+            st["done"][slot] = False
+            st["produced"][slot] = 0
+            st["length"][slot] = len(req.prompt)
+            st["max_new"][slot] = req.max_new
+            st["temp"][slot] = max(sp.temperature, 0.0)
+            st["top_k"][slot] = sp.top_k
+            st["top_p"][slot] = sp.top_p
+            st["greedy"][slot] = sp.greedy
+            seed = req.rid if req.seed is None else req.seed
+            st["rng"][slot] = np.asarray(jax.random.PRNGKey(seed))
+        self.state = {k: jnp.asarray(v) for k, v in st.items()}
+
+    def _first_tokens(self, assignments, logits):
+        """Sample each admitted slot's first token from its prefill logits
+        (same per-slot sampler as the burst loop) and fold completions —
+        max_new=1, EOS, cache already full — back into the scheduler."""
+        tok, rng = self._sample(self.state["rng"], logits,
+                                self.state["temp"], self.state["top_k"],
+                                self.state["top_p"], self.state["greedy"])
+        tok, rng = np.asarray(tok), np.asarray(rng)
+        st = {k: np.array(v) for k, v in self.state.items()}
+        for slot, req in assignments:
+            t = int(tok[slot])
+            req.out.append(t)
+            st["tok"][slot] = t
+            st["rng"][slot] = rng[slot]     # only admitted rows advance
+            st["produced"][slot] = 1
+            st["length"][slot] += 1
+            if bool(done_after_emit(t, 1, st["length"][slot], req.max_new,
+                                    self.eos, self.max_len)):
+                st["done"][slot] = True
+                req.done = True
+                self.scheduler.release(slot)
+                self._finished.append(req)
+        self.state = {k: jnp.asarray(v) for k, v in st.items()}
+
+    # --- decode burst orchestration ----------------------------------------
+    def _burst_step(self) -> List[Request]:
+        """One jitted decode burst (<= ``burst`` tokens per slot) + one host
+        sync to harvest emitted tokens. Returns requests that finished."""
+        if not self.scheduler.any_active():
             return []
-        logits, self.caches = self._decode(
-            self.params, jnp.asarray(toks), self.caches)
-        nxt = np.asarray(jnp.argmax(logits, -1))
+        quota = self.scheduler.burst_quota(self.burst)
+        t0 = time.perf_counter()
+        state, caches, out_tok, out_val, k = self._burst(
+            self.params, self.state, self.caches,
+            jnp.asarray(quota, jnp.int32))
+        # the single host sync of the burst:
+        out_tok, out_val = np.asarray(out_tok), np.asarray(out_val)
+        done = np.asarray(state["done"])
+        self.decode_time_s += time.perf_counter() - t0
+        self.state, self.caches = state, caches
+        self.decode_calls += 1
+        self.steps += int(k)
         finished = []
-        for i in active:
-            s = self.slots[i]
-            tok = int(nxt[i])
-            s.out.append(tok)
-            if (self.eos is not None and tok == self.eos) or \
-                    len(s.out) >= s.max_new:
-                s.done = True
-                finished.append(s)
-                self.slots[i] = None
-        self.steps += 1
+        for slot, req in self.scheduler.occupied():
+            new = out_tok[out_val[:, slot], slot]
+            req.out.extend(int(t) for t in new)
+            self.decoded_tokens += len(new)
+            if done[slot]:
+                req.done = True
+                self.scheduler.release(slot)
+                finished.append(req)
         return finished
 
     def run(self, requests: List[Request], max_steps: int = 10_000
             ) -> Dict[int, List[int]]:
+        """Serve ``requests`` to completion with continuous batching; returns
+        {rid: tokens}. Rejected requests appear with their (empty) output
+        and ``req.error`` set — one oversized prompt never aborts the run."""
         pending = list(requests)
         done: Dict[int, List[int]] = {}
-        while (pending or any(s is not None for s in self.slots)) \
+
+        def drain():
+            while self._finished:
+                req = self._finished.pop()
+                done[req.rid] = req.out
+
+        while (pending or self.scheduler.any_active()) \
                 and self.steps < max_steps:
-            if pending and self._free_slots():
+            if pending and self.scheduler.free_slots():
                 n = self.add_requests(pending)
                 del pending[:n]
-            for fin in self.step():
+                drain()
+            for fin in self._burst_step():
                 done[fin.rid] = fin.out
+        drain()
         return done

@@ -1,0 +1,107 @@
+"""Per-request token sampling for the decode engine.
+
+Every slot in the batch carries its own sampling configuration (greedy /
+temperature / top-k / top-p) and its own PRNG key, all as device arrays, so
+one fused ``sample`` call draws the next token for the whole batch inside
+the jitted decode burst (serving/engine.py) — no host round-trip per token.
+
+Semantics per slot:
+  - ``greedy``            argmax of the raw logits (temperature et al. ignored)
+  - ``temperature`` T > 0 logits are scaled by 1/T before filtering
+  - ``top_k`` k > 0       keep only the k highest-scoring tokens (0 = off)
+  - ``top_p`` p < 1       nucleus filtering over the (top-k-masked) softmax:
+                          keep the smallest prefix of tokens, in probability
+                          order, whose mass reaches p; the most likely token
+                          is always kept (1.0 = off)
+
+Sampling draws via the Gumbel-max trick (argmax of filtered logits plus
+Gumbel noise == a categorical draw), which vectorizes over slots with
+per-slot keys. Keys advance exactly once per call per slot, so a request's
+token stream depends only on its seed and its own step count — not on burst
+size or on which other requests share the batch.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Host-side per-request sampling configuration.
+
+    ``temperature <= 0`` selects greedy decoding (the default); ``top_k=0``
+    and ``top_p=1.0`` disable their respective filters.
+    """
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+
+    @property
+    def greedy(self) -> bool:
+        return self.temperature <= 0.0
+
+
+GREEDY = SamplingParams()
+
+
+def split_keys(rng):
+    """rng [B,2] uint32 -> (rng' [B,2], sub [B,2]): one split per slot."""
+    pair = jax.vmap(jax.random.split)(rng)          # [B,2,2]
+    return pair[:, 0], pair[:, 1]
+
+
+def _filter_logits(x, top_k, top_p):
+    """Apply per-row top-k then top-p masks to scaled logits x [B,V]."""
+    V = x.shape[-1]
+    # top-k: threshold at each row's k-th largest value (k<=0 disables)
+    desc = jnp.sort(x, axis=-1)[:, ::-1]
+    k = jnp.clip(top_k, 1, V).astype(jnp.int32)
+    kth = jnp.take_along_axis(desc, (k - 1)[:, None], axis=-1)
+    keep = (top_k <= 0)[:, None] | (x >= kth)
+    xk = jnp.where(keep, x, NEG_INF)
+    # top-p (nucleus) over the top-k-filtered distribution: keep tokens whose
+    # EXCLUSIVE cumulative probability (in descending-prob order) is < p, so
+    # the top-1 token always survives.
+    order = jnp.argsort(-xk, axis=-1)
+    probs = jax.nn.softmax(xk, axis=-1)
+    sp = jnp.take_along_axis(probs, order, axis=-1)
+    excl = jnp.cumsum(sp, axis=-1) - sp
+    keep_sorted = excl < jnp.maximum(top_p, 1e-6)[:, None]
+    inv = jnp.argsort(order, axis=-1)
+    keep_p = jnp.take_along_axis(keep_sorted, inv, axis=-1)
+    keep &= (top_p >= 1.0)[:, None] | keep_p
+    return jnp.where(keep, x, NEG_INF)
+
+
+def sample(rng, logits, temperature, top_k, top_p, greedy):
+    """Draw one token per slot. All args are batched device arrays:
+
+    rng [B,2] uint32 per-slot PRNG keys; logits [B,V]; temperature [B] f32;
+    top_k [B] i32; top_p [B] f32; greedy [B] bool.
+    Returns (tokens [B] int32, rng' [B,2]). Deterministic given ``rng``;
+    keys advance exactly once per call regardless of the branch taken, so
+    a sampled slot's stream never depends on its batch neighbours. When
+    every slot is greedy (the common serving default) a ``lax.cond`` skips
+    the filter sorts and the Gumbel draw at runtime — the decode burst hot
+    loop pays one argmax, like the seed engine did.
+    """
+    logits = logits.astype(jnp.float32)
+    rng, sub = split_keys(rng)
+    greedy_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    def draw(_):
+        x = logits / jnp.maximum(temperature, 1e-3)[:, None]
+        x = _filter_logits(x, top_k, top_p)
+        V = logits.shape[-1]
+        noise = jax.vmap(
+            lambda k: jax.random.gumbel(k, (V,), jnp.float32))(sub)
+        sampled = jnp.argmax(x + noise, axis=-1).astype(jnp.int32)
+        return jnp.where(greedy, greedy_tok, sampled)
+
+    tok = jax.lax.cond(jnp.all(greedy), lambda _: greedy_tok, draw, None)
+    return tok, rng

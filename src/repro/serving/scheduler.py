@@ -1,0 +1,95 @@
+"""Scheduling policy for the decode engine: admission, slot assignment, and
+the burst-length quota — split from the device-resident burst loop
+(serving/engine.py) so policy can evolve without touching jitted code.
+
+The scheduler owns the host-side request <-> slot mapping. The engine asks
+it to ``plan`` an admission round over the pending queue (in arrival order),
+``commit`` the resulting assignments after prefill succeeds, and ``release``
+slots whose requests finish. Oversized prompts (longer than the engine's
+``max_len``) are *rejected* in the plan — marked failed and skipped — rather
+than aborting the whole admission round, so one bad request can never block
+its neighbours.
+
+Early exit is two-level: the device burst loop (a ``lax.while_loop``) stops
+as soon as every slot is done mid-burst, and ``burst_quota`` caps the loop
+bound at the maximum number of tokens any resident request can still emit,
+so a burst never books more device steps than the batch can use. The quota
+is a traced scalar — changing it between bursts does not recompile.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+
+@dataclasses.dataclass
+class AdmissionPlan:
+    """One admission round: slot assignments for admissible requests, the
+    oversized rejects, and how many entries were consumed from the front of
+    the pending queue (= admitted + rejected)."""
+    assignments: List[Tuple[int, object]]
+    rejected: List[object]
+    consumed: int
+
+
+class Scheduler:
+    """Slot bookkeeping + admission policy for ``batch`` decode slots."""
+
+    def __init__(self, batch: int, max_len: int):
+        self.batch, self.max_len = batch, max_len
+        self.slots: List[Optional[object]] = [None] * batch
+
+    # --- occupancy ---------------------------------------------------------
+    def free_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots) if s is None]
+
+    def occupied(self) -> List[Tuple[int, object]]:
+        return [(i, s) for i, s in enumerate(self.slots) if s is not None]
+
+    def any_active(self) -> bool:
+        return any(s is not None for s in self.slots)
+
+    def reset(self):
+        self.slots = [None] * self.batch
+
+    # --- admission ---------------------------------------------------------
+    def plan(self, pending: Sequence) -> AdmissionPlan:
+        """Walk ``pending`` in order, assigning free slots. Requests whose
+        prompt cannot fit the engine's cache are rejected (consumed, no slot)
+        and the scan continues — admission never raises mid-round."""
+        free = self.free_slots()
+        assignments, rejected, consumed = [], [], 0
+        for req in pending:
+            if len(req.prompt) > self.max_len:
+                rejected.append(req)
+                consumed += 1
+                continue
+            if not free:
+                break
+            assignments.append((free.pop(0), req))
+            consumed += 1
+        return AdmissionPlan(assignments, rejected, consumed)
+
+    def commit(self, plan: AdmissionPlan):
+        for slot, req in plan.assignments:
+            assert self.slots[slot] is None, f"slot {slot} already occupied"
+            self.slots[slot] = req
+
+    def release(self, slot: int):
+        req, self.slots[slot] = self.slots[slot], None
+        return req
+
+    # --- burst policy ------------------------------------------------------
+    def burst_quota(self, burst: int) -> int:
+        """Largest useful burst length right now: no resident request can
+        emit more than ``max_new - emitted`` further tokens, nor continue
+        past the cache capacity, so cap the device loop bound there. Returns
+        a value in [1, burst]; with an empty batch, 1 (the device loop's
+        all-done condition exits immediately anyway)."""
+        need = 0
+        for _, req in self.occupied():
+            seq_len = len(req.prompt) + len(req.out)
+            remaining = min(req.max_new - len(req.out),
+                            self.max_len + 1 - seq_len)
+            need = max(need, remaining)
+        return max(1, min(burst, need))

@@ -1,0 +1,237 @@
+"""Device-resident decode bursts: the K-token jitted burst loop must be
+token-for-token identical to the seed-style one-call-per-token engine on
+mtla/mla/mha configs (ref and pallas backends), perform K decode steps per
+host sync with exactly one jitted burst invocation per K tokens (and one
+trace total), sample deterministically under fixed per-request seeds
+independent of burst size, and reject oversized prompts mid-admission
+without aborting the round."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.core.types import AttentionConfig, ModelConfig
+from repro.models import api
+from repro.serving import sampling
+from repro.serving.engine import DecodeEngine, Request, cache_bytes_split
+from repro.serving.sampling import SamplingParams
+from repro.serving.scheduler import Scheduler
+
+
+def model(kind, backend="ref", s=2):
+    latent = kind in ("mla", "mtla")
+    return ModelConfig(
+        name="burst", family="dense", num_layers=2, d_model=64, d_ff=128,
+        vocab_size=97, backend=backend,
+        attn=AttentionConfig(kind=kind, num_heads=4, num_kv_heads=4,
+                             head_dim=16,
+                             kv_lora_rank=32 if latent else 0,
+                             rope_head_dim=8 if latent else 0,
+                             hyper_dim=8, s=s, q_chunk=0))
+
+
+def per_step_reference(params, cfg, prompt, max_new, max_len=32, eos=None):
+    """Seed-style serving loop: one jitted decode call + host argmax per
+    token (the pre-burst engine's semantics, single sequence)."""
+    caches = api.init_caches(cfg, 1, max_len, dtype=jnp.float32)
+    decode = jax.jit(
+        lambda p, t, c: api.decode(p, cfg, t, c, dtype=jnp.float32))
+    logits, caches = api.prefill(
+        params, cfg, {"tokens": jnp.asarray(prompt[None, :], jnp.int32)},
+        caches, dtype=jnp.float32)
+    out = [int(np.argmax(np.asarray(logits[0])))]
+    while len(out) < max_new and (eos is None or out[-1] != eos):
+        logits, caches = decode(
+            params, jnp.asarray([[out[-1]]], jnp.int32), caches)
+        out.append(int(np.argmax(np.asarray(logits[0]))))
+    return out
+
+
+@pytest.mark.parametrize("kind,backend", [
+    ("mtla", "ref"), ("mtla", "pallas"), ("mla", "ref"), ("mha", "ref")])
+def test_burst_greedy_matches_per_step(kind, backend):
+    """Scanned K-token greedy decode == per-step reference, token for
+    token, across attention kinds and backends."""
+    cfg = model(kind, backend)
+    params = api.init_model(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(0, 97, size=(n,)).astype(np.int32)
+               for n in (3, 7, 5)]
+    want = [per_step_reference(params, cfg, p, max_new=6) for p in prompts]
+    eng = DecodeEngine(params, cfg, batch=3, max_len=32, dtype=jnp.float32,
+                       burst=4)
+    out = eng.run([Request(rid=i, prompt=p, max_new=6)
+                   for i, p in enumerate(prompts)])
+    assert [out[i] for i in range(3)] == want
+
+
+def test_one_jitted_burst_call_per_k_tokens():
+    """K decode steps per host sync: 16 decode tokens with burst=8 take
+    exactly 2 jitted burst invocations, traced (compiled) once."""
+    cfg = model("mtla")
+    params = api.init_model(jax.random.PRNGKey(2), cfg)
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, 97, size=(4,)).astype(np.int32)
+               for _ in range(2)]
+    eng = DecodeEngine(params, cfg, batch=2, max_len=32, dtype=jnp.float32,
+                       burst=8)
+    out = eng.run([Request(rid=i, prompt=p, max_new=17)
+                   for i, p in enumerate(prompts)])
+    assert all(len(v) == 17 for v in out.values())
+    # 1 prefill-sampled token + 16 burst tokens = two full bursts of 8
+    assert eng.steps == 16
+    assert eng.decode_calls == 2
+    assert eng.burst_traces == 1
+
+
+def test_burst_early_exit_when_all_slots_finish():
+    """The device while_loop stops mid-burst once every slot is done: with
+    remaining needs of 3 and 5 tokens and burst=8, one invocation runs
+    exactly 5 steps (scheduler quota), not 8."""
+    cfg = model("mtla")
+    params = api.init_model(jax.random.PRNGKey(4), cfg)
+    rng = np.random.default_rng(5)
+    reqs = [Request(rid=0, prompt=rng.integers(0, 97, size=(4,)).astype(
+                np.int32), max_new=4),
+            Request(rid=1, prompt=rng.integers(0, 97, size=(5,)).astype(
+                np.int32), max_new=6)]
+    eng = DecodeEngine(params, cfg, batch=2, max_len=32, dtype=jnp.float32,
+                       burst=8)
+    out = eng.run(reqs)
+    assert len(out[0]) == 4 and len(out[1]) == 6
+    assert eng.decode_calls == 1
+    assert eng.steps == 5
+
+
+def test_sampling_deterministic_and_burst_invariant():
+    """Per-request seeded sampling: identical outputs across reruns AND
+    across burst sizes (keys advance once per decode step regardless of
+    K); a different seed changes the stream."""
+    cfg = model("mtla")
+    params = api.init_model(jax.random.PRNGKey(6), cfg)
+    rng = np.random.default_rng(7)
+    prompts = [rng.integers(0, 97, size=(n,)).astype(np.int32)
+               for n in (4, 6)]
+    sp = SamplingParams(temperature=0.8, top_k=5, top_p=0.9)
+
+    def serve(burst, seed0=100):
+        eng = DecodeEngine(params, cfg, batch=2, max_len=48,
+                           dtype=jnp.float32, burst=burst)
+        return eng.run([Request(rid=i, prompt=p, max_new=12, sampling=sp,
+                                seed=seed0 + i)
+                        for i, p in enumerate(prompts)])
+
+    a, b = serve(burst=8), serve(burst=8)
+    assert a == b
+    assert serve(burst=1) == a and serve(burst=3) == a
+    assert serve(burst=8, seed0=999) != a
+
+
+def test_sampling_filters_reduce_to_greedy():
+    """top_k=1 (and a vanishing nucleus) select the argmax regardless of
+    temperature; disabled filters leave logits unconstrained."""
+    key = jax.random.PRNGKey(0)
+    logits = jax.random.normal(key, (4, 33))
+    rng = jnp.stack([jax.random.PRNGKey(i) for i in range(4)])
+    argmax = np.asarray(jnp.argmax(logits, -1))
+    ones, zeros = jnp.ones((4,)), jnp.zeros((4,), jnp.int32)
+    for top_k, top_p in [(jnp.full((4,), 1, jnp.int32), ones),
+                         (zeros, jnp.full((4,), 1e-7))]:
+        tok, _ = sampling.sample(rng, logits, ones * 0.7, top_k, top_p,
+                                 jnp.zeros((4,), bool))
+        np.testing.assert_array_equal(np.asarray(tok), argmax)
+    # greedy flag wins over any sampling config
+    tok, _ = sampling.sample(rng, logits, ones * 5.0,
+                             jnp.full((4,), 50, jnp.int32), ones * 0.99,
+                             jnp.ones((4,), bool))
+    np.testing.assert_array_equal(np.asarray(tok), argmax)
+
+
+def test_oversized_request_rejected_mid_admission():
+    """An oversized prompt is marked failed and skipped; the rest of the
+    round is admitted and served (seed engine raised ValueError here)."""
+    cfg = model("mtla")
+    params = api.init_model(jax.random.PRNGKey(8), cfg)
+    rng = np.random.default_rng(9)
+    reqs = [Request(rid=0, prompt=rng.integers(0, 97, size=(5,)).astype(
+                np.int32), max_new=4),
+            Request(rid=1, prompt=rng.integers(0, 97, size=(40,)).astype(
+                np.int32), max_new=4),
+            Request(rid=2, prompt=rng.integers(0, 97, size=(6,)).astype(
+                np.int32), max_new=4)]
+    eng = DecodeEngine(params, cfg, batch=2, max_len=16, dtype=jnp.float32)
+    out = eng.run(reqs)
+    assert set(out) == {0, 1, 2}
+    assert len(out[0]) == 4 and len(out[2]) == 4
+    assert out[1] == [] and reqs[1].error and reqs[1].done
+    assert eng.failed == [reqs[1]]
+    # add_request reports the rejection instead of raising
+    eng2 = DecodeEngine(params, cfg, batch=2, max_len=16,
+                        dtype=jnp.float32)
+    bad = Request(rid=9, prompt=rng.integers(0, 97, size=(99,)).astype(
+        np.int32))
+    assert eng2.add_request(bad) is False and bad.error
+
+
+def test_scheduler_policy():
+    """Admission never raises mid-round and the burst quota tracks the
+    largest remaining need among resident requests."""
+    sched = Scheduler(batch=2, max_len=16)
+    reqs = [Request(rid=0, prompt=np.zeros(4, np.int32), max_new=10),
+            Request(rid=1, prompt=np.zeros(20, np.int32), max_new=5),
+            Request(rid=2, prompt=np.zeros(3, np.int32), max_new=3),
+            Request(rid=3, prompt=np.zeros(3, np.int32), max_new=3)]
+    plan = sched.plan(reqs)
+    assert [s for s, _ in plan.assignments] == [0, 1]
+    assert [r.rid for _, r in plan.assignments] == [0, 2]
+    assert [r.rid for r in plan.rejected] == [1]
+    assert plan.consumed == 3               # rid 3 left for the next round
+    sched.commit(plan)
+    reqs[0].out, reqs[2].out = [1, 2], [1]  # 8 and 2 tokens still to emit
+    assert sched.burst_quota(32) == 8
+    assert sched.burst_quota(4) == 4
+    sched.release(0)
+    assert sched.burst_quota(32) == 2
+
+
+def test_encdec_decode_step_scan_compatible():
+    """The encoder-decoder decode step rolls under lax.scan with on-device
+    token feedback and matches the per-call python loop."""
+    cfg = smoke_config("seamless_m4t_medium")
+    params = api.init_model(jax.random.PRNGKey(10), cfg)
+    rng = np.random.default_rng(11)
+    src = jnp.asarray(rng.standard_normal((2, 4, cfg.frontend_dim)),
+                      jnp.float32)
+    toks = jnp.asarray(rng.integers(0, 97, (2, 1)), jnp.int32)
+    batch = {"frontend_embeds": src, "tokens": toks}
+
+    caches = api.init_caches(cfg, 2, 16, dtype=jnp.float32, src_len=4)
+    logits, caches = api.prefill(params, cfg, batch, caches,
+                                 dtype=jnp.float32)
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+
+    loop_caches, loop_tok, loop_out = caches, tok, []
+    for _ in range(4):
+        logits, loop_caches = api.decode_step(params, cfg, loop_tok,
+                                              loop_caches,
+                                              dtype=jnp.float32)
+        loop_tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        loop_out.append(logits)
+
+    def body(carry, _):
+        t, c = carry
+        logits, c = api.decode_step(params, cfg, t, c, dtype=jnp.float32)
+        return (jnp.argmax(logits, -1).astype(jnp.int32), c), logits
+
+    (_, _), scan_out = jax.lax.scan(body, (tok, caches), None, length=4)
+    np.testing.assert_allclose(np.asarray(scan_out),
+                               np.asarray(jnp.stack(loop_out)),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_cache_bytes_split():
+    cfg = model("mtla")
+    caches = api.init_caches(cfg, 4, 32, dtype=jnp.float32)
+    active, allocated = cache_bytes_split(caches, 3, 4)
+    assert allocated > 0 and active == int(round(allocated * 3 / 4))
