@@ -1,13 +1,25 @@
-"""Serving throughput: decode tokens/s vs burst size across attention
-variants (mha / mla / mtla) on the smoke-scale paper decoder.
+"""Serving throughput + cache memory: decode tokens/s vs burst size across
+attention variants (mha / mla / mtla), and peak KV-cache bytes across cache
+modes (dense-fp32 / paged-fp32 / paged-int8) on the smoke-scale paper
+decoder.
 
 burst=1 reproduces the seed engine's regime — one jitted dispatch and one
 host sync per token; burst>1 amortizes both over K tokens inside a single
 ``lax.while_loop`` call, which is where the engine banks MTLA's inference
 win. Each engine is warmed (compile excluded via ``DecodeEngine.reset``),
-then timed on the decode phase only. Rows report per-decoded-token latency
-plus tokens/s and the speedup vs the burst=1 baseline of the same variant.
-"""
+then timed on the decode phase only. Every row reports the fastest of
+``TIMED_RUNS`` timed repetitions: the decode phases are tiny (tens of ms
+on the smoke config), so a single OS-scheduler hiccup can shift one row
+5x — best-of-N reads through that, which the CI regression gate
+(benchmarks/compare.py) depends on.
+
+The cache-mode section is the serving-side version of the paper's memory
+columns: the engine serves two waves of requests much shorter than
+``max_len``, so the dense cache pays for capacity it never touches while
+the paged pool maps only written pages (at 1/s the token rate for MTLA)
+and recycles them across waves. ``peak_cache_bytes`` is the mapped-page
+high-water mark (dense: the allocation); ``vs_dense_fp32`` is the ratio
+the CI regression gate and the paged-cache acceptance check read."""
 from __future__ import annotations
 
 import jax
@@ -22,15 +34,35 @@ from .common import paper_model
 VARIANTS = (("mha", 2), ("mla", 2), ("mtla", 2))
 BURSTS = (1, 8, 32)
 BATCH, PROMPT_LEN, MAX_NEW = 4, 16, 24
+TIMED_RUNS = 3
+
+# cache-mode section: requests use ~40 of 96 positions, two waves over the
+# slots, so paging + page reuse both show up in the peak
+CACHE_MAX_LEN, CACHE_REQUESTS, CACHE_BURST = 96, 8, 8
+CACHE_MODES = (("dense-fp32", {}),
+               ("paged-fp32", {"page_size": 8, "cache_dtype": "fp32"}),
+               ("paged-int8", {"page_size": 8, "cache_dtype": "int8"}))
 
 
-def _requests(cfg, seed=0):
+def _requests(cfg, n=BATCH, seed=0):
     rng = np.random.default_rng(seed)
     return [Request(rid=i,
                     prompt=rng.integers(0, cfg.vocab_size,
                                         size=(PROMPT_LEN,)).astype(np.int32),
                     max_new=MAX_NEW)
-            for i in range(BATCH)]
+            for i in range(n)]
+
+
+def _timed_run(eng, cfg, n):
+    """Best decode tokens/s over TIMED_RUNS repetitions (engine state —
+    including the per-run decode clock — resets each time; the compiled
+    graphs persist, so repetitions cost milliseconds)."""
+    best = 0.0
+    for _ in range(TIMED_RUNS):
+        eng.reset()
+        eng.run(_requests(cfg, n))
+        best = max(best, eng.decoded_tokens / max(eng.decode_time_s, 1e-9))
+    return best
 
 
 def run():
@@ -44,15 +76,38 @@ def run():
                                max_len=PROMPT_LEN + MAX_NEW + 8,
                                dtype=jnp.float32, burst=burst)
             eng.run(_requests(cfg))         # warmup: compile burst graph
-            eng.reset()
-            eng.run(_requests(cfg))
-            rate = eng.decoded_tokens / max(eng.decode_time_s, 1e-9)
+            rate = _timed_run(eng, cfg, BATCH)
             if base_rate is None:
                 base_rate = rate            # burst=1 baseline per variant
-            us = eng.decode_time_s / max(eng.decoded_tokens, 1) * 1e6
+            us = 1e6 / rate
             rows.append(
                 f"bench_serving/{cfg.name}-burst{burst},{us:.1f},"
                 f"toks_per_s={rate:.1f};"
                 f"speedup_vs_burst1={rate / base_rate:.2f}x;"
                 f"bursts={eng.decode_calls};device_steps={eng.steps}")
+
+    for kind, s in (("mla", 2), ("mtla", 2)):
+        cfg = paper_model(kind, s=s, layers=2, d=64)
+        params = api.init_model(jax.random.PRNGKey(0), cfg)
+        dense_peak = None
+        for mode, kw in CACHE_MODES:
+            eng = DecodeEngine(params, cfg, batch=BATCH,
+                               max_len=CACHE_MAX_LEN, dtype=jnp.float32,
+                               burst=CACHE_BURST, **kw)
+            eng.run(_requests(cfg, CACHE_REQUESTS))     # warmup
+            rate = _timed_run(eng, cfg, CACHE_REQUESTS)
+            rep = eng.cache_report()
+            peak = rep["peak"] if eng.pool is not None else rep["allocated"]
+            if dense_peak is None:
+                dense_peak = peak
+            us = 1e6 / rate
+            occ = eng.peak_active / BATCH
+            pages = (f";pages_peak={rep['pages_peak']}"
+                     f";pages_total={rep['pages_total']}"
+                     if eng.pool is not None else "")
+            rows.append(
+                f"bench_serving/cache/{cfg.name}-{mode},{us:.1f},"
+                f"toks_per_s={rate:.1f};peak_cache_bytes={peak};"
+                f"vs_dense_fp32={peak / dense_peak:.3f}x;"
+                f"peak_slot_occupancy={occ:.2f}{pages}")
     return rows

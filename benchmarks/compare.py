@@ -1,0 +1,101 @@
+"""CI perf-trajectory gate: compare a fresh ``benchmarks.run --out`` JSON
+against the checked-in baseline and fail on large throughput regressions.
+
+    python -m benchmarks.compare BENCH_ci.json \
+        --baseline benchmarks/baseline_ci.json --max-regression 2.0
+
+Absolute tokens/s depend on the machine and its load (a loaded CI runner
+is easily 2-3x slower than the box that recorded the baseline), so the
+gate compares **normalized** throughput: every row's tokens/s is divided
+by a reference row's tokens/s *from the same results file* (default:
+``bench_serving/paper-mha-burst1``, the seed-regime row no optimization
+PR targets). Machine speed cancels; what remains is each row's speed
+relative to the same code's baseline shape, and a >2x drop there means an
+algorithmic regression (a lost burst loop, an accidental dense gather in
+the paged path), not noise. Memory ratios (``vs_dense_fp32``) are already
+machine-independent and are gated directly.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+REFERENCE_ROW = "bench_serving/paper-mha-burst1"
+
+
+def _index(doc):
+    return {r["name"]: r.get("derived", {}) for r in doc.get("rows", [])}
+
+
+def _reference(idx, name):
+    ref = idx.get(name, {}).get("toks_per_s")
+    return ref if ref and ref > 0 else None
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("current", help="JSON from benchmarks.run --out")
+    ap.add_argument("--baseline", default="benchmarks/baseline_ci.json")
+    ap.add_argument("--max-regression", type=float, default=2.0,
+                    help="fail when normalized tokens/s < baseline / this")
+    ap.add_argument("--mem-slack", type=float, default=1.10,
+                    help="fail when a vs_dense_fp32 byte ratio grows by "
+                         "more than this factor vs baseline")
+    ap.add_argument("--reference", default=REFERENCE_ROW,
+                    help="row whose tokens/s normalizes each file "
+                         "(cancels machine speed); the gate errors out if "
+                         "either file lacks it — the checked-in baseline "
+                         "stores normalized values, so an absolute "
+                         "comparison would be meaningless")
+    args = ap.parse_args()
+    with open(args.baseline) as f:
+        base = _index(json.load(f))
+    with open(args.current) as f:
+        cur = _index(json.load(f))
+
+    base_ref = _reference(base, args.reference)
+    cur_ref = _reference(cur, args.reference)
+    if base_ref is None or cur_ref is None:
+        missing = args.baseline if base_ref is None else args.current
+        print(f"FAIL: reference row {args.reference!r} missing from "
+              f"{missing}; cannot normalize (the baseline stores "
+              f"reference-normalized tokens/s)", file=sys.stderr)
+        return 2
+
+    failures, checked = [], 0
+    for name, bd in sorted(base.items()):
+        if "toks_per_s" not in bd or name == args.reference:
+            continue
+        cd = cur.get(name)
+        if cd is None or "toks_per_s" not in cd:
+            failures.append(f"{name}: missing from current results")
+            continue
+        checked += 1
+        cur_rel = cd["toks_per_s"] / cur_ref
+        base_rel = bd["toks_per_s"] / base_ref
+        floor = base_rel / args.max_regression
+        status = "ok"
+        if cur_rel < floor:
+            status = "REGRESSION"
+            failures.append(
+                f"{name}: {cur_rel:.2f}x reference < floor {floor:.2f}x "
+                f"(baseline {base_rel:.2f}x, max-regression "
+                f"{args.max_regression}x)")
+        if "vs_dense_fp32" in bd and "vs_dense_fp32" in cd \
+                and cd["vs_dense_fp32"] > bd["vs_dense_fp32"] * args.mem_slack:
+            status = "MEM-REGRESSION"
+            failures.append(
+                f"{name}: peak-cache ratio {cd['vs_dense_fp32']:.3f}x > "
+                f"baseline {bd['vs_dense_fp32']:.3f}x * {args.mem_slack}")
+        print(f"{status:>14}  {name}  {cur_rel:.2f}x ref "
+              f"(baseline {base_rel:.2f})")
+    print(f"checked {checked} rows, {len(failures)} failures "
+          f"(normalized by {args.reference})")
+    for f_ in failures:
+        print(f"FAIL: {f_}", file=sys.stderr)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

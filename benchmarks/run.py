@@ -3,15 +3,43 @@
 ratios are the meaningful columns; TPU projections live in EXPERIMENTS.md
 §Roofline).
 
-    PYTHONPATH=src python -m benchmarks.run [--only SUBSTR]
+    PYTHONPATH=src python -m benchmarks.run [--only SUBSTR] [--out FILE.json]
 
 ``--only`` filters modules by name substring (CI runs ``--only
-bench_kernels`` as a fast smoke of the benchmark entry points).
+bench_kernels`` as a fast smoke of the benchmark entry points). ``--out``
+additionally writes the rows as structured JSON — the CI bench job uploads
+it as a workflow artifact and gates on tokens/s regressions vs the
+checked-in ``benchmarks/baseline_ci.json`` (see benchmarks/compare.py).
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
+
+
+def parse_row(row: str) -> dict:
+    """'name,us,k=v;k=v;flag' -> {name, us_per_call, derived: {k: v}}.
+    Tolerates rows with fewer fields (no derived / no timing column)."""
+    name, us, derived = (row.split(",", 2) + ["", ""])[:3]
+    fields = {}
+    for part in derived.split(";"):
+        if not part:
+            continue
+        if "=" in part:
+            k, v = part.split("=", 1)
+            v = v[:-1] if v.endswith("x") else v
+            try:
+                fields[k] = float(v)
+            except ValueError:
+                fields[k] = v
+        else:
+            fields[part] = True
+    try:
+        us_val = float(us)
+    except ValueError:
+        us_val = None
+    return {"name": name, "us_per_call": us_val, "derived": fields}
 
 
 def main() -> None:
@@ -19,6 +47,9 @@ def main() -> None:
     ap.add_argument("--only", default="",
                     help="run only modules whose name contains this "
                          "substring (e.g. 'bench_kernels')")
+    ap.add_argument("--out", default="",
+                    help="also write rows as JSON (e.g. BENCH_ci.json) for "
+                         "the CI artifact + regression compare")
     args = ap.parse_args()
     from . import (bench_asr, bench_kernels, bench_related, bench_serving,
                    bench_slu, bench_st, bench_summarisation)
@@ -29,10 +60,17 @@ def main() -> None:
         if not mods:
             raise SystemExit(f"no benchmark module matches {args.only!r}")
     print("name,us_per_call,derived")
+    rows = []
     for m in mods:
         for row in m.run():
             print(row)
             sys.stdout.flush()
+            if args.out:
+                rows.append(parse_row(row))
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump({"rows": rows}, f, indent=1, sort_keys=True)
+        print(f"wrote {len(rows)} rows to {args.out}", file=sys.stderr)
 
 
 if __name__ == "__main__":

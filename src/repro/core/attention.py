@@ -265,19 +265,47 @@ def attn_train(p, cfg: AttentionConfig, x, *, positions=None,
 
 # --- caches ---------------------------------------------------------------
 
+CACHE_JNP_DTYPES = {"fp32": jnp.float32, "bf16": jnp.bfloat16,
+                    "int8": jnp.int8}
+
+
 def init_attn_cache(cfg: AttentionConfig, batch: int, max_len: int,
-                    dtype=jnp.bfloat16, window: int = 0):
+                    dtype=jnp.bfloat16, window: int = 0, paged=None):
     """Decode cache pytree. For latent kinds the cache is the latent chunk
     sequence (t = ceil(max_len / s) slots for MTLA). For standard kinds with
-    a sliding window the cache is a ring buffer of `window` slots."""
+    a sliding window the cache is a ring buffer of `window` slots.
+
+    ``paged`` (a core.types.PagedCacheSpec, latent kinds only) switches to
+    the pooled layout: a shared block pool of physical pages + per-slot
+    page table (core/mtla.py paged_* ops), with ``paged.cache_dtype``
+    governing the pool element type instead of ``dtype`` (int8 pools carry
+    per-row fp32 scales). The page table starts fully unmapped (sentinel
+    = pool size); serving/cache.py::PagePool assigns physical pages."""
     if cfg.kind in ("mla", "mtla"):
         s = cfg.s if cfg.kind == "mtla" else 1
         t = -(-max_len // s)
+        if paged is not None:
+            page = paged.page_size
+            _, n, pool = paged.geometry(batch, max_len, s)
+            cdt = CACHE_JNP_DTYPES[paged.cache_dtype]
+            cache = {
+                "pool_c": jnp.zeros((pool, page, cfg.kv_lora_rank), cdt),
+                "pool_kr": jnp.zeros((pool, page, cfg.rope_head_dim), cdt),
+                "page_table": jnp.full((batch, n), pool, jnp.int32),
+                "pos": jnp.zeros((batch,), jnp.int32),
+            }
+            if paged.quantized:
+                cache["scale_c"] = jnp.zeros((pool, page), jnp.float32)
+                cache["scale_kr"] = jnp.zeros((pool, page), jnp.float32)
+            return cache
         return {
             "c": jnp.zeros((batch, t, cfg.kv_lora_rank), dtype),
             "kr": jnp.zeros((batch, t, cfg.rope_head_dim), dtype),
             "pos": jnp.zeros((batch,), jnp.int32),
         }
+    if paged is not None:
+        raise ValueError("paged KV caches require a latent attention kind "
+                         f"(mla/mtla), got {cfg.kind!r}")
     L = window if (window and window < max_len) else max_len
     return {
         "k": jnp.zeros((batch, L, cfg.num_kv_heads, cfg.head_dim), dtype),
@@ -333,10 +361,13 @@ def attn_prefill(p, cfg: AttentionConfig, x, cache, *, window: int = 0,
         y, (c, kr) = _mla_train(p, cfg, x, positions)
         # pad-position latents land in slots >= lengths[b]: excluded by the
         # decode validity mask (slot <= pos) until overwritten
-        cache["c"] = jax.lax.dynamic_update_slice_in_dim(
-            cache["c"], c.astype(cache["c"].dtype), 0, 1)
-        cache["kr"] = jax.lax.dynamic_update_slice_in_dim(
-            cache["kr"], kr.astype(cache["kr"].dtype), 0, 1)
+        if "pool_c" in cache:
+            cache = mtla.paged_prefill_write(cache, c, kr)
+        else:
+            cache["c"] = jax.lax.dynamic_update_slice_in_dim(
+                cache["c"], c.astype(cache["c"].dtype), 0, 1)
+            cache["kr"] = jax.lax.dynamic_update_slice_in_dim(
+                cache["kr"], kr.astype(cache["kr"].dtype), 0, 1)
         cache["pos"] = seq_pos
         return y, cache
     # mtla
@@ -366,10 +397,13 @@ def attn_prefill(p, cfg: AttentionConfig, x, cache, *, window: int = 0,
         live = (chunk_ids[None, :] <= (last // s)[:, None])[..., None]
         cc = jnp.where(live, cc, 0).astype(P.dtype)
         ckr = jnp.where(live, ckr, 0).astype(kr.dtype)
-    cache["c"] = jax.lax.dynamic_update_slice_in_dim(
-        cache["c"], cc.astype(cache["c"].dtype), 0, 1)
-    cache["kr"] = jax.lax.dynamic_update_slice_in_dim(
-        cache["kr"], ckr.astype(cache["kr"].dtype), 0, 1)
+    if "pool_c" in cache:
+        cache = mtla.paged_prefill_write(cache, cc, ckr)
+    else:
+        cache["c"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["c"], cc.astype(cache["c"].dtype), 0, 1)
+        cache["kr"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["kr"], ckr.astype(cache["kr"].dtype), 0, 1)
     cache["pos"] = seq_pos
     return y, cache
 
@@ -417,21 +451,35 @@ def attn_decode(p, cfg: AttentionConfig, x_t, cache, *, window: int = 0,
     q_lat = mtla.absorbed_queries(q_nope[:, 0], p["w_uk"]["w"])   # [B,H,r]
     qr = q_rope[:, 0]                                             # [B,H,dr]
     be = _resolve_backend(cfg, backend)
+    paged = "pool_c" in cache
     if cfg.kind == "mla":
-        # mode="drop": a retired burst slot's pos can run past the cache
-        # capacity (serving/engine.py keeps decoding the full batch)
-        bidx = jnp.arange(B)
-        cache["c"] = cache["c"].at[bidx, pos].set(
-            c[:, 0].astype(cache["c"].dtype), mode="drop")
-        cache["kr"] = cache["kr"].at[bidx, pos].set(
-            kr[:, 0].astype(cache["kr"].dtype), mode="drop")
-        j = pos                                     # one cache slot per token
+        if paged:  # MLA == MTLA merge with a unit gate at stride 1
+            cache, j = mtla.paged_cache_update(
+                cache, pos, c[:, 0], kr[:, 0],
+                jnp.ones((B,), jnp.float32), 1)
+        else:
+            # mode="drop": a retired burst slot's pos can run past the cache
+            # capacity (serving/engine.py keeps decoding the full batch)
+            bidx = jnp.arange(B)
+            cache["c"] = cache["c"].at[bidx, pos].set(
+                c[:, 0].astype(cache["c"].dtype), mode="drop")
+            cache["kr"] = cache["kr"].at[bidx, pos].set(
+                kr[:, 0].astype(cache["kr"].dtype), mode="drop")
+            j = pos                                 # one cache slot per token
     else:  # mtla: in-place chunk merge, then attend over j+1 chunk slots
         g_t = mtla.merge_gates(p, c[:, 0], pos // cfg.s)          # [B]
-        cache["c"], cache["kr"], j = mtla.decode_cache_update(
-            cache["c"], cache["kr"], pos, c[:, 0], kr[:, 0], g_t, cfg.s)
-    ctx_lat = dispatch.mtla_decode_attention(
-        q_lat, qr, cache["c"], cache["kr"], j, scale, backend=be)
+        if paged:
+            cache, j = mtla.paged_cache_update(
+                cache, pos, c[:, 0], kr[:, 0], g_t, cfg.s)
+        else:
+            cache["c"], cache["kr"], j = mtla.decode_cache_update(
+                cache["c"], cache["kr"], pos, c[:, 0], kr[:, 0], g_t, cfg.s)
+    if paged:
+        ctx_lat = dispatch.mtla_decode_attention_paged(
+            q_lat, qr, cache, j, scale, backend=be)
+    else:
+        ctx_lat = dispatch.mtla_decode_attention(
+            q_lat, qr, cache["c"], cache["kr"], j, scale, backend=be)
     ctx = jnp.einsum("bhr,rhd->bhd", ctx_lat,
                      p["w_uv"]["w"].astype(jnp.float32)).astype(x_t.dtype)
     y = dense(p["wo"], ctx.reshape(B, 1, H * dh))

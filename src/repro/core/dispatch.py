@@ -169,3 +169,20 @@ def mtla_decode_attention(q_lat, q_rope, cache_c, cache_kr, j, scale: float,
     if backend == "pallas":
         return kops.mtla_decode(q_lat, q_rope, cache_c, cache_kr, j, scale)
     return mtla.decode_attend_ref(q_lat, q_rope, cache_c, cache_kr, j, scale)
+
+
+def mtla_decode_attention_paged(q_lat, q_rope, cache, j, scale: float, *,
+                                backend: str):
+    """Absorbed decode attention over a paged latent pool -> [B,H,r] fp32.
+
+    ``cache`` is the pooled layout of core/attention.py::init_attn_cache
+    (pool_c/pool_kr/page_table, plus per-row scales for int8). The pallas
+    side streams physical pages through a scalar-prefetch page-table gather;
+    the ref side materializes the dense per-slot view first."""
+    if backend == "pallas":
+        return kops.mtla_decode_paged(
+            q_lat, q_rope, cache["pool_c"], cache["pool_kr"],
+            cache["page_table"], j, scale,
+            cache.get("scale_c"), cache.get("scale_kr"))
+    view_c, view_kr = mtla.paged_view(cache)
+    return mtla.decode_attend_ref(q_lat, q_rope, view_c, view_kr, j, scale)

@@ -199,6 +199,142 @@ def decode_cache_update(cache_c, cache_kr, pos, c_t, kr_t, g_t, s: int):
     return cache_c, cache_kr, j
 
 
+# ---------------------------------------------------------------------------
+# paged latent cache (serving): shared block pool + per-slot page table
+# ---------------------------------------------------------------------------
+#
+# Pool layout per layer (core/attention.py::init_attn_cache(paged=...)):
+#   pool_c     [P, page, r]    latent rows, P shared physical pages
+#   pool_kr    [P, page, dr]   per-chunk RoPE keys
+#   page_table [B, n] int32    logical chunk page -> physical page; the
+#                              sentinel value P marks an unmapped page, so
+#                              every write through it lands out of range and
+#                              is dropped (mode="drop") — the same semantics
+#                              dense caches use for retired slots past
+#                              capacity
+#   scale_c/scale_kr [P, page] fp32 per-row scales (int8 pools only)
+#
+# The host-side allocator that assigns physical pages and enforces
+# back-pressure lives in serving/cache.py; everything here is pure
+# jit-compatible array math (scan/while_loop-safe like the dense path).
+
+
+def _paged_rows_quantize(x):
+    from ..runtime.compression import symmetric_quantize
+    return symmetric_quantize(x, axis=-1, dtype=jnp.int8)
+
+
+def paged_cache_update(cache, pos, c_t, kr_t, g_t, s: int):
+    """Paged equivalent of ``decode_cache_update`` (MLA: g_t=1, s=1 makes
+    the merge a plain per-token write). Returns (cache, j [B]).
+
+    Reads the previous partial-chunk row through the page table
+    (dequantizing for int8 pools), accumulates the gated latent in fp32,
+    and writes the row back (requantizing with a fresh per-row scale).
+    Writes through unmapped pages — or for positions past the logical
+    capacity — are dropped, matching the dense cache's retired-slot
+    semantics."""
+    pool_c, pool_kr = cache["pool_c"], cache["pool_kr"]
+    pt = cache["page_table"]
+    P, page, _ = pool_c.shape
+    n = pt.shape[1]
+    B = pos.shape[0]
+    j = pos // s                       # chunk slot of the incoming token
+    k = pos % s                        # phase within the chunk
+    off = j % page
+    bidx = jnp.arange(B)
+    in_table = (j // page) < n
+    phys = jnp.where(in_table,
+                     pt[bidx, jnp.minimum(j // page, n - 1)], P)
+    quantized = "scale_c" in cache
+
+    prev = pool_c.at[phys, off].get(mode="clip")             # [B, r]
+    if quantized:
+        prev = (prev.astype(jnp.float32)
+                * cache["scale_c"].at[phys, off].get(mode="clip")[:, None])
+    base = jnp.where((k == 0)[:, None], jnp.zeros_like(prev, jnp.float32),
+                     prev.astype(jnp.float32))
+    gated = (g_t[:, None].astype(jnp.float32) * c_t.astype(jnp.float32))
+    if quantized:
+        new_c = base + gated
+        qc, sc = _paged_rows_quantize(new_c)
+        qkr, skr = _paged_rows_quantize(kr_t.astype(jnp.float32))
+        cache = dict(
+            cache,
+            pool_c=pool_c.at[phys, off].set(qc, mode="drop"),
+            pool_kr=pool_kr.at[phys, off].set(qkr, mode="drop"),
+            scale_c=cache["scale_c"].at[phys, off].set(sc, mode="drop"),
+            scale_kr=cache["scale_kr"].at[phys, off].set(skr, mode="drop"))
+        return cache, j
+    # fp pools mirror decode_cache_update's arithmetic exactly (the gated
+    # product is cast to the cache dtype before the add) so fp32 paged
+    # decode is bitwise-identical to the dense path
+    new_c = base.astype(pool_c.dtype) + gated.astype(pool_c.dtype)
+    cache = dict(
+        cache,
+        pool_c=pool_c.at[phys, off].set(new_c, mode="drop"),
+        pool_kr=pool_kr.at[phys, off].set(kr_t.astype(pool_kr.dtype),
+                                          mode="drop"))
+    return cache, j
+
+
+def paged_prefill_write(cache, cc, ckr):
+    """Scatter per-slot chunk rows cc [B, t, r] / ckr [B, t, dr] into the
+    pool through the page table. Rows of slots whose page-table entries are
+    the unmapped sentinel are dropped — the engine masks the table down to
+    the admitted slots so batched prefill cannot clobber live pages."""
+    pool_c, pool_kr = cache["pool_c"], cache["pool_kr"]
+    pt = cache["page_table"]
+    P, page, r = pool_c.shape
+    B, n = pt.shape
+    dr = ckr.shape[-1]
+    tpad = n * page
+    t = cc.shape[1]
+    if t < tpad:
+        cc = jnp.pad(cc, ((0, 0), (0, tpad - t), (0, 0)))
+        ckr = jnp.pad(ckr, ((0, 0), (0, tpad - t), (0, 0)))
+    flat_pt = pt.reshape(-1)
+    quantized = "scale_c" in cache
+
+    def scatter(pool, rows, width):
+        return pool.at[flat_pt].set(
+            rows.reshape(B * n, page, width).astype(pool.dtype), mode="drop")
+
+    if quantized:
+        qc, sc = _paged_rows_quantize(cc.astype(jnp.float32))
+        qkr, skr = _paged_rows_quantize(ckr.astype(jnp.float32))
+        return dict(
+            cache,
+            pool_c=scatter(pool_c, qc, r),
+            pool_kr=scatter(pool_kr, qkr, dr),
+            scale_c=cache["scale_c"].at[flat_pt].set(
+                sc.reshape(B * n, page), mode="drop"),
+            scale_kr=cache["scale_kr"].at[flat_pt].set(
+                skr.reshape(B * n, page), mode="drop"))
+    return dict(cache, pool_c=scatter(pool_c, cc, r),
+                pool_kr=scatter(pool_kr, ckr, dr))
+
+
+def paged_view(cache):
+    """Materialize the pool as dense per-slot latent sequences
+    (view_c [B, n*page, r], view_kr [B, n*page, dr]), dequantized for int8
+    pools. Slots past each sequence's last valid chunk ``j`` read clipped /
+    stale pages — callers mask on ``j`` exactly as with dense caches."""
+    pool_c, pool_kr = cache["pool_c"], cache["pool_kr"]
+    pt = cache["page_table"]
+    P = pool_c.shape[0]
+    page, r = pool_c.shape[1], pool_c.shape[2]
+    B, n = pt.shape
+    safe = jnp.minimum(pt, P - 1)
+    vc = pool_c[safe]                       # [B, n, page, r]
+    vkr = pool_kr[safe]
+    if "scale_c" in cache:
+        vc = vc.astype(jnp.float32) * cache["scale_c"][safe][..., None]
+        vkr = vkr.astype(jnp.float32) * cache["scale_kr"][safe][..., None]
+    return (vc.reshape(B, n * page, r),
+            vkr.reshape(B, n * page, pool_kr.shape[2]))
+
+
 def decode_attend_ref(q_lat, q_rope, cache_c, cache_kr, j, scale: float):
     """Absorbed decode attention over the latent cache -> ctx_lat [B,H,r]
     fp32 (the pure-jnp side of the backend dispatch; kernel equivalent in

@@ -52,6 +52,57 @@ class AttentionConfig:
         return 2 * self.num_kv_heads * self.head_dim
 
 
+CACHE_DTYPES = ("fp32", "bf16", "int8")
+
+
+@dataclass(frozen=True)
+class PagedCacheSpec:
+    """Paged latent KV cache layout (serving-time, latent kinds only).
+
+    The decode cache becomes a shared per-layer **block pool** of
+    ``pool_pages`` fixed-size temporal pages (``page_size`` compressed
+    positions each) plus a per-slot page table; a slot only holds pages for
+    the compressed positions it has actually written. MTLA's temporal
+    stride means pages are consumed at 1/s the token rate. ``cache_dtype``
+    selects the pool element type; ``int8`` adds per-page row scales
+    (symmetric quantization, runtime/compression.py).
+
+    ``pool_pages=0`` sizes the pool to the dense equivalent
+    (batch * ceil(ceil(max_len/s) / page_size)); smaller pools trade peak
+    memory for admission back-pressure (serving/cache.py::PagePool).
+    """
+    page_size: int = 8
+    pool_pages: int = 0
+    cache_dtype: str = "fp32"  # fp32 | bf16 | int8
+
+    def __post_init__(self):
+        if self.page_size < 1:
+            raise ValueError(f"page_size must be >= 1, got {self.page_size}")
+        if self.cache_dtype not in CACHE_DTYPES:
+            raise ValueError(
+                f"unknown cache_dtype {self.cache_dtype!r}; expected one of "
+                f"{CACHE_DTYPES}")
+
+    @property
+    def quantized(self) -> bool:
+        return self.cache_dtype == "int8"
+
+    def resolve_pool_pages(self, batch: int, logical_pages: int) -> int:
+        return self.pool_pages if self.pool_pages > 0 \
+            else batch * logical_pages
+
+    def geometry(self, batch: int, max_len: int, s: int):
+        """(compressed capacity t, logical pages per slot, physical pool
+        pages). The single source of the pool's shape: the device cache
+        init (core/attention.py) and the host allocator
+        (serving/cache.py::PagePool) must agree bit-for-bit — the
+        unmapped-sentinel drop semantics rely on the host sentinel
+        equalling the device pool size."""
+        t = -(-max_len // s)
+        logical = -(-t // self.page_size)
+        return t, logical, self.resolve_pool_pages(batch, logical)
+
+
 @dataclass(frozen=True)
 class MoEConfig:
     num_experts: int = 8

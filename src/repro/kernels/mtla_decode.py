@@ -7,6 +7,12 @@ and the value contraction so the cache block is read from HBM exactly once.
 
 Grid: (B, t/block_k) — flash-decoding style streaming with running
 (max, sum, acc) carried in VMEM scratch across cache blocks.
+
+The paged variant (``mtla_decode_paged_pallas``) reads the serving block
+pool directly: the per-slot page table rides in as a scalar-prefetch
+operand, so each grid step's BlockSpec index map dereferences it to DMA the
+right physical page — the gather never materializes a dense copy of the
+cache. int8 pools are dequantized in-register from per-row scales.
 """
 from __future__ import annotations
 
@@ -92,3 +98,109 @@ def mtla_decode_pallas(q_lat, q_rope, cache_c, cache_kr, j, scale: float,
         interpret=interpret,
     )(j, q_lat, q_rope, cache_c, cache_kr)
     return out
+
+
+# ---------------------------------------------------------------------------
+# paged pool variant: page-table gather fused into the block pipeline
+# ---------------------------------------------------------------------------
+
+def _paged_decode_kernel(pt_ref, j_ref, q_ref, qr_ref, c_ref, kr_ref, *rest,
+                         scale: float, page: int, quantized: bool):
+    if quantized:
+        sc_ref, skr_ref, o_ref, m_ref, l_ref, acc_ref = rest
+    else:
+        o_ref, m_ref, l_ref, acc_ref = rest
+    b = pl.program_id(0)
+    ki = pl.program_id(1)
+    nk = pl.num_programs(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    j = j_ref[b]
+    q = q_ref[0].astype(jnp.float32)            # [H, r]
+    qr = qr_ref[0].astype(jnp.float32)          # [H, dr]
+    cb = c_ref[0].astype(jnp.float32)           # [page, r]
+    krb = kr_ref[0].astype(jnp.float32)         # [page, dr]
+    if quantized:                               # per-row dequant in-register
+        cb = cb * sc_ref[0][:, None]
+        krb = krb * skr_ref[0][:, None]
+
+    logits = (q @ cb.T + qr @ krb.T) * scale    # [H, page]
+    # logical chunk slot of each row in this page; rows past j — including
+    # every row of an unmapped (clip-gathered) page — are masked out
+    slot = ki * page + jax.lax.broadcasted_iota(jnp.int32, logits.shape, 1)
+    logits = jnp.where(slot <= j, logits, NEG_INF)
+
+    m_prev = m_ref[...]
+    l_prev = l_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(logits, axis=-1))
+    p = jnp.exp(logits - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_prev * corr + jnp.sum(p, axis=-1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + p @ cb
+    m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _final():
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+def mtla_decode_paged_pallas(q_lat, q_rope, pool_c, pool_kr, page_table, j,
+                             scale: float, *, scale_c=None, scale_kr=None,
+                             interpret: bool = False):
+    """Decode attention straight over the paged latent pool.
+
+    q_lat [B,H,r], q_rope [B,H,dr]; pool_c [P,page,r] / pool_kr [P,page,dr]
+    shared physical pages; page_table [B,n] int32 (entries >= P = unmapped);
+    j [B] last valid logical chunk slot. int8 pools pass per-row scales
+    scale_c/scale_kr [P,page]. Returns ctx_lat [B,H,r] fp32.
+
+    The page table and j are scalar-prefetch operands: each (b, k) grid step
+    DMAs physical page ``page_table[b, k]`` (clamped for unmapped entries,
+    whose rows the slot mask kills) — one HBM read per mapped page, no dense
+    gather."""
+    B, H, r = q_lat.shape
+    P, page, _ = pool_c.shape
+    dr = q_rope.shape[-1]
+    n = page_table.shape[1]
+    quantized = scale_c is not None
+
+    def page_idx(b, k, pt, jj):
+        return (jnp.minimum(pt[b, k], P - 1), 0, 0)
+
+    in_specs = [
+        pl.BlockSpec((1, H, r), lambda b, k, pt, jj: (b, 0, 0)),
+        pl.BlockSpec((1, H, dr), lambda b, k, pt, jj: (b, 0, 0)),
+        pl.BlockSpec((1, page, r), page_idx),
+        pl.BlockSpec((1, page, dr), page_idx),
+    ]
+    args = [q_lat, q_rope, pool_c, pool_kr]
+    if quantized:
+        scale_page = lambda b, k, pt, jj: (jnp.minimum(pt[b, k], P - 1), 0)
+        in_specs += [pl.BlockSpec((1, page), scale_page),
+                     pl.BlockSpec((1, page), scale_page)]
+        args += [scale_c, scale_kr]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, n),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, H, r), lambda b, k, pt, jj: (b, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((H,), jnp.float32),      # running max
+            pltpu.VMEM((H,), jnp.float32),      # running sum
+            pltpu.VMEM((H, r), jnp.float32),    # weighted cache accum
+        ],
+    )
+    kernel = functools.partial(_paged_decode_kernel, scale=scale, page=page,
+                               quantized=quantized)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, r), jnp.float32),
+        interpret=interpret,
+    )(page_table, j, *args)

@@ -13,7 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from .mtla_attn import mtla_attn_pallas
-from .mtla_decode import mtla_decode_pallas
+from .mtla_decode import mtla_decode_paged_pallas, mtla_decode_pallas
 from .mtla_merge import mtla_merge_pallas
 
 
@@ -45,3 +45,14 @@ def mtla_decode(q_lat, q_rope, cache_c, cache_kr, j, scale: float,
                 block_k: int = 512):
     return mtla_decode_pallas(q_lat, q_rope, cache_c, cache_kr, j, scale,
                               block_k=block_k, interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("scale",))
+def mtla_decode_paged(q_lat, q_rope, pool_c, pool_kr, page_table, j,
+                      scale: float, scale_c=None, scale_kr=None):
+    """Decode attention over the paged latent pool (serving/cache.py
+    layout); scale_c/scale_kr enable the int8 per-row dequant path."""
+    return mtla_decode_paged_pallas(q_lat, q_rope, pool_c, pool_kr,
+                                    page_table, j, scale, scale_c=scale_c,
+                                    scale_kr=scale_kr,
+                                    interpret=_interpret())

@@ -39,6 +39,17 @@ def main(argv=None):
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--burst", type=int, default=8,
                     help="decode tokens per jitted call / host sync")
+    ap.add_argument("--page-size", type=int, default=0,
+                    help="paged latent KV cache: compressed positions per "
+                         "page (0 = dense per-slot caches; mla/mtla only)")
+    ap.add_argument("--pool-pages", type=int, default=0,
+                    help="physical pages in the shared pool (0 = dense-"
+                         "equivalent batch*ceil(ceil(max_len/s)/page)); "
+                         "smaller pools admit with back-pressure")
+    ap.add_argument("--cache-dtype", default="fp32",
+                    choices=["fp32", "bf16", "int8"],
+                    help="paged pool element type; int8 stores per-page "
+                         "row scales (requires --page-size)")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="0 = greedy; > 0 samples with per-request seeds")
     ap.add_argument("--top-k", type=int, default=0)
@@ -60,7 +71,9 @@ def main(argv=None):
     params = api.init_model(jax.random.PRNGKey(args.seed), cfg)
     eng = DecodeEngine(params, cfg, batch=args.batch, max_len=args.max_len,
                        dtype=jnp.float32, backend=args.backend,
-                       burst=args.burst)
+                       burst=args.burst, page_size=args.page_size,
+                       pool_pages=args.pool_pages,
+                       cache_dtype=args.cache_dtype)
     sp = SamplingParams(temperature=args.temperature, top_k=args.top_k,
                         top_p=args.top_p)
     rng = np.random.default_rng(args.seed)
@@ -91,11 +104,21 @@ def main(argv=None):
     print(f"decode:  {eng.decoded_tokens} toks in {eng.decode_time_s:.2f}s "
           f"({rate:.1f} tok/s incl. compile; {eng.decode_calls} bursts, "
           f"{eng.steps} device steps, 1 host sync per burst)")
-    active, allocated = cache_bytes_split(eng.caches, eng.peak_active,
-                                          args.batch)
-    print(f"kv-cache bytes: active {active:,} (peak {eng.peak_active}/"
-          f"{args.batch} slots) / allocated {allocated:,} "
-          f"({cfg.attn.kv_cache_per_token} elems/token/layer)")
+    if eng.pool is not None:
+        rep = eng.cache_report()
+        pool = eng.pool
+        print(f"kv-cache (paged {eng.cache_spec.cache_dtype}, "
+              f"page={pool.page_size}): peak {rep['peak']:,} bytes "
+              f"({rep['pages_peak']}/{rep['pages_total']} pages, "
+              f"{rep['pages_peak'] / max(rep['pages_total'], 1):.0%} peak "
+              f"occupancy) / pool allocated {rep['allocated']:,} bytes; "
+              f"{eng.deferrals} deferred admissions")
+    else:
+        active, allocated = cache_bytes_split(eng.caches, eng.peak_active,
+                                              args.batch)
+        print(f"kv-cache bytes: active {active:,} (peak {eng.peak_active}/"
+              f"{args.batch} slots) / allocated {allocated:,} "
+              f"({cfg.attn.kv_cache_per_token} elems/token/layer)")
     return out
 
 

@@ -50,11 +50,13 @@ def head_weights(params, cfg: ModelConfig):
 
 
 def init_caches(cfg: ModelConfig, batch: int, max_len: int,
-                dtype=jnp.bfloat16, src_len: int = 1024):
+                dtype=jnp.bfloat16, src_len: int = 1024, paged=None):
+    """``paged`` (core.types.PagedCacheSpec or None) selects the shared
+    block-pool latent cache layout for mla/mtla decode caches (serving)."""
     if cfg.family == "encdec":
         return encdec_mod.init_encdec_caches(cfg, batch, max_len, src_len,
-                                             dtype)
-    return lm_mod.init_lm_caches(cfg, batch, max_len, dtype)
+                                             dtype, paged=paged)
+    return lm_mod.init_lm_caches(cfg, batch, max_len, dtype, paged=paged)
 
 
 def prefill(params, cfg: ModelConfig, batch, caches, *, dtype=jnp.bfloat16):

@@ -167,7 +167,11 @@ def encdec_apply(params, cfg: ModelConfig, src_embeds, tgt_tokens,
 # --- serving ----------------------------------------------------------------
 
 def init_encdec_caches(cfg: ModelConfig, batch: int, max_len: int,
-                       src_len: int, dtype=jnp.bfloat16):
+                       src_len: int, dtype=jnp.bfloat16, paged=None):
+    if paged is not None:
+        raise ValueError("paged KV caches are unsupported for encdec: the "
+                         "engine's per-request prefill splices whole cache "
+                         "rows, which a shared page pool has none of")
     one = lambda: {
         "attn": init_attn_cache(cfg.attn, batch, max_len, dtype),
         "xk": jnp.zeros((batch, src_len, cfg.attn.num_heads,

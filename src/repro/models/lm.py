@@ -207,12 +207,20 @@ def lm_head(params, cfg: ModelConfig, hidden):
 
 
 def init_lm_caches(cfg: ModelConfig, batch: int, max_len: int,
-                   dtype=jnp.bfloat16):
+                   dtype=jnp.bfloat16, paged=None):
+    """``paged`` (core.types.PagedCacheSpec) switches the latent decode
+    caches to the shared block-pool layout — homogeneous attention stacks
+    only (the pool leaves scan over layers like any other cache leaf; the
+    page table is replicated per layer, mirroring ``pos``)."""
+    if paged is not None and cfg.family not in ("dense", "moe", "vlm"):
+        raise ValueError("paged KV caches require a homogeneous attention "
+                         f"stack (dense/moe/vlm), got family {cfg.family!r}")
+
     def one(window: int):
         c: Dict[str, Any] = {}
         if cfg.family != "ssm":
             c["attn"] = init_attn_cache(cfg.attn, batch, max_len, dtype,
-                                        window=window)
+                                        window=window, paged=paged)
         if cfg.family in ("ssm", "hybrid"):
             c["ssm"] = ssm_mod.init_ssm_cache(cfg.ssm, cfg.d_model, batch,
                                               jnp.float32)

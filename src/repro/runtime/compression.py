@@ -25,13 +25,34 @@ def init_ef_state(grads_like) -> Any:
         lambda a: jnp.zeros(a.shape, jnp.float32), grads_like)
 
 
-def _quantize(x, *, bits: int = 8):
-    """Symmetric per-tensor int quantization. Returns (q, scale)."""
-    absmax = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12)
+def symmetric_quantize(x, *, bits: int = 8, axis=None, dtype=jnp.int32):
+    """Symmetric integer quantization. Returns (q, scale).
+
+    ``axis=None`` -> one per-tensor scale (the gradient all-reduce path);
+    ``axis=-1`` -> one scale per row over the last dim (the paged int8
+    latent-cache path: each compressed position's r-vector gets its own
+    scale, stored page-wise alongside the pool — serving/cache.py).
+    """
+    absx = jnp.abs(x.astype(jnp.float32))
+    absmax = jnp.max(absx) if axis is None else jnp.max(absx, axis=axis)
+    absmax = jnp.maximum(absmax, 1e-12)
     qmax = 2.0 ** (bits - 1) - 1
     scale = absmax / qmax
-    q = jnp.clip(jnp.round(x / scale), -qmax, qmax).astype(jnp.int32)
+    sc = scale if axis is None else jnp.expand_dims(scale, axis)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / sc), -qmax,
+                 qmax).astype(dtype)
     return q, scale
+
+
+def symmetric_dequantize(q, scale, axis=None):
+    """Inverse of ``symmetric_quantize`` (fp32)."""
+    sc = scale if axis is None else jnp.expand_dims(scale, axis)
+    return q.astype(jnp.float32) * sc
+
+
+def _quantize(x, *, bits: int = 8):
+    """Symmetric per-tensor int quantization. Returns (q, scale)."""
+    return symmetric_quantize(x, bits=bits)
 
 
 def compressed_psum(grads, ef_state, axis_names, mode: str

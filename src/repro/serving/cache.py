@@ -1,0 +1,194 @@
+"""Paged latent KV cache: host-side block-pool allocator + accounting.
+
+The device side (core/attention.py::init_attn_cache(paged=...),
+core/mtla.py paged_* ops, kernels/mtla_decode.py paged kernel) stores the
+latent decode cache as a shared per-layer pool of fixed-size temporal pages
+plus a per-slot page table. This module owns the **host** half:
+
+  * ``PagePool`` — the physical-page free list, per-slot page mappings, and
+    admission *reservations*. A request reserves its worst-case page demand
+    (min(prompt + max_new, max_len + 1) positions, compressed by MTLA's
+    temporal stride s, so pages are consumed at 1/s the token rate) when it
+    is admitted; pages are then **mapped lazily** — only the compressed
+    positions a slot has actually written (plus the upcoming burst's quota)
+    are backed by physical pages. Reservations make lazy mapping safe: a
+    mapped-page top-up inside the reservation can never fail, so the jitted
+    burst loop needs no allocator and no pause states.
+  * Admission **back-pressure**: when free-page reservations run out the
+    scheduler defers the request (it stays queued) instead of rejecting it;
+    retired slots release their pages at the next host sync and deferred
+    requests admit immediately after (continuous batching,
+    serving/engine.py).
+  * Accounting — active/peak **mapped** bytes vs the dense allocation, the
+    paper's memory axis at serving time.
+
+The page table is replicated per layer on device (leaf ``[L, B, n]``, like
+``pos``) so it rides the model's layer scan; the host keeps the single
+``[B, n]`` source of truth and pushes it between jitted calls.
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.types import PagedCacheSpec
+
+
+class PagePool:
+    """Physical-page allocator for one engine's paged latent cache.
+
+    ``total_pages`` physical pages of ``page_size`` compressed positions
+    each, shared by ``batch`` slots whose logical address space is
+    ``logical_pages`` pages (= ceil(ceil(max_len / s) / page_size))."""
+
+    def __init__(self, spec: PagedCacheSpec, batch: int, max_len: int,
+                 s: int):
+        self.spec, self.batch, self.max_len, self.s = spec, batch, max_len, s
+        self.page_size = spec.page_size
+        # geometry shared with the device cache init (core/attention.py):
+        # the sentinel must equal the device pool size for writes through
+        # unmapped entries to drop
+        self.t_max, self.logical_pages, self.total_pages = \
+            spec.geometry(batch, max_len, s)
+        self.sentinel = self.total_pages               # unmapped marker
+        self.reset()
+
+    def reset(self):
+        self.free: List[int] = list(range(self.total_pages))[::-1]
+        self.table = np.full((self.batch, self.logical_pages),
+                             self.sentinel, np.int32)
+        self.mapped: List[List[int]] = [[] for _ in range(self.batch)]
+        self.reserved = np.zeros((self.batch,), np.int64)
+        self.reserved_total = 0
+        self.peak_pages = 0
+        self.dirty = False          # host table ahead of the device copy
+
+    # --- sizing -------------------------------------------------------------
+    def _slots_for_len(self, length: int) -> int:
+        """Compressed chunk slots touched by writes at positions < length."""
+        if length <= 0:
+            return 0
+        return min(self.t_max, (length - 1) // self.s + 1)
+
+    def pages_for_request(self, prompt_len: int, max_new: int) -> int:
+        """Worst-case page demand of a request: its writes reach positions
+        < min(prompt + max_new, max_len + 1) (the engine retires a slot
+        whose next feed position would exceed the capacity)."""
+        final = min(prompt_len + max_new, self.max_len + 1)
+        return -(-self._slots_for_len(final) // self.page_size)
+
+    # --- reservations (admission) -------------------------------------------
+    def can_reserve(self, pages: int) -> bool:
+        return self.reserved_total + pages <= self.total_pages
+
+    def can_ever_reserve(self, pages: int) -> bool:
+        return pages <= self.total_pages
+
+    def reserve(self, slot: int, pages: int):
+        assert self.reserved[slot] == 0, f"slot {slot} already reserved"
+        assert self.can_reserve(pages), "reservation over-commits the pool"
+        self.reserved[slot] = pages
+        self.reserved_total += pages
+
+    # --- lazy mapping -------------------------------------------------------
+    def ensure_mapped(self, slot: int, upto_len: int) -> bool:
+        """Back slot's compressed positions for writes < ``upto_len`` with
+        physical pages. Clamped to the slot's reservation, so it cannot
+        fail mid-flight. Returns True when new pages were mapped."""
+        need = -(-self._slots_for_len(upto_len) // self.page_size)
+        need = min(need, int(self.reserved[slot]))
+        grew = False
+        row = self.mapped[slot]
+        while len(row) < need:
+            phys = self.free.pop()
+            self.table[slot, len(row)] = phys
+            row.append(phys)
+            grew = True
+        if grew:
+            self.dirty = True
+            self.peak_pages = max(self.peak_pages, self.used_pages)
+        return grew
+
+    def release(self, slot: int):
+        """Return the slot's pages to the free list and clear its table row
+        (unmapped sentinel => the retired slot's further writes drop)."""
+        self.free.extend(self.mapped[slot][::-1])
+        self.mapped[slot] = []
+        self.table[slot, :] = self.sentinel
+        self.reserved_total -= int(self.reserved[slot])
+        self.reserved[slot] = 0
+        self.dirty = True
+
+    # --- occupancy ----------------------------------------------------------
+    @property
+    def used_pages(self) -> int:
+        return sum(len(m) for m in self.mapped)
+
+    def occupancy(self) -> float:
+        return self.used_pages / max(self.total_pages, 1)
+
+
+# ---------------------------------------------------------------------------
+# device-tree helpers
+# ---------------------------------------------------------------------------
+
+def set_page_table(caches, table: np.ndarray):
+    """Replace every ``page_table`` leaf with the host table, replicated
+    over its leading layer axis. Leaves shapes are unchanged, so pushing a
+    new table never retraces the jitted burst/prefill graphs."""
+    dev = None
+
+    def rec(node):
+        nonlocal dev
+        if isinstance(node, dict):
+            out = {k: rec(v) for k, v in node.items()}
+            if "page_table" in out:
+                L = out["page_table"].shape[0]
+                if dev is None:
+                    dev = jnp.asarray(
+                        np.ascontiguousarray(
+                            np.broadcast_to(table[None], (L,) + table.shape)))
+                out["page_table"] = dev
+            return out
+        if isinstance(node, (list, tuple)):
+            return type(node)(rec(v) for v in node)
+        return node
+
+    return rec(caches)
+
+
+def masked_page_table(table: np.ndarray, slots, sentinel: int) -> np.ndarray:
+    """Table visible to a batched prefill: only ``slots`` keep their
+    mappings; every other row is fully unmapped, so the dummy rows of the
+    right-padded prefill cannot write into live slots' pages."""
+    out = np.full_like(table, sentinel)
+    out[list(slots)] = table[list(slots)]
+    return out
+
+
+def paged_pool_bytes(caches) -> Tuple[int, int]:
+    """(bytes per mapped physical page across all layers/leaves,
+    fixed overhead bytes: page tables + positions + any non-pool leaves)."""
+    per_page = 0
+    overhead = 0
+
+    def rec(node):
+        nonlocal per_page, overhead
+        if isinstance(node, dict):
+            pools = ("pool_c", "pool_kr", "scale_c", "scale_kr")
+            for k, v in node.items():
+                if k in pools and hasattr(v, "dtype"):
+                    # leaf [L, P, page, ...]: nbytes / P = per-page, all layers
+                    per_page += v.size * v.dtype.itemsize // v.shape[1]
+                elif isinstance(v, (dict, list, tuple)):
+                    rec(v)
+                elif hasattr(v, "dtype"):
+                    overhead += v.size * v.dtype.itemsize
+        elif isinstance(node, (list, tuple)):
+            for v in node:
+                rec(v)
+
+    rec(caches)
+    return per_page, overhead

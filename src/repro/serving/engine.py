@@ -33,9 +33,20 @@ The attention backend (``ref`` jnp vs ``pallas`` fused kernels,
 core/dispatch.py) rides on ``cfg.backend`` into both the prefill graph and
 the decode burst; ``DecodeEngine(backend=...)`` overrides it per engine.
 
+The latent decode caches can run **paged** (``page_size > 0``): a shared
+block pool of fixed-size temporal pages + per-slot page tables
+(serving/cache.py, core/mtla.py paged ops), with optional bf16/int8 pool
+storage (int8 carries per-row scales). Admission then reserves each
+request's worst-case page demand and maps pages lazily as positions are
+written; when reservations outrun the pool the scheduler *defers* the
+request (back-pressure) until retiring slots release pages — combined with
+the between-burst admission below, this is continuous batching against a
+bounded memory budget.
+
 The KV-cache memory accounting (``cache_bytes`` allocated,
-``cache_bytes_split`` active vs allocated) backs the paper-table benchmarks
-(GPU-memory columns of Tables 1-5).
+``cache_bytes_split`` active vs allocated, ``cache_report`` mapped-page
+bytes in paged mode) backs the paper-table benchmarks (GPU-memory columns
+of Tables 1-5).
 """
 from __future__ import annotations
 
@@ -47,9 +58,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.types import ModelConfig
+from ..core.types import ModelConfig, PagedCacheSpec
 from ..models import api
+from . import cache as cache_mod
 from . import sampling
+from .cache import PagePool
 from .sampling import SamplingParams
 from .scheduler import Scheduler
 
@@ -102,7 +115,14 @@ class DecodeEngine:
     def __init__(self, params, cfg: ModelConfig, *, batch: int,
                  max_len: int, dtype=jnp.float32, eos: Optional[int] = None,
                  backend: Optional[str] = None, prefill_bucket: int = 16,
-                 burst: int = 8):
+                 burst: int = 8, page_size: int = 0,
+                 pool_pages: int = 0, cache_dtype: str = "fp32"):
+        """``page_size > 0`` switches the latent decode caches to the paged
+        block-pool layout (serving/cache.py): pages of ``page_size``
+        compressed positions from a shared pool of ``pool_pages`` physical
+        pages (0 = dense-equivalent sizing), stored as ``cache_dtype``
+        ("fp32" | "bf16" | "int8"; int8 adds per-row scales). Requires a
+        latent attention kind (mla/mtla) on a batched-prefill family."""
         if backend is not None:
             cfg = cfg.replace(backend=backend)
         self.params, self.cfg = params, cfg
@@ -111,18 +131,40 @@ class DecodeEngine:
         self.prefill_bucket = max(int(prefill_bucket), 1)
         self.burst = max(int(burst), 1)
         self.scheduler = Scheduler(batch, max_len)
-        self.caches = api.init_caches(cfg, batch, max_len, dtype=dtype,
-                                      src_len=max(cfg.frontend_len, 4))
-        self.state = self._init_state()
-        self._prefill = jax.jit(
-            lambda p, b, c: api.prefill(p, cfg, b, c, dtype=dtype))
-        self._sample = jax.jit(sampling.sample)
-        self._burst = jax.jit(self._make_burst())
         a = cfg.attn
         ring = (a.kind in ("mha", "mqa", "gqa") and a.sliding_window
                 and a.sliding_window < max_len)
         self._batched_prefill = (cfg.family in ("dense", "moe")
                                  and cfg.frontend == "none" and not ring)
+        self.cache_spec: Optional[PagedCacheSpec] = None
+        self.pool: Optional[PagePool] = None
+        if page_size > 0:
+            if a.kind not in ("mla", "mtla"):
+                raise ValueError("paged KV caches require a latent "
+                                 f"attention kind (mla/mtla), got {a.kind!r}")
+            if not self._batched_prefill:
+                raise ValueError(
+                    "paged KV caches require the batched-prefill path "
+                    "(dense/moe family, no frontend, no ring cache): "
+                    "per-request prefill splices whole cache rows, which "
+                    "a shared page pool has none of")
+            self.cache_spec = PagedCacheSpec(page_size=page_size,
+                                             pool_pages=pool_pages,
+                                             cache_dtype=cache_dtype)
+            self.pool = PagePool(self.cache_spec, batch, max_len,
+                                 a.s if a.kind == "mtla" else 1)
+        elif cache_dtype != "fp32":
+            raise ValueError("cache_dtype is a property of the paged pool; "
+                             "set page_size > 0 (dense caches follow the "
+                             "engine dtype)")
+        self.caches = api.init_caches(cfg, batch, max_len, dtype=dtype,
+                                      src_len=max(cfg.frontend_len, 4),
+                                      paged=self.cache_spec)
+        self.state = self._init_state()
+        self._prefill = jax.jit(
+            lambda p, b, c: api.prefill(p, cfg, b, c, dtype=dtype))
+        self._sample = jax.jit(sampling.sample)
+        self._burst = jax.jit(self._make_burst())
         self._finished: List[Request] = []
         self.failed: List[Request] = []
         self.burst_traces = 0           # burst graph traces (compilations)
@@ -131,19 +173,24 @@ class DecodeEngine:
     def _reset_counters(self):
         self.steps = 0                  # decode steps executed on device
         self.prefill_calls = 0          # jitted prefill invocations
-        self.decode_calls = 0           # jitted burst invocations
+        self.decode_calls = 0          # jitted burst invocations
         self.decoded_tokens = 0         # tokens emitted by decode bursts
         self.prefill_tokens = 0         # prompt tokens prefilled
         self.prefill_time_s = 0.0
         self.decode_time_s = 0.0
         self.peak_active = 0
+        self.deferrals = 0              # admission rounds cut by page
+        #                                 back-pressure (paged mode)
 
     def reset(self):
         """Drop all requests and re-init caches/state; compiled burst and
         prefill graphs are kept (used by benchmarks to exclude compile)."""
         self.caches = api.init_caches(self.cfg, self.batch, self.max_len,
                                       dtype=self.dtype,
-                                      src_len=max(self.cfg.frontend_len, 4))
+                                      src_len=max(self.cfg.frontend_len, 4),
+                                      paged=self.cache_spec)
+        if self.pool is not None:
+            self.pool.reset()
         self.state = self._init_state()
         self.scheduler.reset()
         self._finished, self.failed = [], []
@@ -223,33 +270,44 @@ class DecodeEngine:
 
     # --- admission ---------------------------------------------------------
     def add_request(self, req: Request) -> bool:
-        """Admit one request; returns False if it was rejected (oversized)
-        or no slot is free. Rejected requests carry ``req.error``."""
-        plan = self.scheduler.plan([req])
+        """Admit one request; returns False if it was rejected (oversized),
+        deferred (page back-pressure), or no slot is free. Rejected
+        requests carry ``req.error``."""
+        plan = self.scheduler.plan([req], self.pool)
         self._apply_plan(plan)
         return bool(plan.assignments)
 
     def add_requests(self, reqs: Sequence[Request]) -> int:
         """One admission round over the front of ``reqs`` (in order):
         oversized prompts are marked failed and skipped, the rest fill free
-        slots and share a single jitted right-padded prefill call on the
-        batched path. Returns the number of requests consumed (admitted +
-        rejected); completions at admission time (max_new reached, EOS on
-        the first token) land in the finished queue immediately."""
-        plan = self.scheduler.plan(reqs)
+        slots — gated on page availability in paged mode, where a request
+        that does not fit the pool's unreserved pages is *deferred* (stays
+        queued) instead of rejected — and share a single jitted
+        right-padded prefill call on the batched path. Returns the number
+        of requests consumed (admitted + rejected); completions at
+        admission time (max_new reached, EOS on the first token) land in
+        the finished queue immediately."""
+        plan = self.scheduler.plan(reqs, self.pool)
         self._apply_plan(plan)
         return plan.consumed
 
     def _apply_plan(self, plan):
         for req in plan.rejected:
+            # scheduler.plan set req.error (oversized prompt / over-pool)
             req.done = True
-            req.error = (f"prompt length {len(req.prompt)} exceeds engine "
-                         f"max_len {self.max_len}")
             self.failed.append(req)
             self._finished.append(req)
+        if plan.deferred:
+            self.deferrals += 1
         if not plan.assignments:
             return
         self.scheduler.commit(plan)
+        if self.pool is not None:
+            for slot, req in plan.assignments:
+                self.pool.reserve(slot, self.pool.pages_for_request(
+                    len(req.prompt), req.max_new))
+                # prefill writes compressed positions < prompt length
+                self.pool.ensure_mapped(slot, len(req.prompt))
         t0 = time.perf_counter()
         if self._batched_prefill:
             logits = self._prefill_batched(plan.assignments)
@@ -267,8 +325,15 @@ class DecodeEngine:
                                len(self.scheduler.occupied()))
 
     def _prefill_batched(self, assignments) -> jnp.ndarray:
-        """Single right-padded jitted prefill for the admitted slots; splices
-        the fresh cache rows into the live cache. Returns logits [B, V]."""
+        """Single right-padded jitted prefill for the admitted slots.
+
+        Dense caches: prefill runs on a fresh allocation and the admitted
+        rows are spliced into the live cache. Paged caches: prefill writes
+        straight into the live pool — the page table it sees is masked down
+        to the admitted slots, so the dummy rows (live neighbours mid-
+        decode, or empty slots) scatter through the unmapped sentinel and
+        drop; no transient dense allocation ever exists. Returns logits
+        [B, V]."""
         slots = [s for s, _ in assignments]
         todo = [r for _, r in assignments]
         lmax = max(len(r.prompt) for r in todo)
@@ -282,6 +347,27 @@ class DecodeEngine:
         for slot, req in assignments:
             toks[slot, :len(req.prompt)] = req.prompt
             lengths[slot] = len(req.prompt)
+        if self.pool is not None:
+            # live rows keep their true feed position: the prefill rewrites
+            # cache["pos"] from `lengths` for every row, and a mid-decode
+            # slot's device pos lags its host length by one (the latest
+            # sampled token is only written at its next decode step)
+            admitted = set(slots)
+            for slot, req in self.scheduler.occupied():
+                if slot not in admitted:
+                    lengths[slot] = len(req.prompt) + len(req.out) - 1
+            masked = cache_mod.masked_page_table(self.pool.table, slots,
+                                                 self.pool.sentinel)
+            caches = cache_mod.set_page_table(self.caches, masked)
+            logits, caches = self._prefill(
+                self.params,
+                {"tokens": jnp.asarray(toks),
+                 "lengths": jnp.asarray(lengths)},
+                caches)
+            self.caches = cache_mod.set_page_table(caches, self.pool.table)
+            self.pool.dirty = False
+            self.prefill_calls += 1
+            return logits
         fresh = api.init_caches(self.cfg, self.batch, self.max_len,
                                 dtype=self.dtype,
                                 src_len=max(self.cfg.frontend_len, 4))
@@ -362,9 +448,54 @@ class DecodeEngine:
                                     self.eos, self.max_len)):
                 st["done"][slot] = True
                 req.done = True
-                self.scheduler.release(slot)
+                self._release_slot(slot)
                 self._finished.append(req)
         self.state = {k: jnp.asarray(v) for k, v in st.items()}
+
+    def _release_slot(self, slot: int):
+        """Retire a slot: free its scheduler slot and (paged mode) return
+        its pages to the pool — the sentinel table row makes the retired
+        slot's further in-burst writes drop before the pages are reused."""
+        self.scheduler.release(slot)
+        if self.pool is not None:
+            self.pool.release(slot)
+
+    def _sync_pages(self, quota: int):
+        """Pre-burst page top-up: back every active slot's writes for the
+        coming burst (positions < length + quota - 1 on device, where the
+        host length leads the device feed position by one pending token)
+        with physical pages, then push the page table once if anything
+        changed (mappings grown or retired slots cleared)."""
+        for slot, req in self.scheduler.occupied():
+            self.pool.ensure_mapped(
+                slot, len(req.prompt) + len(req.out) + quota - 1)
+        if self.pool.dirty:
+            self.caches = cache_mod.set_page_table(self.caches,
+                                                   self.pool.table)
+            self.pool.dirty = False
+
+    # --- cache accounting ---------------------------------------------------
+    def cache_report(self) -> Dict[str, int]:
+        """KV-cache bytes: ``allocated`` (resident device arrays),
+        ``active`` (bytes backing live sequences right now) and ``peak``
+        (high-water mark of active bytes). Dense caches scale with slot
+        occupancy; paged caches with **mapped pages**, so short or retired
+        requests stop being charged for positions they never wrote."""
+        allocated = cache_bytes(self.caches)
+        if self.pool is None:
+            active, _ = cache_bytes_split(
+                self.caches, len(self.scheduler.occupied()), self.batch)
+            peak, _ = cache_bytes_split(self.caches, self.peak_active,
+                                        self.batch)
+            return {"allocated": allocated, "active": active, "peak": peak}
+        per_page, overhead = cache_mod.paged_pool_bytes(self.caches)
+        return {"allocated": allocated,
+                "active": self.pool.used_pages * per_page + overhead,
+                "peak": self.pool.peak_pages * per_page + overhead,
+                "page_bytes": per_page,
+                "pages_used": self.pool.used_pages,
+                "pages_peak": self.pool.peak_pages,
+                "pages_total": self.pool.total_pages}
 
     # --- decode burst orchestration ----------------------------------------
     def _burst_step(self) -> List[Request]:
@@ -373,6 +504,8 @@ class DecodeEngine:
         if not self.scheduler.any_active():
             return []
         quota = self.scheduler.burst_quota(self.burst)
+        if self.pool is not None:
+            self._sync_pages(quota)
         t0 = time.perf_counter()
         state, caches, out_tok, out_val, k = self._burst(
             self.params, self.state, self.caches,
@@ -391,7 +524,7 @@ class DecodeEngine:
             self.decoded_tokens += len(new)
             if done[slot]:
                 req.done = True
-                self.scheduler.release(slot)
+                self._release_slot(slot)
                 finished.append(req)
         return finished
 

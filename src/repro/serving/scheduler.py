@@ -26,10 +26,13 @@ from typing import List, Optional, Sequence, Tuple
 class AdmissionPlan:
     """One admission round: slot assignments for admissible requests, the
     oversized rejects, and how many entries were consumed from the front of
-    the pending queue (= admitted + rejected)."""
+    the pending queue (= admitted + rejected). ``deferred`` marks a round
+    cut short by page-pool back-pressure: the next request stays queued
+    (not rejected) until retiring slots release enough pages."""
     assignments: List[Tuple[int, object]]
     rejected: List[object]
     consumed: int
+    deferred: bool = False
 
 
 class Scheduler:
@@ -53,22 +56,44 @@ class Scheduler:
         self.slots = [None] * self.batch
 
     # --- admission ---------------------------------------------------------
-    def plan(self, pending: Sequence) -> AdmissionPlan:
+    def plan(self, pending: Sequence, pool=None) -> AdmissionPlan:
         """Walk ``pending`` in order, assigning free slots. Requests whose
-        prompt cannot fit the engine's cache are rejected (consumed, no slot)
-        and the scan continues — admission never raises mid-round."""
+        prompt cannot fit the engine's cache — or (paged mode) whose
+        worst-case page demand exceeds the whole pool — are rejected
+        (consumed, no slot) and the scan continues; admission never raises
+        mid-round. With a page ``pool`` (serving/cache.py), a request whose
+        reservation does not fit the pages still unreserved is *deferred*:
+        the round stops there and the request stays queued until retiring
+        slots release pages — back-pressure instead of rejection."""
         free = self.free_slots()
         assignments, rejected, consumed = [], [], 0
+        reserve = 0                   # pages this round will reserve
+        deferred = False
         for req in pending:
             if len(req.prompt) > self.max_len:
+                req.error = (f"prompt length {len(req.prompt)} exceeds "
+                             f"engine max_len {self.max_len}")
                 rejected.append(req)
                 consumed += 1
                 continue
+            need = 0
+            if pool is not None:
+                need = pool.pages_for_request(len(req.prompt), req.max_new)
+                if not pool.can_ever_reserve(need):
+                    req.error = (f"request needs {need} cache pages but the "
+                                 f"pool only has {pool.total_pages}")
+                    rejected.append(req)
+                    consumed += 1
+                    continue
             if not free:
                 break
+            if pool is not None and not pool.can_reserve(reserve + need):
+                deferred = True
+                break
+            reserve += need
             assignments.append((free.pop(0), req))
             consumed += 1
-        return AdmissionPlan(assignments, rejected, consumed)
+        return AdmissionPlan(assignments, rejected, consumed, deferred)
 
     def commit(self, plan: AdmissionPlan):
         for slot, req in plan.assignments:
