@@ -19,7 +19,19 @@ columns: the engine serves two waves of requests much shorter than
 the paged pool maps only written pages (at 1/s the token rate for MTLA)
 and recycles them across waves. ``peak_cache_bytes`` is the mapped-page
 high-water mark (dense: the allocation); ``vs_dense_fp32`` is the ratio
-the CI regression gate and the paged-cache acceptance check read."""
+the CI regression gate and the paged-cache acceptance check read.
+
+The prefix-reuse section serves waves of requests sharing an 80% prompt
+prefix through the radix prefix cache (serving/prefix.py): later waves map
+the published prefix pages read-only and prefill only the 20% suffix.
+``hit_rate`` / ``prefill_skipped`` quantify the reuse — deterministic
+counters the CI gate (benchmarks/compare.py) treats as hard floors, so a
+prefix path that silently stops hitting fails CI even though decode
+tokens/s (which excludes prefill) would not move. ``prefill_toks`` is the
+prefill work actually done and ``vs_cold`` compares end-to-end tokens/s
+(emitted tokens over prefill + decode wall clock) against the identical
+engine with the prefix cache off — informational at this smoke scale,
+where host radix overhead and the tiny model make it hover near 1x."""
 from __future__ import annotations
 
 import jax
@@ -43,6 +55,11 @@ CACHE_MODES = (("dense-fp32", {}),
                ("paged-fp32", {"page_size": 8, "cache_dtype": "fp32"}),
                ("paged-int8", {"page_size": 8, "cache_dtype": "int8"}))
 
+# prefix-reuse section: 8 requests sharing an 80% prefix (32 of 40 tokens,
+# page-aligned for both s=1 and s=2 at page_size=8), two waves over the
+# slots so later waves hit the pages the first wave published
+PREFIX_PROMPT, PREFIX_SHARED, PREFIX_MAX_LEN = 40, 32, 96
+
 
 def _requests(cfg, n=BATCH, seed=0):
     rng = np.random.default_rng(seed)
@@ -53,15 +70,39 @@ def _requests(cfg, n=BATCH, seed=0):
             for i in range(n)]
 
 
-def _timed_run(eng, cfg, n):
+def _prefix_requests(cfg, n, seed=0):
+    rng = np.random.default_rng(seed)
+    pre = rng.integers(0, cfg.vocab_size,
+                       size=(PREFIX_SHARED,)).astype(np.int32)
+    return [Request(rid=i, prompt=np.concatenate(
+                [pre, rng.integers(0, cfg.vocab_size,
+                                   size=(PREFIX_PROMPT - PREFIX_SHARED,)
+                                   ).astype(np.int32)]),
+                    max_new=MAX_NEW)
+            for i in range(n)]
+
+
+def _timed_run(eng, cfg, n, maker=_requests):
     """Best decode tokens/s over TIMED_RUNS repetitions (engine state —
     including the per-run decode clock — resets each time; the compiled
     graphs persist, so repetitions cost milliseconds)."""
     best = 0.0
     for _ in range(TIMED_RUNS):
         eng.reset()
-        eng.run(_requests(cfg, n))
+        eng.run(maker(cfg, n))
         best = max(best, eng.decoded_tokens / max(eng.decode_time_s, 1e-9))
+    return best
+
+
+def _timed_e2e(eng, cfg, n, maker):
+    """Best end-to-end tokens/s (emitted tokens over prefill + decode wall
+    clock) — the axis prefix reuse moves, since it removes prefill work."""
+    best = 0.0
+    for _ in range(TIMED_RUNS):
+        eng.reset()
+        eng.run(maker(cfg, n))
+        wall = eng.prefill_time_s + eng.decode_time_s
+        best = max(best, eng.decoded_tokens / max(wall, 1e-9))
     return best
 
 
@@ -110,4 +151,31 @@ def run():
                 f"toks_per_s={rate:.1f};peak_cache_bytes={peak};"
                 f"vs_dense_fp32={peak / dense_peak:.3f}x;"
                 f"peak_slot_occupancy={occ:.2f}{pages}")
+
+    for kind, s in (("mla", 2), ("mtla", 2)):
+        cfg = paper_model(kind, s=s, layers=2, d=64)
+        params = api.init_model(jax.random.PRNGKey(0), cfg)
+        n = 2 * BATCH
+        cold = DecodeEngine(params, cfg, batch=BATCH,
+                            max_len=PREFIX_MAX_LEN, dtype=jnp.float32,
+                            burst=CACHE_BURST, page_size=8)
+        cold.run(_prefix_requests(cfg, n))              # warmup
+        cold_e2e = _timed_e2e(cold, cfg, n, _prefix_requests)
+        eng = DecodeEngine(params, cfg, batch=BATCH, max_len=PREFIX_MAX_LEN,
+                           dtype=jnp.float32, burst=CACHE_BURST,
+                           page_size=8, prefix_cache=True)
+        eng.run(_prefix_requests(cfg, n))               # warmup
+        e2e = _timed_e2e(eng, cfg, n, _prefix_requests)
+        rate = _timed_run(eng, cfg, n, _prefix_requests)
+        rep = eng.cache_report()
+        us = 1e6 / rate
+        hit_rate = eng.prefix.hits / max(eng.prefix.lookups, 1)
+        rows.append(
+            f"bench_serving/prefix/{cfg.name}-reuse,{us:.1f},"
+            f"toks_per_s={rate:.1f};e2e_toks_per_s={e2e:.1f};"
+            f"vs_cold={e2e / cold_e2e:.2f}x;hit_rate={hit_rate:.2f};"
+            f"prefill_skipped={eng.prefill_tokens_skipped};"
+            f"prefill_toks={eng.prefill_tokens};"
+            f"pages_cached={rep['pages_cached']};"
+            f"pages_peak={rep['pages_peak']}")
     return rows

@@ -13,7 +13,11 @@ PR targets). Machine speed cancels; what remains is each row's speed
 relative to the same code's baseline shape, and a >2x drop there means an
 algorithmic regression (a lost burst loop, an accidental dense gather in
 the paged path), not noise. Memory ratios (``vs_dense_fp32``) are already
-machine-independent and are gated directly.
+machine-independent and are gated directly, as are the *deterministic*
+prefix-reuse counters (``hit_rate``, ``prefill_skipped``): they depend
+only on the radix-cache behaviour, not timing, so any drop below baseline
+means the prefix path stopped hitting — a feature loss the decode
+tokens/s column cannot see (it excludes prefill time).
 """
 from __future__ import annotations
 
@@ -88,6 +92,14 @@ def main() -> int:
             failures.append(
                 f"{name}: peak-cache ratio {cd['vs_dense_fp32']:.3f}x > "
                 f"baseline {bd['vs_dense_fp32']:.3f}x * {args.mem_slack}")
+        for det in ("hit_rate", "prefill_skipped"):
+            # deterministic counters: timing-free, so baseline is a floor
+            if det in bd and cd.get(det, 0) < bd[det] - 1e-9:
+                status = "PREFIX-REGRESSION"
+                failures.append(
+                    f"{name}: {det} {cd.get(det, 0)} < baseline {bd[det]} "
+                    f"(prefix reuse is deterministic; a drop means the "
+                    f"radix cache stopped hitting)")
         print(f"{status:>14}  {name}  {cur_rel:.2f}x ref "
               f"(baseline {base_rel:.2f})")
     print(f"checked {checked} rows, {len(failures)} failures "

@@ -315,17 +315,112 @@ def init_attn_cache(cfg: AttentionConfig, batch: int, max_len: int,
     }
 
 
+def _latent_prefill_continuation(p, cfg: AttentionConfig, x, cache,
+                                 offsets, lengths):
+    """Prefill a per-sequence *suffix* against cached latent prefix pages
+    (prefix-cache continuation, serving/prefix.py).
+
+    x [B,T,d] holds each sequence's uncached suffix right-padded to T;
+    ``offsets`` [B] is the cached-prefix token length (stride-aligned: the
+    hyper-network's partial-chunk merge state at a non-aligned tail is
+    request-dependent and cannot be shared, so the sharing boundary always
+    falls on a chunk boundary and the suffix opens a fresh chunk);
+    ``lengths`` [B] the suffix lengths. Rows with offset 0 are ordinary
+    cold prefills expressed in the same graph.
+
+    The suffix runs the standard train-path math at absolute positions
+    offset..offset+T-1 — including re-running the prompt tail's partial-
+    stride merge locally, so the in-progress chunk state is exactly what an
+    uncached prefill would have produced — while its queries attend to the
+    cached prefix chunks read from the page pool plus its own chunk track.
+    Writes go through ``paged_prefill_write_at`` at absolute chunk slots >=
+    offset//s, so shared prefix pages stay read-only.
+
+    Backend note: this path always runs the reference jnp math, on every
+    backend — the fused Pallas training kernels assume fresh positions
+    0..T-1 (core/dispatch.py), and the per-row offsets here violate that
+    layout. Only rounds containing a prefix hit take this graph
+    (serving/engine.py keeps hit-free rounds on the fresh-prefill path, so
+    a pallas engine loses no fused prefill work when the cache is cold); a
+    fused continuation kernel is future work.
+    """
+    B, T, _ = x.shape
+    s = cfg.s if cfg.kind == "mtla" else 1
+    offsets = offsets.astype(jnp.int32)
+    lengths = lengths.astype(jnp.int32)
+    positions = offsets[:, None] + jnp.arange(T)[None, :]          # [B, T]
+    q_nope, q_rope, c, kr = _latent_qcr(p, cfg, x, positions)
+    if cfg.kind == "mtla":
+        g = mtla.merge_gates(p, c, positions // s)                 # [B, T]
+    else:
+        g = jnp.ones((B, T), jnp.float32)
+    # local merge is exact because offsets are stride-aligned: the suffix's
+    # chunk grid coincides with its local token grid
+    P_, C_hat = mtla.temporal_merge(c, g, s)
+    local_t = C_hat.shape[1]
+    scale = mtla.default_scale(cfg.head_dim, cfg.softmax_scale)
+
+    # chunk track over the slot's full logical space: cached prefix chunks
+    # from the pool (read-only shared pages), local finalized chunks
+    # overlaid at their absolute slots. Slots the mask admits are always
+    # valid; everything else (stale pages, pad-chunk garbage) is masked.
+    view_c, view_kr = mtla.paged_view(cache)
+    idx_fin = jnp.minimum(jnp.arange(local_t) * s + (s - 1), T - 1)
+    kr_fin = jnp.take(kr, idx_fin, axis=1)                         # [B,t,dr]
+    bidx = jnp.arange(B)[:, None]
+    abs_j = offsets[:, None] // s + jnp.arange(local_t)[None, :]
+    chunk_c = view_c.at[bidx, abs_j].set(C_hat.astype(view_c.dtype),
+                                         mode="drop")
+    chunk_kr = view_kr.at[bidx, abs_j].set(kr_fin.astype(view_kr.dtype),
+                                           mode="drop")
+    ctx = mtla.attention_continuation(
+        q_nope, q_rope, dense(p["w_uk"], chunk_c),
+        dense(p["w_uv"], chunk_c), chunk_kr,
+        dense(p["w_uk"], P_), dense(p["w_uv"], P_), kr,
+        positions, s, scale, sm_dtype=_sm_dtype(cfg))
+    y = dense(p["wo"], ctx.reshape(B, T, -1))
+
+    # cache write: chunk slot j holds the merge state at its final member
+    # position clamped to the last real suffix token (same rule as the
+    # lengths-aware fresh prefill); dead slots drop instead of writing
+    last = lengths - 1
+    idxp = jnp.minimum(jnp.arange(local_t)[None, :] * s + (s - 1),
+                       last[:, None])                              # [B, t]
+    cc = jnp.take_along_axis(P_, idxp[:, :, None], axis=1)
+    ckr = jnp.take_along_axis(kr, idxp[:, :, None], axis=1)
+    live = jnp.arange(local_t)[None, :] <= (last // s)[:, None]
+    cache = mtla.paged_prefill_write_at(cache, cc, ckr, offsets // s, live)
+    cache["pos"] = offsets + lengths
+    return y, cache
+
+
 def attn_prefill(p, cfg: AttentionConfig, x, cache, *, window: int = 0,
-                 backend=None, lengths=None):
+                 backend=None, lengths=None, offsets=None):
     """Run the train path AND fill the decode cache. Fresh sequences only
-    (positions 0..T-1).
+    (positions 0..T-1), unless ``offsets`` selects the continuation path.
 
     lengths [B] (optional): per-sequence prompt lengths for right-padded
     batched prefill — tokens at positions >= lengths[b] are padding. Causal
     masking keeps pad tokens out of every real position's output; the cache
     is populated so that decode continues from position lengths[b] exactly
     as if each sequence had been prefilled alone at its own length.
+
+    offsets [B] (optional, latent kinds with a paged cache only): prefill
+    each row as a *suffix* starting at the given stride-aligned absolute
+    position, attending to the cached latent prefix already present in the
+    row's mapped pages (prefix-cache continuation). Requires ``lengths``
+    (the per-row suffix lengths).
     """
+    if offsets is not None:
+        if cfg.kind not in ("mla", "mtla") or "pool_c" not in cache:
+            raise ValueError(
+                "offset (prefix-cache continuation) prefill requires a "
+                "latent attention kind with a paged cache")
+        if lengths is None:
+            raise ValueError("offset prefill requires per-row suffix "
+                             "lengths")
+        return _latent_prefill_continuation(p, cfg, x, cache, offsets,
+                                            lengths)
     B, T, _ = x.shape
     positions = jnp.arange(T)[None, :].repeat(B, 0)
     seq_pos = (jnp.full((B,), T, jnp.int32) if lengths is None

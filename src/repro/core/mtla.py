@@ -163,6 +163,40 @@ def attention_compressed(q_nope, q_rope, k_chunk, v_chunk, kr_chunk,
     return ctx
 
 
+def attention_continuation(q_nope, q_rope, k_chunk, v_chunk, kr_chunk,
+                           k_self, v_self, kr_self, positions, s: int,
+                           scale: float, sm_dtype=jnp.float32):
+    """Compressed attention for a *continuation* prefill: the queries are a
+    suffix starting at a per-sequence, stride-aligned absolute offset, and
+    the chunk track spans the slot's full logical chunk space (cached
+    prefix chunks read from the page pool, local suffix chunks overlaid at
+    their absolute slots by the caller).
+
+    q_nope [B,T,H,dh], q_rope [B,T,H,dr] — suffix queries;
+    k_chunk/v_chunk [B,N,H,dh], kr_chunk [B,N,dr] — absolute chunk slots
+    0..N-1 (N = the logical capacity, not the suffix length);
+    k_self/v_self [B,T,H,dh], kr_self [B,T,dr] — own partial chunk state;
+    positions [B,T] — absolute token positions of the suffix.
+
+    Same attended set as ``attention_compressed`` (query at absolute m sees
+    finalized chunks j < m//s plus its own partial state); the only
+    difference is the per-row position/offset support and the fixed-width
+    chunk track, whose invalid slots the mask removes exactly.
+    """
+    N = k_chunk.shape[1]
+    lc = jnp.einsum("bthd,bjhd->bhtj", q_nope, k_chunk)
+    lc = lc + jnp.einsum("bthp,bjp->bhtj", q_rope, kr_chunk)
+    lc = lc * scale
+    allow = jnp.arange(N)[None, None, :] < (positions[:, :, None] // s)
+    lc = jnp.where(allow[:, None], lc, jnp.asarray(NEG_INF, lc.dtype))
+    ls = (jnp.einsum("bthd,bthd->bht", q_nope, k_self)
+          + jnp.einsum("bthp,btp->bht", q_rope, kr_self)) * scale
+    logits = jnp.concatenate([lc, ls[..., None]], axis=-1)
+    p = _softmax(logits, sm_dtype).astype(v_chunk.dtype)
+    ctx = jnp.einsum("bhtj,bjhd->bthd", p[..., :N], v_chunk)
+    return ctx + jnp.swapaxes(p[..., N:], 1, 2) * v_self
+
+
 # ---------------------------------------------------------------------------
 # incremental decode (absorbed form, Eq. 12/17)
 # ---------------------------------------------------------------------------
@@ -313,6 +347,45 @@ def paged_prefill_write(cache, cc, ckr):
                 skr.reshape(B * n, page), mode="drop"))
     return dict(cache, pool_c=scatter(pool_c, cc, r),
                 pool_kr=scatter(pool_kr, ckr, dr))
+
+
+def paged_prefill_write_at(cache, cc, ckr, start_chunk, live):
+    """Offset variant of ``paged_prefill_write`` for continuation prefill:
+    scatter per-slot chunk rows cc [B, t, r] / ckr [B, t, dr] at *absolute*
+    chunk slots ``start_chunk[b] + j`` through the page table. Rows with
+    ``live[b, j]`` False — or addressing past the table — are dropped.
+
+    ``start_chunk`` is each slot's cached-prefix chunk count, so writes
+    never address a chunk below it: the shared (read-only) prefix pages a
+    prefix-cache hit mapped into the slot's table are untouchable by
+    construction, which is what makes cross-request page sharing safe
+    without any write-protection machinery on device."""
+    pool_c, pool_kr = cache["pool_c"], cache["pool_kr"]
+    pt = cache["page_table"]
+    P, page, _ = pool_c.shape
+    B, n = pt.shape
+    t = cc.shape[1]
+    j_abs = start_chunk[:, None] + jnp.arange(t)[None, :]          # [B, t]
+    pidx = j_abs // page
+    off = j_abs % page
+    ok = live & (pidx < n)
+    bidx = jnp.arange(B)[:, None]
+    phys = jnp.where(ok, pt[bidx, jnp.minimum(pidx, n - 1)], P)
+    if "scale_c" in cache:
+        qc, sc = _paged_rows_quantize(cc.astype(jnp.float32))
+        qkr, skr = _paged_rows_quantize(ckr.astype(jnp.float32))
+        return dict(
+            cache,
+            pool_c=pool_c.at[phys, off].set(qc, mode="drop"),
+            pool_kr=pool_kr.at[phys, off].set(qkr, mode="drop"),
+            scale_c=cache["scale_c"].at[phys, off].set(sc, mode="drop"),
+            scale_kr=cache["scale_kr"].at[phys, off].set(skr, mode="drop"))
+    return dict(
+        cache,
+        pool_c=pool_c.at[phys, off].set(cc.astype(pool_c.dtype),
+                                        mode="drop"),
+        pool_kr=pool_kr.at[phys, off].set(ckr.astype(pool_kr.dtype),
+                                          mode="drop"))
 
 
 def paged_view(cache):

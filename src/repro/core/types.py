@@ -87,6 +87,16 @@ class PagedCacheSpec:
     def quantized(self) -> bool:
         return self.cache_dtype == "int8"
 
+    def tokens_per_page(self, s: int) -> int:
+        """Raw tokens covered by one physical page: ``page_size`` compressed
+        chunk slots of ``s`` tokens each. This is the prefix-cache sharing
+        granularity (serving/prefix.py): full pages are shared read-only,
+        and because a page boundary is always a chunk boundary, any
+        page-aligned prefix is automatically stride-aligned — the paper's
+        compressed/processed length-mismatch treatment applied to the
+        cross-request sharing boundary."""
+        return self.page_size * s
+
     def resolve_pool_pages(self, batch: int, logical_pages: int) -> int:
         return self.pool_pages if self.pool_pages > 0 \
             else batch * logical_pages

@@ -50,6 +50,21 @@ def main(argv=None):
                     choices=["fp32", "bf16", "int8"],
                     help="paged pool element type; int8 stores per-page "
                          "row scales (requires --page-size)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="share compressed latent prefix pages across "
+                         "requests through a radix tree over the page pool "
+                         "(requires --page-size)")
+    ap.add_argument("--preemption", action="store_true",
+                    help="let the run loop evict lower-priority resident "
+                         "slots to a host swap area when admissions starve "
+                         "(requires --page-size)")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="generate prompts sharing this many leading "
+                         "tokens (demonstrates prefix-cache hits)")
+    ap.add_argument("--hipri-last", type=int, default=0,
+                    help="give the last N requests priority 1 (with "
+                         "--preemption they evict resident priority-0 "
+                         "slots instead of queueing behind them)")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="0 = greedy; > 0 samples with per-request seeds")
     ap.add_argument("--top-k", type=int, default=0)
@@ -73,15 +88,22 @@ def main(argv=None):
                        dtype=jnp.float32, backend=args.backend,
                        burst=args.burst, page_size=args.page_size,
                        pool_pages=args.pool_pages,
-                       cache_dtype=args.cache_dtype)
+                       cache_dtype=args.cache_dtype,
+                       prefix_cache=args.prefix_cache,
+                       preemption=args.preemption)
     sp = SamplingParams(temperature=args.temperature, top_k=args.top_k,
                         top_p=args.top_p)
     rng = np.random.default_rng(args.seed)
+    shared = rng.integers(0, cfg.vocab_size,
+                          size=(min(args.shared_prefix, args.prompt_len),))
     reqs = [Request(rid=i,
-                    prompt=rng.integers(0, cfg.vocab_size,
-                                        size=(args.prompt_len,)),
+                    prompt=np.concatenate([
+                        shared,
+                        rng.integers(0, cfg.vocab_size,
+                                     size=(args.prompt_len - len(shared),))]),
                     max_new=args.max_new, sampling=sp,
-                    seed=args.seed + i)
+                    seed=args.seed + i,
+                    priority=int(i >= args.requests - args.hipri_last))
             for i in range(args.requests)]
     out = eng.run(reqs)
     total_toks = sum(len(v) for v in out.values())
@@ -113,6 +135,22 @@ def main(argv=None):
               f"{rep['pages_peak'] / max(rep['pages_total'], 1):.0%} peak "
               f"occupancy) / pool allocated {rep['allocated']:,} bytes; "
               f"{eng.deferrals} deferred admissions")
+        print(f"mapped split: private {rep['private']:,} / shared "
+              f"{rep['shared']:,} / cached {rep['cached']:,} bytes "
+              f"({rep['pages_private']}/{rep['pages_shared']}/"
+              f"{rep['pages_cached']} pages)")
+        if eng.prefix is not None:
+            px = eng.prefix
+            rate = px.hits / max(px.lookups, 1)
+            print(f"prefix-cache: {px.hits}/{px.lookups} hits "
+                  f"({rate:.0%}), {px.hit_tokens} cached prefix tokens, "
+                  f"{eng.prefill_tokens_skipped} prefill tokens skipped, "
+                  f"{px.published_pages} pages published, "
+                  f"{pool.evicted_pages} evicted")
+        if eng.preemption:
+            print(f"preemption: {eng.preemptions} preempted / "
+                  f"{eng.resumes} resumed; swap peak "
+                  f"{rep['swap_bytes_peak']:,} bytes")
     else:
         active, allocated = cache_bytes_split(eng.caches, eng.peak_active,
                                               args.batch)

@@ -61,7 +61,8 @@ def init_caches(cfg: ModelConfig, batch: int, max_len: int,
 
 def prefill(params, cfg: ModelConfig, batch, caches, *, dtype=jnp.bfloat16):
     """Optional batch key ``lengths`` [B] enables right-padded batched
-    prefill for LM families (see lm.lm_prefill)."""
+    prefill for LM families; ``offsets`` [B] additionally selects the
+    prefix-cache continuation prefill (see lm.lm_prefill)."""
     if cfg.family == "encdec":
         caches = encdec_mod.encdec_start(
             params, cfg, batch["frontend_embeds"], caches, dtype)
@@ -69,7 +70,8 @@ def prefill(params, cfg: ModelConfig, batch, caches, *, dtype=jnp.bfloat16):
                                         caches, dtype)
     return lm_mod.lm_prefill(params, cfg, batch["tokens"], caches,
                              prefix_embeds=batch.get("frontend_embeds"),
-                             dtype=dtype, lengths=batch.get("lengths"))
+                             dtype=dtype, lengths=batch.get("lengths"),
+                             offsets=batch.get("offsets"))
 
 
 def decode(params, cfg: ModelConfig, token, caches, *, dtype=jnp.bfloat16):

@@ -236,15 +236,17 @@ def init_lm_caches(cfg: ModelConfig, batch: int, max_len: int,
 
 
 def _block_serve(lp, cfg: ModelConfig, x, cache, window: int, phase: str,
-                 lengths=None):
+                 lengths=None, offsets=None):
     """phase: 'prefill' or 'decode'. Returns (y, cache). ``lengths`` [B]
-    enables right-padded batched prefill (prefill phase only)."""
+    enables right-padded batched prefill; ``offsets`` [B] additionally
+    selects the prefix-cache continuation prefill (prefill phase only)."""
     eps = cfg.norm_eps
     fam = cfg.family
     akw = {"window": window, "backend": cfg.backend}
     if phase == "prefill":
         attn_fn = attn_prefill
         akw["lengths"] = lengths
+        akw["offsets"] = offsets
     else:
         attn_fn = attn_decode
     if fam == "ssm":
@@ -290,7 +292,7 @@ def _block_serve(lp, cfg: ModelConfig, x, cache, window: int, phase: str,
 
 
 def _serve_stack(params, cfg: ModelConfig, x, caches, phase: str,
-                 lengths=None):
+                 lengths=None, offsets=None):
     if cfg.family == "hybrid":
         new_caches = []
         for (window, _), gp, gc in zip(hybrid_groups(cfg),
@@ -307,7 +309,7 @@ def _serve_stack(params, cfg: ModelConfig, x, caches, phase: str,
     def body(h, scanned):
         lp, c = scanned
         h, c2 = _block_serve(lp, cfg, h, c, cfg.attn.sliding_window, phase,
-                             lengths)
+                             lengths, offsets)
         return h, c2
 
     x, caches = jax.lax.scan(body, x, (params["layers"], caches))
@@ -315,13 +317,19 @@ def _serve_stack(params, cfg: ModelConfig, x, caches, phase: str,
 
 
 def lm_prefill(params, cfg: ModelConfig, tokens, caches, *,
-               prefix_embeds=None, dtype=jnp.bfloat16, lengths=None):
+               prefix_embeds=None, dtype=jnp.bfloat16, lengths=None,
+               offsets=None):
     """Returns (last-position logits [B,vocab], caches).
 
     lengths [B] (optional): per-sequence prompt lengths for right-padded
     batched prefill (tokens[b, lengths[b]:] is padding). Logits are taken at
     each sequence's own final real position. Incompatible with
-    prefix_embeds (the prefix would shift per-sequence offsets)."""
+    prefix_embeds (the prefix would shift per-sequence offsets).
+
+    offsets [B] (optional, with lengths): prefix-cache continuation —
+    ``tokens`` holds each row's uncached *suffix* and attention resumes at
+    the given stride-aligned absolute position against the row's cached
+    latent prefix pages (core/attention.py::attn_prefill)."""
     if lengths is not None and cfg.family in ("ssm", "hybrid"):
         raise ValueError("right-padded batched prefill is unsupported for "
                          "recurrent-state families (pad tokens would enter "
@@ -334,7 +342,7 @@ def lm_prefill(params, cfg: ModelConfig, tokens, caches, *,
         pe = dense(params["projector"], prefix_embeds.astype(dtype))
         x = jnp.concatenate([pe, x], axis=1)
     x, caches = _serve_stack(params, cfg, x.astype(dtype), caches, "prefill",
-                             lengths)
+                             lengths, offsets)
     x = norm_apply(params["final_norm"], x, eps=cfg.norm_eps, kind=cfg.norm)
     if lengths is None:
         xl = x[:, -1:]

@@ -14,13 +14,30 @@ plus a per-slot page table. This module owns the **host** half:
     are backed by physical pages. Reservations make lazy mapping safe: a
     mapped-page top-up inside the reservation can never fail, so the jitted
     burst loop needs no allocator and no pause states.
+  * **Shared read-only mappings** (prefix cache, serving/prefix.py): a slot
+    row can start with *tree-owned* pages — physical pages owned by the
+    radix prefix tree and mapped into the slot read-only, refcounted per
+    slot. A slot's private pages follow at logical positions >= its shared
+    count; prefill/decode writes never address the shared prefix
+    (core/mtla.py::paged_prefill_write_at), so no device write protection
+    is needed. Tree pages with zero slot refs are *idle*: they stay cached
+    for future prefix hits but are **evictable** — reservations may
+    overcommit against them, and the allocator reclaims them LRU through
+    the registered ``evictor`` when the free list runs dry.
   * Admission **back-pressure**: when free-page reservations run out the
     scheduler defers the request (it stays queued) instead of rejecting it;
     retired slots release their pages at the next host sync and deferred
     requests admit immediately after (continuous batching,
     serving/engine.py).
-  * Accounting — active/peak **mapped** bytes vs the dense allocation, the
-    paper's memory axis at serving time.
+  * A host-side **swap area** for slot preemption: a preempted slot's page
+    contents (including the int8 per-row scales, which must travel with
+    their pages) snapshot to pinned host arrays keyed by request, and are
+    restored verbatim into freshly allocated pages on resume — bitwise
+    state recovery, so preempt -> resume is token-for-token identical to an
+    uninterrupted decode.
+  * Accounting — active/peak **mapped** bytes vs the dense allocation,
+    split into private vs shared (refcounted) pages, plus swap-area bytes:
+    the paper's memory axis at serving time.
 
 The page table is replicated per layer on device (leaf ``[L, B, n]``, like
 ``pos``) so it rides the model's layer scan; the host keeps the single
@@ -28,12 +45,14 @@ The page table is replicated per layer on device (leaf ``[L, B, n]``, like
 """
 from __future__ import annotations
 
-from typing import List, Tuple
+from typing import Dict, List, Sequence, Tuple
 
 import jax.numpy as jnp
 import numpy as np
 
 from ..core.types import PagedCacheSpec
+
+POOL_LEAVES = ("pool_c", "pool_kr", "scale_c", "scale_kr")
 
 
 class PagePool:
@@ -53,6 +72,7 @@ class PagePool:
         self.t_max, self.logical_pages, self.total_pages = \
             spec.geometry(batch, max_len, s)
         self.sentinel = self.total_pages               # unmapped marker
+        self.evictor = None         # serving/prefix.py::PrefixCache hook
         self.reset()
 
     def reset(self):
@@ -60,10 +80,18 @@ class PagePool:
         self.table = np.full((self.batch, self.logical_pages),
                              self.sentinel, np.int32)
         self.mapped: List[List[int]] = [[] for _ in range(self.batch)]
+        # tree pages mapped read-only at the head of each slot's row; the
+        # slot's private pages start at logical index len(shared[slot])
+        self.shared: List[List[int]] = [[] for _ in range(self.batch)]
+        self.tree_refs: Dict[int, int] = {}   # tree page -> slot refcount
         self.reserved = np.zeros((self.batch,), np.int64)
         self.reserved_total = 0
         self.peak_pages = 0
         self.dirty = False          # host table ahead of the device copy
+        self.swap: Dict[object, dict] = {}
+        self.swap_bytes = 0
+        self.swap_bytes_peak = 0
+        self.evicted_pages = 0
 
     # --- sizing -------------------------------------------------------------
     def _slots_for_len(self, length: int) -> int:
@@ -80,8 +108,32 @@ class PagePool:
         return -(-self._slots_for_len(final) // self.page_size)
 
     # --- reservations (admission) -------------------------------------------
+    @property
+    def pinned_pages(self) -> int:
+        """Tree pages currently referenced by at least one slot — mapped
+        read-only somewhere, so not reclaimable by eviction."""
+        return sum(1 for r in self.tree_refs.values() if r > 0)
+
+    @property
+    def tree_pages(self) -> int:
+        return len(self.tree_refs)
+
+    @property
+    def idle_tree_pages(self) -> int:
+        return self.tree_pages - self.pinned_pages
+
+    def availability(self) -> int:
+        """Pages that can back new private reservations right now: the
+        whole pool minus existing reservations and pinned shared pages.
+        Idle tree pages count as available — the allocator reclaims them
+        LRU on demand, which is exactly how prefix-cache retention and
+        admission back-pressure arbitrate: cached prefixes occupy every
+        page reservations don't claim, and give them back the moment an
+        admission needs them."""
+        return self.total_pages - self.reserved_total - self.pinned_pages
+
     def can_reserve(self, pages: int) -> bool:
-        return self.reserved_total + pages <= self.total_pages
+        return pages <= self.availability()
 
     def can_ever_reserve(self, pages: int) -> bool:
         return pages <= self.total_pages
@@ -92,18 +144,103 @@ class PagePool:
         self.reserved[slot] = pages
         self.reserved_total += pages
 
+    # --- shared (tree-owned) mappings ---------------------------------------
+    def share(self, slot: int, pages: Sequence[int]):
+        """Map tree-owned ``pages`` read-only at the head of the slot's
+        row (must run before any private mapping for the slot)."""
+        assert not self.mapped[slot], "share before private mapping"
+        for p in pages:
+            self.table[slot, len(self.shared[slot])] = p
+            self.shared[slot].append(p)
+            self.tree_refs[p] += 1
+        if pages:
+            self.dirty = True
+            self.peak_pages = max(self.peak_pages, self.used_pages)
+
+    def unshare(self, slot: int):
+        for p in self.shared[slot]:
+            self.tree_refs[p] -= 1
+        self.shared[slot] = []
+
+    def pin(self, page: int):
+        """Temporarily protect a tree page (e.g. a COW source) from
+        eviction across an allocation that might reclaim idle pages."""
+        self.tree_refs[page] += 1
+
+    def unpin(self, page: int):
+        self.tree_refs[page] -= 1
+
+    def promote(self, slot: int) -> int:
+        """Publish: transfer the slot's oldest private page to tree
+        ownership (it becomes the slot's newest shared page — the table
+        entry is unchanged, only the ownership and the reservation move).
+        Returns the page."""
+        phys = self.mapped[slot].pop(0)
+        self.tree_refs[phys] = 1
+        self.shared[slot].append(phys)
+        self.reserved[slot] -= 1
+        self.reserved_total -= 1
+        return phys
+
+    def replace_with_shared(self, slot: int, page: int):
+        """Publish-dedup: an identical prefix page already lives in the
+        tree — remap the slot's oldest private page onto it and free the
+        private duplicate (the contents are identical by construction:
+        same token path, same prefill math)."""
+        dup = self.mapped[slot].pop(0)
+        self.free.append(dup)
+        self.table[slot, len(self.shared[slot])] = page
+        self.shared[slot].append(page)
+        self.tree_refs[page] += 1
+        self.reserved[slot] -= 1
+        self.reserved_total -= 1
+        self.dirty = True
+
+    def tree_free(self, pages: Sequence[int]):
+        """Eviction: return idle tree pages to the free list."""
+        for p in pages:
+            assert self.tree_refs[p] == 0, "evicting a referenced page"
+            del self.tree_refs[p]
+            self.free.append(p)
+            self.evicted_pages += 1
+
     # --- lazy mapping -------------------------------------------------------
+    def _alloc(self) -> int:
+        """Pop a free physical page, reclaiming idle tree pages (LRU,
+        through the registered evictor) when the free list is dry. The
+        reservation invariant (reserved_total + pinned <= total) guarantees
+        this succeeds for any allocation inside a reservation."""
+        if not self.free and self.evictor is not None:
+            self.evictor.evict(1)
+        assert self.free, "page pool exhausted inside a reservation"
+        return self.free.pop()
+
+    def map_private(self, slot: int) -> int:
+        """Allocate one private page at the slot's next logical position
+        (used for the COW boundary page of a partial-page prefix hit; the
+        page is charged to the slot's reservation like any private page)."""
+        phys = self._alloc()
+        base = len(self.shared[slot])
+        self.table[slot, base + len(self.mapped[slot])] = phys
+        self.mapped[slot].append(phys)
+        self.dirty = True
+        self.peak_pages = max(self.peak_pages, self.used_pages)
+        return phys
+
     def ensure_mapped(self, slot: int, upto_len: int) -> bool:
         """Back slot's compressed positions for writes < ``upto_len`` with
-        physical pages. Clamped to the slot's reservation, so it cannot
-        fail mid-flight. Returns True when new pages were mapped."""
+        physical pages. Shared prefix pages already cover the head of the
+        row; only the private tail is topped up, clamped to the slot's
+        reservation, so it cannot fail mid-flight. Returns True when new
+        pages were mapped."""
         need = -(-self._slots_for_len(upto_len) // self.page_size)
-        need = min(need, int(self.reserved[slot]))
+        base = len(self.shared[slot])
+        need = min(max(need - base, 0), int(self.reserved[slot]))
         grew = False
         row = self.mapped[slot]
         while len(row) < need:
-            phys = self.free.pop()
-            self.table[slot, len(row)] = phys
+            phys = self._alloc()
+            self.table[slot, base + len(row)] = phys
             row.append(phys)
             grew = True
         if grew:
@@ -112,19 +249,44 @@ class PagePool:
         return grew
 
     def release(self, slot: int):
-        """Return the slot's pages to the free list and clear its table row
-        (unmapped sentinel => the retired slot's further writes drop)."""
+        """Return the slot's private pages to the free list, drop its
+        shared-page refs, and clear its table row (unmapped sentinel => the
+        retired slot's further writes drop)."""
         self.free.extend(self.mapped[slot][::-1])
         self.mapped[slot] = []
+        self.unshare(slot)
         self.table[slot, :] = self.sentinel
         self.reserved_total -= int(self.reserved[slot])
         self.reserved[slot] = 0
         self.dirty = True
 
+    # --- swap area (preemption) ---------------------------------------------
+    def swap_store(self, key, entry: dict):
+        """Park a preempted slot's snapshot. ``entry['data']`` maps pool
+        leaf names (pool_c / pool_kr and, for int8 pools, their scale
+        leaves — the scales must travel with the rows they dequantize) to
+        host arrays [L, k, page, ...] in the slot's logical page order."""
+        entry["bytes"] = sum(a.nbytes for a in entry["data"].values())
+        self.swap[key] = entry
+        self.swap_bytes = sum(e["bytes"] for e in self.swap.values())
+        self.swap_bytes_peak = max(self.swap_bytes_peak, self.swap_bytes)
+
+    def swap_take(self, key) -> dict:
+        entry = self.swap.pop(key)
+        self.swap_bytes = sum(e["bytes"] for e in self.swap.values())
+        return entry
+
     # --- occupancy ----------------------------------------------------------
     @property
-    def used_pages(self) -> int:
+    def private_pages(self) -> int:
         return sum(len(m) for m in self.mapped)
+
+    @property
+    def used_pages(self) -> int:
+        """Physical pages holding live data: private mappings plus every
+        tree-owned page (shared mappings count once however many slots
+        reference them — that de-duplication *is* the prefix-cache win)."""
+        return self.private_pages + self.tree_pages
 
     def occupancy(self) -> float:
         return self.used_pages / max(self.total_pages, 1)
@@ -168,6 +330,79 @@ def masked_page_table(table: np.ndarray, slots, sentinel: int) -> np.ndarray:
     return out
 
 
+def _map_pool_leaves(caches, fn):
+    """Apply ``fn(name, leaf) -> leaf`` to every pool leaf (POOL_LEAVES),
+    rebuilding the pytree."""
+    def rec(node):
+        if isinstance(node, dict):
+            out = {}
+            for k, v in node.items():
+                if k in POOL_LEAVES and hasattr(v, "dtype"):
+                    out[k] = fn(k, v)
+                elif isinstance(v, (dict, list, tuple)):
+                    out[k] = rec(v)
+                else:
+                    out[k] = v
+            return out
+        if isinstance(node, (list, tuple)):
+            return type(node)(rec(v) for v in node)
+        return node
+
+    return rec(caches)
+
+
+def copy_pages(caches, src: Sequence[int], dst: Sequence[int]):
+    """Copy physical pages ``src`` onto ``dst`` across every pool leaf
+    (all layers, including int8 scale rows) — the device half of a
+    copy-on-write page fork."""
+    s = jnp.asarray(list(src))
+    d = jnp.asarray(list(dst))
+    return _map_pool_leaves(caches, lambda k, v: v.at[:, d].set(v[:, s]))
+
+
+def gather_pages(caches, pages: Sequence[int]) -> Dict[str, np.ndarray]:
+    """Snapshot physical ``pages`` from every pool leaf to host arrays
+    ({leaf name: [L, k, page, ...]}), in the given (logical) order —
+    the swap-out half of slot preemption. Scale leaves ride along, so an
+    int8 snapshot remains dequantizable after restore."""
+    idx = jnp.asarray(list(pages))
+    out: Dict[str, np.ndarray] = {}
+
+    def grab(k, v):
+        assert k not in out, "multiple pools per engine are unsupported"
+        out[k] = np.asarray(v[:, idx])
+        return v
+
+    _map_pool_leaves(caches, grab)
+    return out
+
+
+def scatter_pages(caches, pages: Sequence[int], data: Dict[str, np.ndarray]):
+    """Restore a ``gather_pages`` snapshot into (freshly allocated)
+    physical ``pages`` — the swap-in half of slot preemption."""
+    idx = jnp.asarray(list(pages))
+    return _map_pool_leaves(
+        caches,
+        lambda k, v: v.at[:, idx].set(jnp.asarray(data[k]).astype(v.dtype)))
+
+
+def set_slot_pos(caches, slot: int, pos: int):
+    """Set one slot's ``pos`` across every layer-replicated pos leaf
+    (restores a resumed slot's feed position when no prefill follows to
+    rewrite it)."""
+    def rec(node):
+        if isinstance(node, dict):
+            out = {k: rec(v) for k, v in node.items()}
+            if "pos" in out and hasattr(out["pos"], "dtype"):
+                out["pos"] = out["pos"].at[..., slot].set(pos)
+            return out
+        if isinstance(node, (list, tuple)):
+            return type(node)(rec(v) for v in node)
+        return node
+
+    return rec(caches)
+
+
 def paged_pool_bytes(caches) -> Tuple[int, int]:
     """(bytes per mapped physical page across all layers/leaves,
     fixed overhead bytes: page tables + positions + any non-pool leaves)."""
@@ -177,9 +412,8 @@ def paged_pool_bytes(caches) -> Tuple[int, int]:
     def rec(node):
         nonlocal per_page, overhead
         if isinstance(node, dict):
-            pools = ("pool_c", "pool_kr", "scale_c", "scale_kr")
             for k, v in node.items():
-                if k in pools and hasattr(v, "dtype"):
+                if k in POOL_LEAVES and hasattr(v, "dtype"):
                     # leaf [L, P, page, ...]: nbytes / P = per-page, all layers
                     per_page += v.size * v.dtype.itemsize // v.shape[1]
                 elif isinstance(v, (dict, list, tuple)):

@@ -43,10 +43,26 @@ request (back-pressure) until retiring slots release pages — combined with
 the between-burst admission below, this is continuous batching against a
 bounded memory budget.
 
+On top of the paged pool, ``prefix_cache=True`` shares compressed latent
+prefix pages **across requests** through a radix tree keyed on prompt
+token IDs (serving/prefix.py): admission maps the longest cached
+stride-aligned prefix read-only into the slot's table (whole pages
+refcounted; a partially matched boundary page forks copy-on-write) and the
+batched prefill runs only the uncached suffix at its absolute offset
+(core/attention.py continuation path) — prefill compute and newly mapped
+bytes both drop in proportion to the shared-prefix length. Prefill-
+complete and retired requests publish their finalized pages back into the
+tree, which retains them LRU until admission pressure evicts them.
+``preemption=True`` additionally lets the run loop evict a resident
+lower-priority slot mid-decode: its mapped pages snapshot to the pool's
+host-side swap area and the request re-queues, resuming bit-exact from the
+snapshot once pages free up — long decodes can no longer starve
+admissions.
+
 The KV-cache memory accounting (``cache_bytes`` allocated,
 ``cache_bytes_split`` active vs allocated, ``cache_report`` mapped-page
-bytes in paged mode) backs the paper-table benchmarks (GPU-memory columns
-of Tables 1-5).
+bytes in paged mode, split private vs shared) backs the paper-table
+benchmarks (GPU-memory columns of Tables 1-5).
 """
 from __future__ import annotations
 
@@ -63,6 +79,7 @@ from ..models import api
 from . import cache as cache_mod
 from . import sampling
 from .cache import PagePool
+from .prefix import PrefixCache
 from .sampling import SamplingParams
 from .scheduler import Scheduler
 
@@ -75,9 +92,13 @@ class Request:
     sampling: SamplingParams = dataclasses.field(
         default_factory=SamplingParams)         # greedy by default
     seed: Optional[int] = None          # per-request PRNG seed; None -> rid
+    priority: int = 0                   # preemption rank: higher wins
     out: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
     error: Optional[str] = None         # set when the request is rejected
+    swapped: bool = False               # preempted; state in the swap area
+    _hit: Optional[object] = dataclasses.field(
+        default=None, repr=False)       # PrefixHit from the last plan
 
 
 def cache_bytes(caches) -> int:
@@ -116,13 +137,20 @@ class DecodeEngine:
                  max_len: int, dtype=jnp.float32, eos: Optional[int] = None,
                  backend: Optional[str] = None, prefill_bucket: int = 16,
                  burst: int = 8, page_size: int = 0,
-                 pool_pages: int = 0, cache_dtype: str = "fp32"):
+                 pool_pages: int = 0, cache_dtype: str = "fp32",
+                 prefix_cache: bool = False, preemption: bool = False):
         """``page_size > 0`` switches the latent decode caches to the paged
         block-pool layout (serving/cache.py): pages of ``page_size``
         compressed positions from a shared pool of ``pool_pages`` physical
         pages (0 = dense-equivalent sizing), stored as ``cache_dtype``
         ("fp32" | "bf16" | "int8"; int8 adds per-row scales). Requires a
-        latent attention kind (mla/mtla) on a batched-prefill family."""
+        latent attention kind (mla/mtla) on a batched-prefill family.
+
+        ``prefix_cache`` shares compressed latent prefix pages across
+        requests through a radix tree over the pool (serving/prefix.py);
+        ``preemption`` lets ``run`` evict lower-priority resident slots to
+        the pool's swap area when admissions starve. Both require the
+        paged pool."""
         if backend is not None:
             cfg = cfg.replace(backend=backend)
         self.params, self.cfg = params, cfg
@@ -157,6 +185,11 @@ class DecodeEngine:
             raise ValueError("cache_dtype is a property of the paged pool; "
                              "set page_size > 0 (dense caches follow the "
                              "engine dtype)")
+        if (prefix_cache or preemption) and self.pool is None:
+            raise ValueError("prefix caching and slot preemption operate "
+                             "on the paged page pool; set page_size > 0")
+        self.prefix = PrefixCache(self.pool) if prefix_cache else None
+        self.preemption = bool(preemption)
         self.caches = api.init_caches(cfg, batch, max_len, dtype=dtype,
                                       src_len=max(cfg.frontend_len, 4),
                                       paged=self.cache_spec)
@@ -181,6 +214,10 @@ class DecodeEngine:
         self.peak_active = 0
         self.deferrals = 0              # admission rounds cut by page
         #                                 back-pressure (paged mode)
+        self.prefill_tokens_skipped = 0  # prompt tokens served from the
+        #                                  prefix cache instead of prefilled
+        self.preemptions = 0            # slots evicted to the swap area
+        self.resumes = 0                # swapped requests restored
 
     def reset(self):
         """Drop all requests and re-init caches/state; compiled burst and
@@ -191,6 +228,8 @@ class DecodeEngine:
                                       paged=self.cache_spec)
         if self.pool is not None:
             self.pool.reset()
+        if self.prefix is not None:
+            self.prefix.reset()
         self.state = self._init_state()
         self.scheduler.reset()
         self._finished, self.failed = [], []
@@ -273,23 +312,29 @@ class DecodeEngine:
         """Admit one request; returns False if it was rejected (oversized),
         deferred (page back-pressure), or no slot is free. Rejected
         requests carry ``req.error``."""
-        plan = self.scheduler.plan([req], self.pool)
+        plan = self.scheduler.plan([req], self.pool, self.prefix)
         self._apply_plan(plan)
         return bool(plan.assignments)
 
-    def add_requests(self, reqs: Sequence[Request]) -> int:
-        """One admission round over the front of ``reqs`` (in order):
-        oversized prompts are marked failed and skipped, the rest fill free
-        slots — gated on page availability in paged mode, where a request
-        that does not fit the pool's unreserved pages is *deferred* (stays
-        queued) instead of rejected — and share a single jitted
-        right-padded prefill call on the batched path. Returns the number
-        of requests consumed (admitted + rejected); completions at
-        admission time (max_new reached, EOS on the first token) land in
-        the finished queue immediately."""
-        plan = self.scheduler.plan(reqs, self.pool)
+    def add_requests(self, reqs: Sequence[Request]) -> List[Request]:
+        """One admission round over ``reqs`` (in arrival order): oversized
+        prompts are marked failed and skipped, the rest fill free slots —
+        gated on page availability in paged mode, where a request whose
+        (prefix-discounted) reservation does not fit is *deferred* (stays
+        queued, later fitting entries may skip past it) instead of
+        rejected — and share a single jitted right-padded prefill call on
+        the batched path. Returns the requests taken off the queue
+        (admitted + rejected); completions at admission time (max_new
+        reached, EOS on the first token) land in the finished queue
+        immediately."""
+        plan = self.scheduler.plan(reqs, self.pool, self.prefix)
         self._apply_plan(plan)
-        return plan.consumed
+        return plan.taken()
+
+    @staticmethod
+    def _cached_len(req: Request) -> int:
+        hit = req._hit
+        return hit.tokens if hit is not None else 0
 
     def _apply_plan(self, plan):
         for req in plan.rejected:
@@ -302,27 +347,66 @@ class DecodeEngine:
         if not plan.assignments:
             return
         self.scheduler.commit(plan)
+        fresh = [(s, r) for s, r in plan.assignments if not r.swapped]
+        resumed = [(s, r) for s, r in plan.assignments if r.swapped]
         if self.pool is not None:
+            # pass 1: reservations + read-only shared mappings. Sharing
+            # first pins every hit page (refcount > 0), so the allocations
+            # of pass 2 can evict idle prefix leaves without ever
+            # reclaiming a page another admission in this round relies on.
             for slot, req in plan.assignments:
-                self.pool.reserve(slot, self.pool.pages_for_request(
-                    len(req.prompt), req.max_new))
+                need = self.pool.pages_for_request(len(req.prompt),
+                                                   req.max_new)
+                hit = req._hit if not req.swapped else None
+                if self.prefix is not None and not req.swapped:
+                    self.prefix.record(hit)
+                if hit is not None:
+                    self.pool.reserve(slot, need - len(hit.pages))
+                    self.pool.share(slot, hit.pages)
+                    if hit.cow_page is not None:
+                        self.pool.pin(hit.cow_page)
+                else:
+                    self.pool.reserve(slot, need)
+            # pass 2: COW boundary-page forks + prompt-page mapping (these
+            # allocations may trigger LRU eviction of idle tree pages)
+            for slot, req in fresh:
+                hit = req._hit
+                if hit is not None and hit.cow_page is not None:
+                    fork = self.pool.map_private(slot)
+                    self.caches = cache_mod.copy_pages(
+                        self.caches, [hit.cow_page], [fork])
+                    self.pool.unpin(hit.cow_page)
                 # prefill writes compressed positions < prompt length
                 self.pool.ensure_mapped(slot, len(req.prompt))
+            for slot, req in resumed:
+                self._swap_in(slot, req)
         t0 = time.perf_counter()
-        if self._batched_prefill:
-            logits = self._prefill_batched(plan.assignments)
-        else:
-            rows = np.zeros((self.batch, self.cfg.vocab_size), np.float32)
-            for slot, req in plan.assignments:
-                rows[slot] = self._prefill_one(req)
-            logits = jnp.asarray(rows)
-        self._admit_rows(plan.assignments)
-        self._first_tokens(plan.assignments, logits)
+        if fresh:
+            if self._batched_prefill:
+                logits = self._prefill_batched(fresh)
+            else:
+                rows = np.zeros((self.batch, self.cfg.vocab_size),
+                                np.float32)
+                for slot, req in fresh:
+                    rows[slot] = self._prefill_one(req)
+                logits = jnp.asarray(rows)
+            self._admit_rows(fresh)
+            if self.prefix is not None:
+                # publish the prompts' finalized full pages immediately so
+                # concurrent requests admitted in later rounds share them
+                # while these slots are still decoding
+                for slot, req in fresh:
+                    self.prefix.publish(slot, req.prompt)
+            self._first_tokens(fresh, logits)
+            self.prefill_tokens += sum(
+                len(r.prompt) - self._cached_len(r) for _, r in fresh)
+            self.prefill_tokens_skipped += sum(
+                self._cached_len(r) for _, r in fresh)
         self.prefill_time_s += time.perf_counter() - t0
-        self.prefill_tokens += sum(len(r.prompt)
-                                   for _, r in plan.assignments)
         self.peak_active = max(self.peak_active,
                                len(self.scheduler.occupied()))
+        for _, req in plan.assignments:
+            req._hit = None         # hits are valid for one round only
 
     def _prefill_batched(self, assignments) -> jnp.ndarray:
         """Single right-padded jitted prefill for the admitted slots.
@@ -332,11 +416,16 @@ class DecodeEngine:
         straight into the live pool — the page table it sees is masked down
         to the admitted slots, so the dummy rows (live neighbours mid-
         decode, or empty slots) scatter through the unmapped sentinel and
-        drop; no transient dense allocation ever exists. Returns logits
+        drop; no transient dense allocation ever exists. With a prefix
+        cache, rounds containing a hit run the continuation graph: each
+        row prefills only its uncached suffix at its absolute stride-
+        aligned offset, reading the shared prefix pages through the same
+        (masked) table it writes its own pages through. Returns logits
         [B, V]."""
         slots = [s for s, _ in assignments]
-        todo = [r for _, r in assignments]
-        lmax = max(len(r.prompt) for r in todo)
+        cached = {s: self._cached_len(r) for s, r in assignments}
+        use_offsets = self.prefix is not None and any(cached.values())
+        lmax = max(len(r.prompt) - cached[s] for s, r in assignments)
         bucket = self.prefill_bucket
         lpad = min(-(-lmax // bucket) * bucket, self.max_len)
         # full-width [batch, lpad] graph: shape varies only with the length
@@ -344,9 +433,12 @@ class DecodeEngine:
         # admitted run a dummy length-1 prompt and are never spliced.
         toks = np.zeros((self.batch, lpad), np.int32)
         lengths = np.ones((self.batch,), np.int32)
+        offsets = np.zeros((self.batch,), np.int32)
         for slot, req in assignments:
-            toks[slot, :len(req.prompt)] = req.prompt
-            lengths[slot] = len(req.prompt)
+            suffix = np.asarray(req.prompt)[cached[slot]:]
+            toks[slot, :len(suffix)] = suffix
+            lengths[slot] = len(suffix)
+            offsets[slot] = cached[slot]
         if self.pool is not None:
             # live rows keep their true feed position: the prefill rewrites
             # cache["pos"] from `lengths` for every row, and a mid-decode
@@ -359,11 +451,15 @@ class DecodeEngine:
             masked = cache_mod.masked_page_table(self.pool.table, slots,
                                                  self.pool.sentinel)
             caches = cache_mod.set_page_table(self.caches, masked)
-            logits, caches = self._prefill(
-                self.params,
-                {"tokens": jnp.asarray(toks),
-                 "lengths": jnp.asarray(lengths)},
-                caches)
+            batch = {"tokens": jnp.asarray(toks),
+                     "lengths": jnp.asarray(lengths)}
+            if use_offsets:
+                # hit rounds route through the continuation graph (cold
+                # rows ride along at offset 0); hit-free rounds keep the
+                # fresh-prefill graph, which stays bitwise identical to a
+                # prefix-cache-disabled engine
+                batch["offsets"] = jnp.asarray(offsets)
+            logits, caches = self._prefill(self.params, batch, caches)
             self.caches = cache_mod.set_page_table(caches, self.pool.table)
             self.pool.dirty = False
             self.prefill_calls += 1
@@ -410,20 +506,29 @@ class DecodeEngine:
         self.caches = jax.tree_util.tree_map(splice, self.caches, single)
         return np.asarray(logits[0], np.float32)
 
+    @staticmethod
+    def _slot_row(st, slot: int, req: Request):
+        """Per-slot lifecycle + sampling fields a fresh admission and a
+        swap-in resume must agree on — one writer, so the bitwise-resume
+        guarantee cannot drift when SlotState grows a field. The caller
+        sets the progress fields (tok/rng/produced/length): seeded fresh at
+        admission, restored from the snapshot at resume."""
+        sp = req.sampling
+        st["done"][slot] = False
+        st["max_new"][slot] = req.max_new
+        st["temp"][slot] = max(sp.temperature, 0.0)
+        st["top_k"][slot] = sp.top_k
+        st["top_p"][slot] = sp.top_p
+        st["greedy"][slot] = sp.greedy
+
     def _admit_rows(self, assignments):
         """Write the admitted requests' lifecycle + sampling rows into the
         device SlotState (per-slot PRNG keys seeded fresh from req.seed)."""
         st = {k: np.array(v) for k, v in self.state.items()}
         for slot, req in assignments:
-            sp = req.sampling
-            st["done"][slot] = False
+            self._slot_row(st, slot, req)
             st["produced"][slot] = 0
             st["length"][slot] = len(req.prompt)
-            st["max_new"][slot] = req.max_new
-            st["temp"][slot] = max(sp.temperature, 0.0)
-            st["top_k"][slot] = sp.top_k
-            st["top_p"][slot] = sp.top_p
-            st["greedy"][slot] = sp.greedy
             seed = req.rid if req.seed is None else req.seed
             st["rng"][slot] = np.asarray(jax.random.PRNGKey(seed))
         self.state = {k: jnp.asarray(v) for k, v in st.items()}
@@ -453,12 +558,94 @@ class DecodeEngine:
         self.state = {k: jnp.asarray(v) for k, v in st.items()}
 
     def _release_slot(self, slot: int):
-        """Retire a slot: free its scheduler slot and (paged mode) return
-        its pages to the pool — the sentinel table row makes the retired
-        slot's further in-burst writes drop before the pages are reused."""
+        """Retire a slot: publish its finalized prefix pages into the radix
+        tree (prompt + emitted tokens, minus the still-unfed last sample —
+        successive requests extending this conversation hit them), then
+        free its scheduler slot and (paged mode) return its private pages
+        to the pool — the sentinel table row makes the retired slot's
+        further in-burst writes drop before the pages are reused."""
+        if self.prefix is not None:
+            req = self.scheduler.slots[slot]
+            if req is not None and req.error is None:
+                fed = np.concatenate([np.asarray(req.prompt, np.int64),
+                                      np.asarray(req.out[:-1], np.int64)])
+                self.prefix.publish(slot, fed)
         self.scheduler.release(slot)
         if self.pool is not None:
             self.pool.release(slot)
+
+    # --- preemption ---------------------------------------------------------
+    def preempt(self, slot: int) -> Request:
+        """Evict a resident slot mid-decode: snapshot its mapped pages
+        (shared + private, so the snapshot stays valid even if the tree
+        evicts the shared originals before resume) and its SlotState row
+        into the pool's host-side swap area, release the slot, and return
+        the request for re-queueing. ``_swap_in`` restores the snapshot
+        verbatim into fresh pages, so preempt -> resume is token-for-token
+        identical to an uninterrupted decode."""
+        req = self.scheduler.slots[slot]
+        assert req is not None and self.pool is not None
+        st = {k: np.asarray(v) for k, v in self.state.items()}
+        pages = self.pool.shared[slot] + self.pool.mapped[slot]
+        self.pool.swap_store(req.rid, {
+            "data": cache_mod.gather_pages(self.caches, pages),
+            "npages": len(pages),
+            "tok": int(st["tok"][slot]),
+            "rng": np.array(st["rng"][slot]),
+            "produced": int(st["produced"][slot]),
+            "length": int(st["length"][slot]),
+        })
+        req.swapped = True
+        done = np.array(st["done"])
+        done[slot] = True
+        self.state = dict(self.state, done=jnp.asarray(done))
+        self.scheduler.release(slot)
+        self.pool.release(slot)
+        self.preemptions += 1
+        return req
+
+    def _swap_in(self, slot: int, req: Request):
+        """Restore a preempted request into a fresh slot: allocate private
+        pages for the snapshot (the reservation made at re-admission covers
+        them), scatter the page contents back — int8 scale rows travel
+        with their pages — and rebuild the slot's device lifecycle row.
+        No prefill and no first-token sampling: the pending feedback token
+        and the PRNG key resume exactly where the burst loop left them."""
+        entry = self.pool.swap_take(req.rid)
+        self.pool.ensure_mapped(
+            slot, entry["npages"] * self.pool.spec.tokens_per_page(
+                self.pool.s))
+        assert len(self.pool.mapped[slot]) == entry["npages"]
+        self.caches = cache_mod.scatter_pages(
+            self.caches, self.pool.mapped[slot], entry["data"])
+        self.caches = cache_mod.set_slot_pos(self.caches, slot,
+                                             entry["length"] - 1)
+        st = {k: np.array(v) for k, v in self.state.items()}
+        self._slot_row(st, slot, req)
+        st["tok"][slot] = entry["tok"]
+        st["rng"][slot] = entry["rng"]
+        st["produced"][slot] = entry["produced"]
+        st["length"][slot] = entry["length"]
+        self.state = {k: jnp.asarray(v) for k, v in st.items()}
+        req.swapped = False
+        self.resumes += 1
+
+    def _maybe_preempt(self, head: Request) -> Optional[Request]:
+        """Preempt one strictly-lower-priority resident so the (starved)
+        queue head can admit; returns the evicted request for re-queueing
+        just behind the head, or None when no such victim exists or the
+        head could never be served anyway. Strict priority ordering means
+        a resumed victim can never preempt its preemptor back."""
+        if len(head.prompt) > self.max_len:
+            return None
+        if not self.pool.can_ever_reserve(
+                self.pool.pages_for_request(len(head.prompt),
+                                            head.max_new)):
+            return None
+        victim = self.scheduler.select_victim(head.priority)
+        if victim is None:
+            return None
+        return self.preempt(victim)
 
     def _sync_pages(self, quota: int):
         """Pre-burst page top-up: back every active slot's writes for the
@@ -480,7 +667,13 @@ class DecodeEngine:
         ``active`` (bytes backing live sequences right now) and ``peak``
         (high-water mark of active bytes). Dense caches scale with slot
         occupancy; paged caches with **mapped pages**, so short or retired
-        requests stop being charged for positions they never wrote."""
+        requests stop being charged for positions they never wrote. Paged
+        reports additionally split mapped bytes into ``private`` (one
+        slot's own pages), ``shared`` (tree pages referenced by >= 1 slot:
+        refcount > 1 counting the tree itself — each counted once however
+        many slots map it, which is the prefix-cache saving) and ``cached``
+        (idle tree pages retained for future hits, evictable), plus the
+        host ``swap_bytes`` parked by preemption."""
         allocated = cache_bytes(self.caches)
         if self.pool is None:
             active, _ = cache_bytes_split(
@@ -489,13 +682,22 @@ class DecodeEngine:
                                         self.batch)
             return {"allocated": allocated, "active": active, "peak": peak}
         per_page, overhead = cache_mod.paged_pool_bytes(self.caches)
+        pool = self.pool
         return {"allocated": allocated,
-                "active": self.pool.used_pages * per_page + overhead,
-                "peak": self.pool.peak_pages * per_page + overhead,
+                "active": pool.used_pages * per_page + overhead,
+                "peak": pool.peak_pages * per_page + overhead,
                 "page_bytes": per_page,
-                "pages_used": self.pool.used_pages,
-                "pages_peak": self.pool.peak_pages,
-                "pages_total": self.pool.total_pages}
+                "private": pool.private_pages * per_page,
+                "shared": pool.pinned_pages * per_page,
+                "cached": pool.idle_tree_pages * per_page,
+                "swap_bytes": pool.swap_bytes,
+                "swap_bytes_peak": pool.swap_bytes_peak,
+                "pages_used": pool.used_pages,
+                "pages_private": pool.private_pages,
+                "pages_shared": pool.pinned_pages,
+                "pages_cached": pool.idle_tree_pages,
+                "pages_peak": pool.peak_pages,
+                "pages_total": pool.total_pages}
 
     # --- decode burst orchestration ----------------------------------------
     def _burst_step(self) -> List[Request]:
@@ -532,7 +734,10 @@ class DecodeEngine:
             ) -> Dict[int, List[int]]:
         """Serve ``requests`` to completion with continuous batching; returns
         {rid: tokens}. Rejected requests appear with their (empty) output
-        and ``req.error`` set — one oversized prompt never aborts the run."""
+        and ``req.error`` set — one oversized prompt never aborts the run.
+        With ``preemption=True``, a queue head that admission left starved
+        may evict a strictly-lower-priority resident slot to the swap
+        area; the victim re-queues just behind it and resumes bit-exact."""
         pending = list(requests)
         done: Dict[int, List[int]] = {}
 
@@ -544,9 +749,16 @@ class DecodeEngine:
         while (pending or self.scheduler.any_active()) \
                 and self.steps < max_steps:
             if pending and self.scheduler.free_slots():
-                n = self.add_requests(pending)
-                del pending[:n]
+                taken = self.add_requests(pending)
+                if taken:
+                    tid = {id(r) for r in taken}
+                    pending = [r for r in pending if id(r) not in tid]
                 drain()
+            if self.preemption and pending:
+                victim = self._maybe_preempt(pending[0])
+                if victim is not None:
+                    pending.insert(1, victim)
+                    continue        # retry admission before decoding on
             for fin in self._burst_step():
                 done[fin.rid] = fin.out
         drain()

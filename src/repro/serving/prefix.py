@@ -1,0 +1,222 @@
+"""Shared-prefix radix cache over the compressed latent page pool.
+
+Production traffic repeats prefixes — system prompts, few-shot headers,
+chat history — and MTLA caches them in *temporally compressed* latent
+space: one page holds ``page_size`` chunk slots covering ``page_size * s``
+raw tokens, so a shared prefix costs ``s`` times fewer pages than an
+MHA-style paged cache would spend on the same tokens. This module owns the
+cross-request index over those pages:
+
+  * A **radix tree keyed on prompt token IDs** with page-sized edge labels:
+    each node owns exactly one physical page of the engine's ``PagePool``
+    (serving/cache.py) and is addressed by the full token path from the
+    root — a latent page's contents depend causally on *every* token before
+    it, so the path, not the page's own tokens, is its identity.
+  * **Lookup** walks the longest cached prefix of a prompt in whole pages
+    (page-aligned => stride-aligned: a page boundary is always a chunk
+    boundary, mirroring the paper's stride-aware treatment of the
+    compressed/processed length mismatch). The boundary page is matched
+    *partially* down to the last complete chunk: the hit maps it
+    **copy-on-write** — the engine forks the page into a private copy and
+    the continuation prefill overwrites it from the divergence chunk on,
+    reusing the matched chunks verbatim. The hit always leaves at least one
+    suffix token, so admission still produces first-token logits.
+  * **Publish** inserts a request's finalized full pages after prefill (so
+    *concurrent* requests share: the publisher keeps decoding while later
+    admissions map its pages read-only) and again at retire with the
+    decode-extended sequence (so *successive* requests sharing generated
+    history hit too). Ownership transfers to the tree
+    (``PagePool.promote``); when an identical path already exists the
+    slot's duplicate page is freed and its table remapped onto the cached
+    page (``replace_with_shared``) — the copy-on-write economy in the other
+    direction.
+  * **LRU eviction**: idle leaves (refcount 0 — no resident slot maps the
+    page) are reclaimed least-recently-touched first when the pool's free
+    list runs dry. Pinned nodes are upward-closed (a slot that maps a node
+    maps its whole path), so the idle set is always subtree-complete and
+    leaf-first eviction can reach every idle page — which is what lets
+    ``PagePool.availability()`` count idle tree pages as reservable and
+    arbitrate between prefix retention and admission back-pressure without
+    deadlock.
+
+Sharing safety needs no device-side write protection: the continuation
+prefill writes only at absolute chunk slots >= the (stride-aligned) cached
+boundary, and decode's in-place merge targets the current chunk, which lies
+past the boundary by construction — shared pages are read-only because no
+write can ever address them.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .cache import PagePool
+
+
+@dataclasses.dataclass
+class PrefixHit:
+    """One lookup result: ``pages`` are whole shared pages (mapped
+    read-only on admission), ``cow_page``/``cow_chunks`` describe a
+    partial boundary-page match (fork ``cow_page`` and reuse its first
+    ``cow_chunks`` chunk slots), ``tokens`` the total cached prefix
+    length in raw tokens (always stride-aligned and < the prompt)."""
+    pages: List[int]
+    cow_page: Optional[int] = None
+    cow_chunks: int = 0
+    tokens: int = 0
+
+
+class RadixNode:
+    __slots__ = ("key", "page", "parent", "children", "touch")
+
+    def __init__(self, key: Optional[Tuple[int, ...]], page: int,
+                 parent: Optional["RadixNode"], touch: int):
+        self.key = key
+        self.page = page
+        self.parent = parent
+        self.children: Dict[Tuple[int, ...], RadixNode] = {}
+        self.touch = touch
+
+
+class PrefixCache:
+    """Radix prefix index over one engine's ``PagePool``. Registers itself
+    as the pool's evictor; the engine drives lookup (scheduler plan),
+    share/COW (admission), and publish (prefill complete + retire)."""
+
+    def __init__(self, pool: PagePool):
+        self.pool = pool
+        self.page_tokens = pool.spec.tokens_per_page(pool.s)
+        self.s = pool.s
+        pool.evictor = self
+        self.reset()
+
+    def reset(self):
+        self.root = RadixNode(None, -1, None, 0)
+        self.clock = 0
+        self.lookups = 0
+        self.hits = 0
+        self.hit_tokens = 0
+        self.published_pages = 0
+
+    @property
+    def pages(self) -> int:
+        return self.pool.tree_pages
+
+    # --- lookup -------------------------------------------------------------
+    def lookup(self, prompt: np.ndarray) -> Optional[PrefixHit]:
+        """Longest cached prefix of ``prompt``: whole pages first, then the
+        longest stride-aligned partial match inside one boundary child
+        (COW). Capped so at least one prompt token stays uncached.
+
+        Stat-free: the scheduler re-probes deferred requests on every
+        admission retry, so hit accounting happens once per *admission*
+        (``record``, called by the engine) — only the LRU touch lands
+        here, which deliberately keeps a queued request's prefix pages
+        fresh until it admits."""
+        self.clock += 1
+        tpp = self.page_tokens
+        node, pages = self.root, []
+        depth = 0
+        while (depth + 1) * tpp < len(prompt):
+            key = tuple(int(t) for t in prompt[depth * tpp:(depth + 1) * tpp])
+            child = node.children.get(key)
+            if child is None:
+                break
+            node = child
+            node.touch = self.clock
+            pages.append(node.page)
+            depth += 1
+        # boundary page: longest common stride-aligned prefix against any
+        # child's token span, reused chunk-for-chunk through a COW fork
+        rest = prompt[depth * tpp:]
+        cow_page, cow_chunks, best_child = None, 0, None
+        usable = (len(rest) - 1) // self.s      # leave >= 1 suffix token
+        for key, child in node.children.items():
+            m = 0
+            for a, b in zip(key, rest):
+                if int(a) != int(b):
+                    break
+                m += 1
+            chunks = min(m // self.s, usable)
+            if chunks > cow_chunks:
+                cow_chunks, best_child = chunks, child
+        if best_child is not None:
+            cow_page = best_child.page
+            best_child.touch = self.clock
+        tokens = depth * tpp + cow_chunks * self.s
+        if tokens == 0:
+            return None
+        return PrefixHit(pages, cow_page, cow_chunks, tokens)
+
+    def record(self, hit: Optional[PrefixHit]):
+        """Count one *admitted* request against the hit-rate stats (the
+        engine calls this once per fresh admission, so deferral retries
+        never inflate the numbers)."""
+        self.lookups += 1
+        if hit is not None:
+            self.hits += 1
+            self.hit_tokens += hit.tokens
+
+    # --- publish ------------------------------------------------------------
+    def publish(self, slot: int, tokens: np.ndarray):
+        """Insert the slot's finalized full pages for the fed-token
+        sequence ``tokens`` (prompt at prefill time; prompt + emitted
+        tokens minus the still-unfed last sample at retire). Levels the
+        slot already shares are only LRU-touched; levels backed by the
+        slot's private pages either transfer ownership to a new node or
+        dedup onto an existing identical path."""
+        self.clock += 1
+        pool = self.pool
+        tpp = self.page_tokens
+        full = len(tokens) // tpp
+        node = self.root
+        for lvl in range(full):
+            key = tuple(int(t) for t in tokens[lvl * tpp:(lvl + 1) * tpp])
+            child = node.children.get(key)
+            base = len(pool.shared[slot])
+            if lvl < base:
+                # already mapped from the tree along this very path
+                assert child is not None and child.page == \
+                    pool.shared[slot][lvl], "shared mapping diverged"
+                child.touch = self.clock
+                node = child
+                continue
+            if child is not None:
+                pool.replace_with_shared(slot, child.page)
+                child.touch = self.clock
+                node = child
+                continue
+            page = pool.promote(slot)
+            child = RadixNode(key, page, node, self.clock)
+            node.children[key] = child
+            node = child
+            self.published_pages += 1
+
+    # --- eviction -----------------------------------------------------------
+    def _idle_leaves(self) -> List[RadixNode]:
+        out, stack = [], list(self.root.children.values())
+        while stack:
+            n = stack.pop()
+            if n.children:
+                stack.extend(n.children.values())
+            elif self.pool.tree_refs.get(n.page, 1) == 0:
+                out.append(n)
+        return out
+
+    def evict(self, need: int) -> int:
+        """Reclaim >= ``need`` pages from idle leaves, least recently
+        touched first (a parent becomes a leaf once its children go, so
+        repeated rounds peel idle subtrees bottom-up). Returns the number
+        of pages actually freed."""
+        freed = 0
+        while freed < need:
+            leaves = self._idle_leaves()
+            if not leaves:
+                break
+            victim = min(leaves, key=lambda n: n.touch)
+            del victim.parent.children[victim.key]
+            self.pool.tree_free([victim.page])
+            freed += 1
+        return freed

@@ -10,6 +10,24 @@ slots whose requests finish. Oversized prompts (longer than the engine's
 than aborting the whole admission round, so one bad request can never block
 its neighbours.
 
+With a page ``pool``, admission reserves each request's worst-case page
+demand; a prefix cache (serving/prefix.py) *discounts* the reservation by
+the pages a prompt's cached prefix already holds, and the hit's shared
+pages count as newly pinned (unevictable while mapped) in the same
+availability arithmetic. A request whose discounted demand does not fit is
+**deferred** — it stays queued, and the plan *skip-scans* the remaining
+pending entries so a later request whose (possibly prefix-discounted)
+reservation still fits can use the otherwise-idle slot: an oversized
+request mid-queue no longer cuts the whole round. Deferred requests keep
+their queue position, so they claim freed pages first and FIFO completion
+is preserved among requests of comparable demand.
+
+``select_victim`` is the preemption policy: when admission is starved and a
+resident request has strictly lower priority than the queue head, the
+engine may evict it mid-decode (pages snapshot to the pool's swap area and
+the request re-queues; serving/engine.py::DecodeEngine.preempt). Among
+equal-priority victims the most recently admitted loses the least progress.
+
 Early exit is two-level: the device burst loop (a ``lax.while_loop``) stops
 as soon as every slot is done mid-burst, and ``burst_quota`` caps the loop
 bound at the maximum number of tokens any resident request can still emit,
@@ -24,15 +42,19 @@ from typing import List, Optional, Sequence, Tuple
 
 @dataclasses.dataclass
 class AdmissionPlan:
-    """One admission round: slot assignments for admissible requests, the
-    oversized rejects, and how many entries were consumed from the front of
-    the pending queue (= admitted + rejected). ``deferred`` marks a round
-    cut short by page-pool back-pressure: the next request stays queued
-    (not rejected) until retiring slots release enough pages."""
+    """One admission round: slot assignments for admissible requests and
+    the oversized rejects. ``deferred`` marks page-pool back-pressure: at
+    least one request stayed queued (not rejected) until retiring slots or
+    evicted prefix leaves release enough pages. ``consumed`` counts the
+    contiguous taken entries at the front of the queue (skip-scanned
+    admissions beyond it are removed by identity — AdmissionPlan.taken)."""
     assignments: List[Tuple[int, object]]
     rejected: List[object]
     consumed: int
     deferred: bool = False
+
+    def taken(self) -> List[object]:
+        return [r for _, r in self.assignments] + list(self.rejected)
 
 
 class Scheduler:
@@ -41,6 +63,8 @@ class Scheduler:
     def __init__(self, batch: int, max_len: int):
         self.batch, self.max_len = batch, max_len
         self.slots: List[Optional[object]] = [None] * batch
+        self.admit_seq = 0
+        self._admitted_at = [0] * batch
 
     # --- occupancy ---------------------------------------------------------
     def free_slots(self) -> List[int]:
@@ -54,55 +78,103 @@ class Scheduler:
 
     def reset(self):
         self.slots = [None] * self.batch
+        self.admit_seq = 0
+        self._admitted_at = [0] * self.batch
 
     # --- admission ---------------------------------------------------------
-    def plan(self, pending: Sequence, pool=None) -> AdmissionPlan:
+    def plan(self, pending: Sequence, pool=None,
+             prefix=None) -> AdmissionPlan:
         """Walk ``pending`` in order, assigning free slots. Requests whose
         prompt cannot fit the engine's cache — or (paged mode) whose
         worst-case page demand exceeds the whole pool — are rejected
         (consumed, no slot) and the scan continues; admission never raises
         mid-round. With a page ``pool`` (serving/cache.py), a request whose
-        reservation does not fit the pages still unreserved is *deferred*:
-        the round stops there and the request stays queued until retiring
-        slots release pages — back-pressure instead of rejection."""
+        reservation — discounted by its prefix-cache hit when ``prefix`` is
+        given — does not fit the pool's current availability is *deferred*:
+        it stays queued, and the scan continues over later entries that
+        still fit (skip-scan). Each planned request carries its hit on
+        ``req._hit`` for the engine to map at admission."""
         free = self.free_slots()
-        assignments, rejected, consumed = [], [], 0
-        reserve = 0                   # pages this round will reserve
+        assignments: List[Tuple[int, object]] = []
+        rejected: List[object] = []
         deferred = False
+        avail = pool.availability() if pool is not None else 0
+        newly_pinned = set()
         for req in pending:
             if len(req.prompt) > self.max_len:
                 req.error = (f"prompt length {len(req.prompt)} exceeds "
                              f"engine max_len {self.max_len}")
                 rejected.append(req)
-                consumed += 1
                 continue
-            need = 0
+            need, pins = 0, []
             if pool is not None:
                 need = pool.pages_for_request(len(req.prompt), req.max_new)
                 if not pool.can_ever_reserve(need):
                     req.error = (f"request needs {need} cache pages but the "
                                  f"pool only has {pool.total_pages}")
                     rejected.append(req)
-                    consumed += 1
                     continue
             if not free:
                 break
-            if pool is not None and not pool.can_reserve(reserve + need):
+            if deferred and getattr(req, "swapped", False):
+                # a swapped victim never skip-scans past a deferred entry:
+                # the starved head that preempted it is still waiting, and
+                # resuming the victim into the very pages its preemption
+                # freed would starve the head again — an unbounded
+                # preempt/resume livelock
+                continue
+            if pool is not None:
+                hit = None
+                if prefix is not None and not getattr(req, "swapped", False):
+                    hit = prefix.lookup(req.prompt)
+                req._hit = hit
+                if hit is not None:
+                    need -= len(hit.pages)
+                    touched = list(hit.pages)
+                    if hit.cow_page is not None:
+                        touched.append(hit.cow_page)
+                    pins = [p for p in touched
+                            if pool.tree_refs.get(p, 1) == 0
+                            and p not in newly_pinned]
+            if pool is not None and need + len(pins) > avail:
                 deferred = True
-                break
-            reserve += need
+                continue          # skip-scan: later smaller entries may fit
+            avail -= need + len(pins)
+            newly_pinned.update(pins)
             assignments.append((free.pop(0), req))
+        taken_ids = {id(r) for _, r in assignments} | \
+                    {id(r) for r in rejected}
+        consumed = 0
+        for r in pending:
+            if id(r) not in taken_ids:
+                break
             consumed += 1
         return AdmissionPlan(assignments, rejected, consumed, deferred)
 
     def commit(self, plan: AdmissionPlan):
         for slot, req in plan.assignments:
             assert self.slots[slot] is None, f"slot {slot} already occupied"
+            self.admit_seq += 1
             self.slots[slot] = req
+            self._admitted_at[slot] = self.admit_seq
 
     def release(self, slot: int):
         req, self.slots[slot] = self.slots[slot], None
         return req
+
+    # --- preemption policy -------------------------------------------------
+    def select_victim(self, priority: int) -> Optional[int]:
+        """Slot to preempt so a priority-``priority`` request can admit:
+        the lowest-priority resident strictly below it; ties go to the most
+        recently admitted (least decoded work thrown away). None when every
+        resident is at least as important — preemption never inverts
+        priorities, so equal-priority traffic cannot ping-pong."""
+        victims = [(req.priority, -self._admitted_at[slot], slot)
+                   for slot, req in self.occupied()
+                   if req.priority < priority]
+        if not victims:
+            return None
+        return min(victims)[2]
 
     # --- burst policy ------------------------------------------------------
     def burst_quota(self, burst: int) -> int:

@@ -206,6 +206,50 @@ def test_scheduler_page_gating_preserves_order():
     assert not plan.rejected
 
 
+def test_swap_area_carries_int8_scales():
+    """Satellite regression: preempting a slot of an int8 pool must park
+    the per-row scales next to their quantized pages in the swap area —
+    both in the snapshot payload and in the pool's swap-byte accounting —
+    and resume must be token-for-token identical to an uninterrupted int8
+    run (the snapshot restore is bitwise)."""
+    cfg = model("mtla")
+    params = api.init_model(jax.random.PRNGKey(11), cfg)
+    rng = np.random.default_rng(12)
+    long_p = rng.integers(0, 97, size=(8,)).astype(np.int32)
+    hi_p = rng.integers(0, 97, size=(6,)).astype(np.int32)
+
+    def engine(**kw):
+        return DecodeEngine(params, cfg, batch=1, max_len=64,
+                            dtype=jnp.float32, burst=4, page_size=4,
+                            cache_dtype="int8", **kw)
+
+    ref = engine()
+    want_long = ref.run([Request(rid=0, prompt=long_p, max_new=20)])[0]
+    eng = engine(preemption=True)
+    low = Request(rid=0, prompt=long_p, max_new=20, priority=0)
+    # admit the long request, let it decode a bit, then preempt directly
+    # so the parked snapshot is inspectable mid-flight
+    assert eng.add_request(low)
+    eng._burst_step()
+    slot = eng.scheduler.slots.index(low)
+    eng.preempt(slot)
+    entry = eng.pool.swap[low.rid]
+    assert {"pool_c", "pool_kr", "scale_c", "scale_kr"} \
+        <= set(entry["data"].keys())
+    assert entry["data"]["scale_c"].dtype == np.float32
+    assert entry["data"]["pool_c"].dtype == np.int8
+    # accounting counts payload + scales: more than the int8 rows alone
+    rows_only = entry["data"]["pool_c"].nbytes + \
+        entry["data"]["pool_kr"].nbytes
+    assert entry["bytes"] > rows_only
+    assert eng.pool.swap_bytes == entry["bytes"]
+    # resume through the scheduler queue and finish both requests
+    out = eng.run([low, Request(rid=1, prompt=hi_p, max_new=6)])
+    assert eng.preemptions == 1 and eng.resumes == 1
+    assert out[0] == want_long and len(out[1]) == 6
+    assert eng.pool.swap_bytes == 0
+
+
 def test_paged_cache_validation():
     cfg_std = model("mha")
     with pytest.raises(ValueError, match="latent"):

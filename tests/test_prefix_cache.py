@@ -1,0 +1,335 @@
+"""Shared-prefix radix cache + slot preemption (serving/prefix.py):
+
+* radix-tree unit semantics — page-granular lookup/publish with ownership
+  transfer, the leave-one-suffix-token rule, LRU leaf eviction that skips
+  pinned (slot-referenced) pages;
+* token-for-token identity of prefix-cached serving vs the cache-disabled
+  engine on mtla/mla x ref/pallas, with prefill work and per-request mapped
+  pages dropping in proportion to the shared-prefix length;
+* copy-on-write reuse of a partially matched boundary page (stride-aligned,
+  not page-aligned sharing boundary);
+* admission under a pool whose free pages are all held by idle prefix
+  leaves — LRU eviction must unblock it (no deadlock against back-pressure);
+* scheduler skip-scan: a deferred mid-queue request no longer cuts the
+  admission round;
+* preempt -> resume identical to an uninterrupted decode, with the swap
+  area accounted in the pool.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.types import AttentionConfig, ModelConfig, PagedCacheSpec
+from repro.models import api
+from repro.serving.cache import PagePool
+from repro.serving.engine import DecodeEngine, Request
+from repro.serving.prefix import PrefixCache
+from repro.serving.scheduler import Scheduler
+
+
+def model(kind, backend="ref", s=2):
+    latent = kind in ("mla", "mtla")
+    return ModelConfig(
+        name="prefix", family="dense", num_layers=2, d_model=64, d_ff=128,
+        vocab_size=97, backend=backend,
+        attn=AttentionConfig(kind=kind, num_heads=4, num_kv_heads=4,
+                             head_dim=16,
+                             kv_lora_rank=32 if latent else 0,
+                             rope_head_dim=8 if latent else 0,
+                             hyper_dim=8, s=s, q_chunk=0))
+
+
+def shared_prefix_requests(n, shared, total, seed=1, max_new=None):
+    rng = np.random.default_rng(seed)
+    pre = rng.integers(0, 97, size=(shared,)).astype(np.int32)
+    return [Request(rid=i, prompt=np.concatenate(
+                [pre, rng.integers(0, 97, size=(total - shared,)
+                                   ).astype(np.int32)]),
+                    max_new=max_new or (4 + i % 5))
+            for i in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# radix tree unit semantics (host-side only, no model)
+# ---------------------------------------------------------------------------
+
+def _manual_slot(pool, slot, tokens, max_new=8):
+    """Reserve + map a slot the way the engine does at admission."""
+    pool.reserve(slot, pool.pages_for_request(len(tokens), max_new))
+    pool.ensure_mapped(slot, len(tokens))
+
+
+def test_radix_publish_lookup_ownership():
+    pool = PagePool(PagedCacheSpec(page_size=4), batch=2, max_len=64, s=2)
+    px = PrefixCache(pool)
+    tpp = 4 * 2                                   # tokens per page
+    toks = np.arange(1, 25, dtype=np.int32)       # 24 tokens = 3 full pages
+    _manual_slot(pool, 0, toks)
+    assert len(pool.mapped[0]) == 3 and not pool.shared[0]
+    px.publish(0, toks)
+    # ownership moved: the slot now *shares* its own pages with the tree
+    assert not pool.mapped[0] and len(pool.shared[0]) == 3
+    assert pool.tree_pages == 3 and pool.pinned_pages == 3
+    # identical prompt with a longer tail: all 3 pages hit
+    hit = px.lookup(np.concatenate([toks, [99, 98]]).astype(np.int32))
+    assert len(hit.pages) == 3 and hit.tokens == 3 * tpp
+    assert hit.pages == pool.shared[0]
+    # the exact published sequence must leave >= 1 suffix token: 2 pages
+    hit = px.lookup(toks)
+    assert len(hit.pages) == 2 and hit.cow_chunks == (tpp - 1) // 2
+    # diverging in page 2 keeps pages 0-1 plus a stride-aligned COW reuse
+    div = toks.copy()
+    div[2 * tpp + 5] = 77                         # chunks 0,1 of page 2 match
+    hit = px.lookup(np.concatenate([div, [99]]).astype(np.int32))
+    assert len(hit.pages) == 2 and hit.cow_chunks == 2
+    assert hit.cow_page == pool.shared[0][2]
+    assert hit.tokens == 2 * tpp + 2 * 2
+    # releasing the slot leaves the tree pages idle (cached, evictable)
+    pool.release(0)
+    assert pool.pinned_pages == 0 and pool.idle_tree_pages == 3
+    assert pool.availability() == pool.total_pages
+
+
+def test_lru_eviction_skips_pinned_and_unblocks_alloc():
+    spec = PagedCacheSpec(page_size=4, pool_pages=4)
+    pool = PagePool(spec, batch=2, max_len=32, s=2)
+    px = PrefixCache(pool)
+    a = np.arange(1, 9, dtype=np.int32)           # 1 full page each
+    b = np.arange(11, 19, dtype=np.int32)
+    _manual_slot(pool, 0, a, max_new=8)           # 2 pages (8+8 tokens)
+    px.publish(0, a)
+    pool.release(0)
+    _manual_slot(pool, 0, b, max_new=8)
+    px.publish(0, b)
+    pool.release(0)
+    assert pool.idle_tree_pages == 2 and len(pool.free) == 2
+    # map `a`'s page into slot 1 -> pinned, unevictable (and `a` is also
+    # the more recently touched leaf)
+    hit = px.lookup(np.concatenate([a, [51, 52]]).astype(np.int32))
+    pool.reserve(1, 0)
+    pool.share(1, hit.pages)
+    assert pool.availability() == 3               # 4 total - 1 pinned
+    # a 3-page reservation drains the 2 free pages, then the third
+    # allocation must evict `b`'s idle page — never the pinned one
+    pool.reserve(0, 3)
+    pool.ensure_mapped(0, 3 * 8)
+    assert len(pool.mapped[0]) == 3
+    assert pool.evicted_pages == 1 and pool.tree_pages == 1
+    assert px.lookup(np.concatenate([b, [50]]).astype(np.int32)) is None
+    assert pool.tree_refs[hit.pages[0]] == 1      # pinned page survived
+
+
+# ---------------------------------------------------------------------------
+# serving identity + accounting
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind,backend", [
+    ("mtla", "ref"), ("mtla", "pallas"), ("mla", "ref"), ("mla", "pallas")])
+def test_prefix_hit_token_identity(kind, backend):
+    """Prefix-cached serving is token-for-token identical to the disabled
+    engine across admission waves (cold first wave publishes, later waves
+    hit), while prefill work drops by exactly the cached prefix tokens."""
+    cfg = model(kind, backend)
+    params = api.init_model(jax.random.PRNGKey(0), cfg)
+    mk = lambda: shared_prefix_requests(6, shared=16, total=21)
+    base = DecodeEngine(params, cfg, batch=2, max_len=48, dtype=jnp.float32,
+                        burst=4, page_size=4)
+    want = base.run(mk())
+    eng = DecodeEngine(params, cfg, batch=2, max_len=48, dtype=jnp.float32,
+                       burst=4, page_size=4, prefix_cache=True)
+    got = eng.run(mk())
+    assert got == want
+    # waves 2 and 3 (4 requests) each hit the 16-token shared prefix
+    assert eng.prefix.hits == 4
+    assert eng.prefill_tokens_skipped == 4 * 16
+    assert eng.prefill_tokens + eng.prefill_tokens_skipped \
+        == base.prefill_tokens
+    # retired requests published their pages; nothing stays privately mapped
+    assert eng.pool.private_pages == 0 and eng.pool.idle_tree_pages > 0
+
+
+def test_hit_request_maps_fewer_pages():
+    """The acceptance memory axis: a cache-hit request's newly mapped
+    bytes drop in proportion to the shared-prefix length — the shared
+    pages appear in its table refcounted, not copied, so pool usage grows
+    only by the uncached tail."""
+    cfg = model("mtla")                            # s=2, page 4 -> tpp 8
+    params = api.init_model(jax.random.PRNGKey(1), cfg)
+    eng = DecodeEngine(params, cfg, batch=2, max_len=64, dtype=jnp.float32,
+                       burst=4, page_size=4, prefix_cache=True)
+    first = shared_prefix_requests(1, shared=16, total=24, max_new=4)[0]
+    eng.run([first])
+    used_before = eng.pool.used_pages              # idle tree pages only
+    assert used_before == eng.pool.idle_tree_pages == 3
+    second = shared_prefix_requests(2, shared=16, total=24, max_new=8)[1]
+    assert eng.add_request(second)
+    slot = eng.scheduler.slots.index(second)
+    # 16 shared tokens = 2 pages mapped read-only from the tree; the
+    # prompt's third page is the only new allocation (published on the
+    # spot, so it shows as the slot's third shared page)
+    assert eng.pool.table[slot, 0] == eng.pool.shared[slot][0]
+    assert len(eng.pool.shared[slot]) == 3
+    assert eng.pool.used_pages - used_before == 1
+    # reservation was discounted by the 2 hit pages and then by the
+    # published third page (prompt+new span 4 pages in total)
+    total = eng.pool.pages_for_request(24, 8)
+    assert int(eng.pool.reserved[slot]) == total - 3
+    assert eng.prefix.hits == 1 and eng.prefix.hit_tokens == 16
+    rep = eng.cache_report()
+    assert rep["pages_shared"] == 3                # pinned by the live slot
+    assert rep["pages_cached"] == 1                # first's divergent page
+    assert rep["shared"] == 3 * rep["page_bytes"]
+
+
+def test_cow_partial_page_hit_identity():
+    """A shared prefix that is stride-aligned but not page-aligned reuses
+    the boundary page's matched chunks through a copy-on-write fork."""
+    cfg = model("mtla")                            # tpp = 8
+    params = api.init_model(jax.random.PRNGKey(2), cfg)
+    mk = lambda: shared_prefix_requests(4, shared=12, total=17, seed=3)
+    base = DecodeEngine(params, cfg, batch=2, max_len=48, dtype=jnp.float32,
+                        burst=4, page_size=4)
+    want = base.run(mk())
+    eng = DecodeEngine(params, cfg, batch=2, max_len=48, dtype=jnp.float32,
+                       burst=4, page_size=4, prefix_cache=True)
+    got = eng.run(mk())
+    assert got == want
+    # 12 shared tokens = 1 full page (8) + 2 chunks (4 tokens) COW'd
+    assert eng.prefix.hits == 2
+    assert eng.prefill_tokens_skipped == 2 * 12
+
+
+def test_eviction_vs_backpressure_no_deadlock():
+    """When every free page is held by idle refcounted prefix leaves,
+    admission must evict LRU leaves instead of deferring forever."""
+    cfg = model("mtla")
+    params = api.init_model(jax.random.PRNGKey(4), cfg)
+    # pool of 4 pages; each 8-token/8-new request wants 1 page mapped for
+    # the prompt and reserves 2 (8+8 tokens -> 8 chunks -> 2 pages)
+    eng = DecodeEngine(params, cfg, batch=2, max_len=32, dtype=jnp.float32,
+                       burst=4, page_size=4, pool_pages=4,
+                       prefix_cache=True)
+    rng = np.random.default_rng(5)
+    reqs = [Request(rid=i, prompt=rng.integers(0, 97, size=(8,)
+                    ).astype(np.int32), max_new=8) for i in range(6)]
+    out = eng.run(reqs)
+    assert all(len(out[i]) == 8 for i in range(6))
+    assert not eng.failed
+    # retired requests filled the tree; later admissions had to reclaim
+    assert eng.pool.evicted_pages > 0
+    assert eng.pool.peak_pages <= 4
+
+
+def test_plan_skip_scan_defers_without_cutting_round():
+    """Satellite: an unfittable request mid-queue defers but later entries
+    whose reservation fits are still admitted in the same round; the
+    deferred request keeps its queue position (admits first once pages
+    free) so FIFO completion holds among equals."""
+    pool = PagePool(PagedCacheSpec(page_size=4, pool_pages=3), batch=4,
+                    max_len=32, s=2)
+    sched = Scheduler(batch=4, max_len=32)
+    reqs = [Request(rid=0, prompt=np.zeros(4, np.int32), max_new=4),   # 1pg
+            Request(rid=1, prompt=np.zeros(16, np.int32), max_new=8),  # 3pg
+            Request(rid=2, prompt=np.zeros(4, np.int32), max_new=4)]   # 1pg
+    plan = sched.plan(reqs, pool)
+    assert [r.rid for _, r in plan.assignments] == [0, 2]
+    assert plan.deferred and not plan.rejected
+    assert plan.consumed == 1                     # only rid 0 is contiguous
+    assert [r.rid for r in plan.taken()] == [0, 2]
+    # engine-level: everything completes despite the big request deferring
+    cfg = model("mtla")
+    params = api.init_model(jax.random.PRNGKey(6), cfg)
+    eng = DecodeEngine(params, cfg, batch=4, max_len=32, dtype=jnp.float32,
+                       burst=4, page_size=4, pool_pages=3)
+    rng = np.random.default_rng(7)
+    reqs = [Request(rid=0, prompt=rng.integers(0, 97, size=(4,)
+                    ).astype(np.int32), max_new=4),
+            Request(rid=1, prompt=rng.integers(0, 97, size=(16,)
+                    ).astype(np.int32), max_new=8),
+            Request(rid=2, prompt=rng.integers(0, 97, size=(4,)
+                    ).astype(np.int32), max_new=4)]
+    out = eng.run(reqs)
+    assert len(out[0]) == 4 and len(out[1]) == 8 and len(out[2]) == 4
+    assert eng.deferrals > 0 and not eng.failed
+
+
+# ---------------------------------------------------------------------------
+# preemption
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind,backend", [
+    ("mtla", "ref"), ("mtla", "pallas"), ("mla", "ref"), ("mla", "pallas")])
+def test_preempt_resume_token_identity(kind, backend):
+    """A high-priority arrival evicts the resident low-priority slot; the
+    victim's resumed stream is token-for-token identical to an
+    uninterrupted run (swap restore is bitwise), and the high-priority
+    request is served without waiting for the long decode."""
+    cfg = model(kind, backend)
+    params = api.init_model(jax.random.PRNGKey(8), cfg)
+    rng = np.random.default_rng(9)
+    long_p = rng.integers(0, 97, size=(8,)).astype(np.int32)
+    hi_p = rng.integers(0, 97, size=(6,)).astype(np.int32)
+    ref = DecodeEngine(params, cfg, batch=1, max_len=64, dtype=jnp.float32,
+                       burst=4, page_size=4)
+    want_long = ref.run([Request(rid=0, prompt=long_p, max_new=24)])[0]
+    ref.reset()
+    want_hi = ref.run([Request(rid=1, prompt=hi_p, max_new=6)])[1]
+    eng = DecodeEngine(params, cfg, batch=1, max_len=64, dtype=jnp.float32,
+                       burst=4, page_size=4, preemption=True)
+    out = eng.run([Request(rid=0, prompt=long_p, max_new=24, priority=0),
+                   Request(rid=1, prompt=hi_p, max_new=6, priority=5)])
+    assert eng.preemptions == 1 and eng.resumes == 1
+    assert out[1] == want_hi
+    assert out[0] == want_long
+    # swap drained and its accounting tracked the parked snapshot
+    assert eng.pool.swap_bytes == 0 and eng.pool.swap_bytes_peak > 0
+    assert not eng.pool.swap
+
+
+def test_preemption_no_resume_livelock():
+    """Regression: a high-priority head whose demand needs *multiple*
+    victims' pages must not livelock — the freed pages used to resume the
+    first victim past the still-starved head, which then preempted it
+    again forever. Swapped victims now never skip-scan past a deferred
+    entry, so the head drains every victim it needs and admits."""
+    cfg = model("mtla")
+    params = api.init_model(jax.random.PRNGKey(12), cfg)
+    rng = np.random.default_rng(13)
+    lows = [Request(rid=i, prompt=rng.integers(0, 97, size=(8,)
+                    ).astype(np.int32), max_new=8, priority=0)
+            for i in range(2)]                    # 2 pages reserved each
+    big = Request(rid=2, prompt=rng.integers(0, 97, size=(16,)
+                  ).astype(np.int32), max_new=16, priority=5)  # 4 pages
+    eng = DecodeEngine(params, cfg, batch=2, max_len=32, dtype=jnp.float32,
+                       burst=4, page_size=4, pool_pages=4, preemption=True)
+    out = eng.run(lows + [big])
+    assert len(out[2]) == 16
+    assert len(out[0]) == 8 and len(out[1]) == 8
+    # both victims evicted once for the big head, then resumed — bounded
+    assert eng.preemptions == 2 and eng.resumes == 2
+    assert not eng.pool.swap and eng.pool.swap_bytes == 0
+
+
+def test_no_preemption_between_equal_priorities():
+    """Preemption never inverts or ties priorities: equal-priority traffic
+    queues FIFO, so a resumed victim cannot ping-pong its preemptor."""
+    cfg = model("mtla")
+    params = api.init_model(jax.random.PRNGKey(10), cfg)
+    rng = np.random.default_rng(11)
+    reqs = [Request(rid=i, prompt=rng.integers(0, 97, size=(6,)
+                    ).astype(np.int32), max_new=8) for i in range(3)]
+    eng = DecodeEngine(params, cfg, batch=1, max_len=64, dtype=jnp.float32,
+                       burst=4, page_size=4, preemption=True)
+    out = eng.run(reqs)
+    assert eng.preemptions == 0
+    assert all(len(out[i]) == 8 for i in range(3))
+
+
+def test_prefix_and_preemption_require_paged_pool():
+    cfg = model("mtla")
+    params = api.init_model(jax.random.PRNGKey(0), cfg)
+    with pytest.raises(ValueError, match="page pool"):
+        DecodeEngine(params, cfg, batch=2, max_len=32, prefix_cache=True)
+    with pytest.raises(ValueError, match="page pool"):
+        DecodeEngine(params, cfg, batch=2, max_len=32, preemption=True)
