@@ -18,6 +18,14 @@ prefix-reuse counters (``hit_rate``, ``prefill_skipped``): they depend
 only on the radix-cache behaviour, not timing, so any drop below baseline
 means the prefix path stopped hitting — a feature loss the decode
 tokens/s column cannot see (it excludes prefill time).
+
+The chunked-prefill TTFT rows (``bench_serving/ttft/*``) are gated on
+``ttft_vs_unchunked`` — the chunked engine's p50 short-request
+time-to-first-token over the unchunked engine's, both measured in the
+same bench process on the same warmed graphs, so machine speed cancels
+like the memory ratios. A ratio creeping past baseline * ``--ttft-slack``
+means chunked prefill stopped cutting head-of-line blocking (e.g. chunks
+silently coalesced back into whole-prompt calls).
 """
 from __future__ import annotations
 
@@ -46,6 +54,10 @@ def main() -> int:
     ap.add_argument("--mem-slack", type=float, default=1.10,
                     help="fail when a vs_dense_fp32 byte ratio grows by "
                          "more than this factor vs baseline")
+    ap.add_argument("--ttft-slack", type=float, default=1.30,
+                    help="fail when a ttft_vs_unchunked ratio grows by "
+                         "more than this factor vs baseline (same-process "
+                         "ratio, machine-independent)")
     ap.add_argument("--reference", default=REFERENCE_ROW,
                     help="row whose tokens/s normalizes each file "
                          "(cancels machine speed); the gate errors out if "
@@ -69,29 +81,49 @@ def main() -> int:
 
     failures, checked = [], 0
     for name, bd in sorted(base.items()):
-        if "toks_per_s" not in bd or name == args.reference:
+        gated = ("toks_per_s", "vs_dense_fp32", "hit_rate",
+                 "prefill_skipped", "ttft_vs_unchunked")
+        if name == args.reference or not any(k in bd for k in gated):
             continue
         cd = cur.get(name)
-        if cd is None or "toks_per_s" not in cd:
+        if cd is None:
             failures.append(f"{name}: missing from current results")
             continue
         checked += 1
-        cur_rel = cd["toks_per_s"] / cur_ref
-        base_rel = bd["toks_per_s"] / base_ref
-        floor = base_rel / args.max_regression
-        status = "ok"
-        if cur_rel < floor:
-            status = "REGRESSION"
-            failures.append(
-                f"{name}: {cur_rel:.2f}x reference < floor {floor:.2f}x "
-                f"(baseline {base_rel:.2f}x, max-regression "
-                f"{args.max_regression}x)")
+        status, shown = "ok", ""
+        if "toks_per_s" in bd:
+            if "toks_per_s" not in cd:
+                failures.append(f"{name}: toks_per_s missing from current "
+                                f"results")
+                continue
+            cur_rel = cd["toks_per_s"] / cur_ref
+            base_rel = bd["toks_per_s"] / base_ref
+            floor = base_rel / args.max_regression
+            shown = f"  {cur_rel:.2f}x ref (baseline {base_rel:.2f})"
+            if cur_rel < floor:
+                status = "REGRESSION"
+                failures.append(
+                    f"{name}: {cur_rel:.2f}x reference < floor {floor:.2f}x "
+                    f"(baseline {base_rel:.2f}x, max-regression "
+                    f"{args.max_regression}x)")
         if "vs_dense_fp32" in bd and "vs_dense_fp32" in cd \
                 and cd["vs_dense_fp32"] > bd["vs_dense_fp32"] * args.mem_slack:
             status = "MEM-REGRESSION"
             failures.append(
                 f"{name}: peak-cache ratio {cd['vs_dense_fp32']:.3f}x > "
                 f"baseline {bd['vs_dense_fp32']:.3f}x * {args.mem_slack}")
+        if "ttft_vs_unchunked" in bd:
+            # same-process chunked/unchunked p50 TTFT ratio: machine speed
+            # cancels, so baseline * slack is a hard ceiling
+            ratio = cd.get("ttft_vs_unchunked", float("inf"))
+            shown = shown or f"  ttft {ratio:.2f}x unchunked " \
+                             f"(baseline {bd['ttft_vs_unchunked']:.2f})"
+            if ratio > bd["ttft_vs_unchunked"] * args.ttft_slack:
+                status = "TTFT-REGRESSION"
+                failures.append(
+                    f"{name}: ttft_vs_unchunked {ratio:.3f}x > baseline "
+                    f"{bd['ttft_vs_unchunked']:.3f}x * {args.ttft_slack} "
+                    f"(chunked prefill stopped cutting HOL blocking)")
         for det in ("hit_rate", "prefill_skipped"):
             # deterministic counters: timing-free, so baseline is a floor
             if det in bd and cd.get(det, 0) < bd[det] - 1e-9:
@@ -100,8 +132,7 @@ def main() -> int:
                     f"{name}: {det} {cd.get(det, 0)} < baseline {bd[det]} "
                     f"(prefix reuse is deterministic; a drop means the "
                     f"radix cache stopped hitting)")
-        print(f"{status:>14}  {name}  {cur_rel:.2f}x ref "
-              f"(baseline {base_rel:.2f})")
+        print(f"{status:>14}  {name}{shown}")
     print(f"checked {checked} rows, {len(failures)} failures "
           f"(normalized by {args.reference})")
     for f_ in failures:

@@ -46,8 +46,8 @@ def main():
     print(f"decode: {eng.steps} device steps in {eng.decode_calls} jitted "
           f"bursts of <= {args.burst} (continuous batching across "
           f"{len(reqs)} requests on 3 slots; one host sync per burst)")
-    print(f"prefill calls: {eng.prefill_calls} (one jitted right-padded "
-          f"batch per admission round)")
+    print(f"prefill calls: {eng.prefill_calls} (one jitted "
+          f"continuation-prefill chunk call per step-loop round)")
     print(f"cache bytes: {cache_bytes(eng.caches):,} "
           f"(t = ceil(len/s) slots per sequence)")
 

@@ -316,36 +316,42 @@ def init_attn_cache(cfg: AttentionConfig, batch: int, max_len: int,
 
 
 def _latent_prefill_continuation(p, cfg: AttentionConfig, x, cache,
-                                 offsets, lengths):
-    """Prefill a per-sequence *suffix* against cached latent prefix pages
-    (prefix-cache continuation, serving/prefix.py).
+                                 offsets, lengths, active):
+    """Prefill a per-sequence token window (a *chunk*) against the latent
+    prefix already in the cache — the single prefill primitive of the
+    serving step loop (serving/engine.py) and of prefix-cache continuation
+    (serving/prefix.py).
 
-    x [B,T,d] holds each sequence's uncached suffix right-padded to T;
-    ``offsets`` [B] is the cached-prefix token length (stride-aligned: the
-    hyper-network's partial-chunk merge state at a non-aligned tail is
-    request-dependent and cannot be shared, so the sharing boundary always
-    falls on a chunk boundary and the suffix opens a fresh chunk);
-    ``lengths`` [B] the suffix lengths. Rows with offset 0 are ordinary
-    cold prefills expressed in the same graph.
+    x [B,T,d] holds each sequence's chunk right-padded to T; ``offsets``
+    [B] is the absolute position the chunk starts at — the tokens already
+    cached before it, whether written by this request's earlier chunks or
+    mapped read-only from a prefix-cache hit. Offsets are stride-aligned:
+    the hyper-network's partial-chunk merge state at a non-aligned tail is
+    request-dependent and cannot be resumed from the cache, so every chunk
+    boundary falls on a chunk-grid boundary and each chunk opens a fresh
+    stride. ``lengths`` [B] are the chunk lengths; rows with offset 0 are
+    ordinary cold prefills expressed in the same graph. ``active`` [B]
+    marks the rows this call is prefilling — inactive rows (decoding
+    neighbours mid-flight, empty slots) compute discarded outputs and
+    never write: their cache rows and ``pos`` pass through untouched, so
+    the chunked prefill runs on the live batch cache directly.
 
-    The suffix runs the standard train-path math at absolute positions
-    offset..offset+T-1 — including re-running the prompt tail's partial-
-    stride merge locally, so the in-progress chunk state is exactly what an
-    uncached prefill would have produced — while its queries attend to the
-    cached prefix chunks read from the page pool plus its own chunk track.
-    Writes go through ``paged_prefill_write_at`` at absolute chunk slots >=
-    offset//s, so shared prefix pages stay read-only.
+    The chunk runs the standard train-path math at absolute positions
+    offset..offset+T-1 — including re-running its tail's partial-stride
+    merge locally, so the in-progress chunk state is exactly what an
+    uncached full prefill would have produced — while its queries attend
+    to the cached prefix chunks (page pool or dense rows) plus its own
+    chunk track. Writes land at absolute chunk slots >= offset//s, so a
+    prefix hit's shared pages stay read-only by construction.
 
     Backend note: this path always runs the reference jnp math, on every
     backend — the fused Pallas training kernels assume fresh positions
     0..T-1 (core/dispatch.py), and the per-row offsets here violate that
-    layout. Only rounds containing a prefix hit take this graph
-    (serving/engine.py keeps hit-free rounds on the fresh-prefill path, so
-    a pallas engine loses no fused prefill work when the cache is cold); a
-    fused continuation kernel is future work.
+    layout. A fused continuation kernel is future work.
     """
     B, T, _ = x.shape
     s = cfg.s if cfg.kind == "mtla" else 1
+    paged = "pool_c" in cache
     offsets = offsets.astype(jnp.int32)
     lengths = lengths.astype(jnp.int32)
     positions = offsets[:, None] + jnp.arange(T)[None, :]          # [B, T]
@@ -354,17 +360,20 @@ def _latent_prefill_continuation(p, cfg: AttentionConfig, x, cache,
         g = mtla.merge_gates(p, c, positions // s)                 # [B, T]
     else:
         g = jnp.ones((B, T), jnp.float32)
-    # local merge is exact because offsets are stride-aligned: the suffix's
-    # chunk grid coincides with its local token grid
+    # local merge is exact because offsets are stride-aligned: the chunk's
+    # stride grid coincides with its local token grid
     P_, C_hat = mtla.temporal_merge(c, g, s)
     local_t = C_hat.shape[1]
     scale = mtla.default_scale(cfg.head_dim, cfg.softmax_scale)
 
     # chunk track over the slot's full logical space: cached prefix chunks
-    # from the pool (read-only shared pages), local finalized chunks
-    # overlaid at their absolute slots. Slots the mask admits are always
-    # valid; everything else (stale pages, pad-chunk garbage) is masked.
-    view_c, view_kr = mtla.paged_view(cache)
+    # from the pool / dense rows, local finalized chunks overlaid at their
+    # absolute slots. Slots the mask admits are always valid; everything
+    # else (stale pages, pad-chunk garbage) is masked.
+    if paged:
+        view_c, view_kr = mtla.paged_view(cache)
+    else:
+        view_c, view_kr = cache["c"], cache["kr"]
     idx_fin = jnp.minimum(jnp.arange(local_t) * s + (s - 1), T - 1)
     kr_fin = jnp.take(kr, idx_fin, axis=1)                         # [B,t,dr]
     bidx = jnp.arange(B)[:, None]
@@ -381,21 +390,68 @@ def _latent_prefill_continuation(p, cfg: AttentionConfig, x, cache,
     y = dense(p["wo"], ctx.reshape(B, T, -1))
 
     # cache write: chunk slot j holds the merge state at its final member
-    # position clamped to the last real suffix token (same rule as the
-    # lengths-aware fresh prefill); dead slots drop instead of writing
+    # position clamped to the last real chunk token (same rule as the
+    # lengths-aware fresh prefill); dead slots and inactive rows drop
+    # instead of writing
     last = lengths - 1
     idxp = jnp.minimum(jnp.arange(local_t)[None, :] * s + (s - 1),
                        last[:, None])                              # [B, t]
     cc = jnp.take_along_axis(P_, idxp[:, :, None], axis=1)
     ckr = jnp.take_along_axis(kr, idxp[:, :, None], axis=1)
-    live = jnp.arange(local_t)[None, :] <= (last // s)[:, None]
-    cache = mtla.paged_prefill_write_at(cache, cc, ckr, offsets // s, live)
-    cache["pos"] = offsets + lengths
+    live = (jnp.arange(local_t)[None, :] <= (last // s)[:, None]) \
+        & active[:, None]
+    if paged:
+        cache = mtla.paged_prefill_write_at(cache, cc, ckr, offsets // s,
+                                            live)
+    else:
+        cache = mtla.dense_prefill_write_at(cache, cc, ckr, offsets // s,
+                                            live)
+    cache["pos"] = jnp.where(active, offsets + lengths, cache["pos"])
+    return y, cache
+
+
+def _std_prefill_continuation(p, cfg: AttentionConfig, x, cache,
+                              offsets, lengths, active, window: int):
+    """Chunked-continuation prefill for standard kinds (mha/mqa/gqa) on
+    the non-ring dense cache: write the chunk's K/V at absolute slots
+    (slot == position when the cache spans max_len), then attend the chunk
+    queries over the whole cache — the freshly written chunk plus every
+    earlier chunk of the same request — under the slot-validity mask
+    ``0 <= slot_pos <= position`` that decode uses. Stale rows from a
+    slot's previous occupant carry ``slot_pos == slot index``, which the
+    causal mask excludes until the new request's own chunks overwrite
+    them. Inactive rows (``active`` False) compute discarded outputs and
+    write nothing."""
+    B, T, _ = x.shape
+    offsets = offsets.astype(jnp.int32)
+    lengths = lengths.astype(jnp.int32)
+    positions = offsets[:, None] + jnp.arange(T)[None, :]          # [B, T]
+    q, k, v = _std_qkv(p, cfg, x, positions)
+    L = cache["k"].shape[1]
+    live = (jnp.arange(T)[None, :] < lengths[:, None]) & active[:, None]
+    slot = jnp.where(live, positions, L)          # L = out of range, drops
+    bidx = jnp.arange(B)[:, None]
+    cache["k"] = cache["k"].at[bidx, slot].set(
+        k.astype(cache["k"].dtype), mode="drop")
+    cache["v"] = cache["v"].at[bidx, slot].set(
+        v.astype(cache["v"].dtype), mode="drop")
+    cache["slot_pos"] = cache["slot_pos"].at[bidx, slot].set(
+        positions, mode="drop")
+    sp = cache["slot_pos"][:, None, :]                            # [B,1,L]
+    allow = (sp >= 0) & (sp <= positions[:, :, None])
+    if window:
+        allow &= sp > (positions[:, :, None] - window)
+    scale = mtla.default_scale(cfg.head_dim, cfg.softmax_scale)
+    ctx = _grouped_attention(q, cache["k"].astype(q.dtype),
+                             cache["v"].astype(q.dtype), allow, scale,
+                             _sm_dtype(cfg))
+    y = dense(p["wo"], ctx)
+    cache["pos"] = jnp.where(active, offsets + lengths, cache["pos"])
     return y, cache
 
 
 def attn_prefill(p, cfg: AttentionConfig, x, cache, *, window: int = 0,
-                 backend=None, lengths=None, offsets=None):
+                 backend=None, lengths=None, offsets=None, active=None):
     """Run the train path AND fill the decode cache. Fresh sequences only
     (positions 0..T-1), unless ``offsets`` selects the continuation path.
 
@@ -405,22 +461,44 @@ def attn_prefill(p, cfg: AttentionConfig, x, cache, *, window: int = 0,
     is populated so that decode continues from position lengths[b] exactly
     as if each sequence had been prefilled alone at its own length.
 
-    offsets [B] (optional, latent kinds with a paged cache only): prefill
-    each row as a *suffix* starting at the given stride-aligned absolute
-    position, attending to the cached latent prefix already present in the
-    row's mapped pages (prefix-cache continuation). Requires ``lengths``
-    (the per-row suffix lengths).
+    offsets [B] (optional): prefill each row as a token *chunk* starting
+    at the given stride-aligned absolute position, attending to the
+    cached prefix already present in the row's cache (this request's
+    earlier chunks and/or prefix-cache pages) — the serving engine's only
+    prefill shape. Requires ``lengths`` (the per-row chunk lengths).
+    Latent kinds run on paged or dense caches; standard kinds on the
+    non-ring dense cache (ring/sliding-window caches cannot take absolute-
+    slot chunk writes — the engine prefills those per request).
+
+    active [B] bool (optional, with offsets): rows this call prefills;
+    inactive rows' caches and ``pos`` pass through untouched so the call
+    can run directly on a live batch cache whose other slots are
+    mid-decode. Defaults to all-active.
     """
     if offsets is not None:
-        if cfg.kind not in ("mla", "mtla") or "pool_c" not in cache:
-            raise ValueError(
-                "offset (prefix-cache continuation) prefill requires a "
-                "latent attention kind with a paged cache")
         if lengths is None:
-            raise ValueError("offset prefill requires per-row suffix "
-                             "lengths")
-        return _latent_prefill_continuation(p, cfg, x, cache, offsets,
-                                            lengths)
+            raise ValueError("offset (chunked continuation) prefill "
+                             "requires per-row chunk lengths")
+        if active is None:
+            active = jnp.ones((x.shape[0],), bool)
+        if cfg.kind in ("mla", "mtla"):
+            return _latent_prefill_continuation(p, cfg, x, cache, offsets,
+                                                lengths, active)
+        if "slot_pos" not in cache:
+            raise ValueError(
+                "chunked continuation prefill for standard kinds requires "
+                "the non-ring dense cache (slot == absolute position)")
+        # Ring caches (sliding_window < max_len) cannot take absolute-slot
+        # chunk writes, but they are statically indistinguishable here from
+        # a non-ring cache with sliding_window == max_len (both arrive with
+        # window == L): the engine keeps ring configs on the per-request
+        # fresh path (DecodeEngine._batched_prefill), and direct callers
+        # must do the same — a misrouted ring cache drops writes at
+        # positions >= L instead of wrapping. Non-ring windowed caches are
+        # exact: the window mask below applies, and with window >= max_len
+        # it never excludes an in-capacity position.
+        return _std_prefill_continuation(p, cfg, x, cache, offsets,
+                                         lengths, active, window)
     B, T, _ = x.shape
     positions = jnp.arange(T)[None, :].repeat(B, 0)
     seq_pos = (jnp.full((B,), T, jnp.int32) if lengths is None

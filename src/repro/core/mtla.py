@@ -388,6 +388,28 @@ def paged_prefill_write_at(cache, cc, ckr, start_chunk, live):
                                           mode="drop"))
 
 
+def dense_prefill_write_at(cache, cc, ckr, start_chunk, live):
+    """Dense-cache twin of ``paged_prefill_write_at``: scatter per-slot
+    chunk rows cc [B, t, r] / ckr [B, t, dr] into the per-slot latent
+    cache at *absolute* chunk slots ``start_chunk[b] + j``. Rows with
+    ``live[b, j]`` False — an inactive batch row, a pad chunk, or a slot
+    past the cache capacity — are dropped, so a chunked continuation
+    prefill can run on the full batch without touching its decoding
+    neighbours' rows (the dense analogue of the paged path's unmapped-
+    sentinel drop)."""
+    cache_c, cache_kr = cache["c"], cache["kr"]
+    B, tmax, _ = cache_c.shape
+    t = cc.shape[1]
+    j_abs = start_chunk[:, None] + jnp.arange(t)[None, :]           # [B, t]
+    j_w = jnp.where(live, j_abs, tmax)            # tmax = out of range
+    bidx = jnp.arange(B)[:, None]
+    return dict(
+        cache,
+        c=cache_c.at[bidx, j_w].set(cc.astype(cache_c.dtype), mode="drop"),
+        kr=cache_kr.at[bidx, j_w].set(ckr.astype(cache_kr.dtype),
+                                      mode="drop"))
+
+
 def paged_view(cache):
     """Materialize the pool as dense per-slot latent sequences
     (view_c [B, n*page, r], view_kr [B, n*page, dr]), dequantized for int8

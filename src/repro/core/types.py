@@ -230,3 +230,10 @@ class ServeConfig:
     max_len: int = 2048
     compute_dtype: str = "bfloat16"
     cache_dtype: str = "bfloat16"
+    # step loop (serving/engine.py): prompt tokens one slot prefills per
+    # round (0 = whole prompt; rounded up to a multiple of the MTLA
+    # temporal stride so chunk boundaries stay on the chunk grid) and the
+    # global per-round token budget split between the decode burst and
+    # prefill chunks (0 = unbounded; Scheduler.plan_round)
+    chunk_tokens: int = 0
+    round_budget: int = 0

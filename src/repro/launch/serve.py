@@ -16,7 +16,7 @@ import numpy as np
 
 from ..configs import ALL_IDS, get_config, smoke_config
 from ..core import dispatch
-from ..core.types import mla_variant, mtla_variant
+from ..core.types import ServeConfig, mla_variant, mtla_variant
 from ..models import api
 from ..serving.engine import DecodeEngine, Request, cache_bytes_split
 from ..serving.sampling import SamplingParams
@@ -39,6 +39,20 @@ def main(argv=None):
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--burst", type=int, default=8,
                     help="decode tokens per jitted call / host sync")
+    serve_defaults = ServeConfig()      # single source for step-loop knobs
+    ap.add_argument("--chunk-tokens", type=int,
+                    default=serve_defaults.chunk_tokens,
+                    help="prompt tokens one slot prefills per round (0 = "
+                         "whole prompt in one chunk); rounded up to a "
+                         "multiple of the MTLA stride s so chunk "
+                         "boundaries stay on the chunk grid — long "
+                         "prompts stream in across rounds interleaved "
+                         "with decode bursts")
+    ap.add_argument("--round-budget", type=int,
+                    default=serve_defaults.round_budget,
+                    help="global token budget per step-loop round, split "
+                         "between the decode burst and prefill chunks "
+                         "(0 = unbounded; see Scheduler.plan_round)")
     ap.add_argument("--page-size", type=int, default=0,
                     help="paged latent KV cache: compressed positions per "
                          "page (0 = dense per-slot caches; mla/mtla only)")
@@ -86,7 +100,9 @@ def main(argv=None):
     params = api.init_model(jax.random.PRNGKey(args.seed), cfg)
     eng = DecodeEngine(params, cfg, batch=args.batch, max_len=args.max_len,
                        dtype=jnp.float32, backend=args.backend,
-                       burst=args.burst, page_size=args.page_size,
+                       burst=args.burst, chunk_tokens=args.chunk_tokens,
+                       round_budget=args.round_budget,
+                       page_size=args.page_size,
                        pool_pages=args.pool_pages,
                        cache_dtype=args.cache_dtype,
                        prefix_cache=args.prefix_cache,
@@ -113,8 +129,10 @@ def main(argv=None):
                                 use_pallas=eng.cfg.attn.use_pallas)
     be = (resolved if eng.cfg.backend == resolved
           else f"{resolved} (from {eng.cfg.backend})")
+    chunk = (f" chunk={eng.chunk_tokens}" if eng.chunk_tokens else "") + \
+        (f" budget={eng.round_budget}" if eng.round_budget else "")
     print(f"arch={cfg.name} attn={cfg.attn.kind} s={cfg.attn.s} "
-          f"backend={be} burst={args.burst} sampling={mode}")
+          f"backend={be} burst={args.burst}{chunk} sampling={mode}")
     ok = len(out) - len(eng.failed)
     print(f"{ok} requests served"
           + (f", {len(eng.failed)} rejected" if eng.failed else "")
@@ -126,6 +144,15 @@ def main(argv=None):
     print(f"decode:  {eng.decoded_tokens} toks in {eng.decode_time_s:.2f}s "
           f"({rate:.1f} tok/s incl. compile; {eng.decode_calls} bursts, "
           f"{eng.steps} device steps, 1 host sync per burst)")
+    ttft = [r.t_first - r.t_submit for r in reqs
+            if r.t_first is not None and r.t_submit is not None]
+    itl = [b - a for r in reqs for a, b in zip(r.tok_t, r.tok_t[1:])]
+    if ttft:
+        p = lambda xs, q: 1e3 * float(np.percentile(xs, q))
+        print(f"latency: ttft p50 {p(ttft, 50):.1f} / p95 {p(ttft, 95):.1f}"
+              f" ms" + (f"; inter-token p50 {p(itl, 50):.1f} / "
+                        f"p95 {p(itl, 95):.1f} ms (per host sync)"
+                        if itl else "") + " — incl. compile")
     if eng.pool is not None:
         rep = eng.cache_report()
         pool = eng.pool

@@ -62,8 +62,14 @@ def init_caches(cfg: ModelConfig, batch: int, max_len: int,
 def prefill(params, cfg: ModelConfig, batch, caches, *, dtype=jnp.bfloat16):
     """Optional batch key ``lengths`` [B] enables right-padded batched
     prefill for LM families; ``offsets`` [B] additionally selects the
-    prefix-cache continuation prefill (see lm.lm_prefill)."""
+    chunked-continuation prefill — each row prefills a prompt *chunk* at a
+    stride-aligned absolute position against its cached prefix — and
+    ``active`` [B] masks the rows it writes (see lm.lm_prefill)."""
     if cfg.family == "encdec":
+        if batch.get("offsets") is not None:
+            raise ValueError("chunked continuation prefill is unsupported "
+                             "for encdec: the encoder pass and first "
+                             "decoder step are one unit (encdec_start)")
         caches = encdec_mod.encdec_start(
             params, cfg, batch["frontend_embeds"], caches, dtype)
         return encdec_mod.encdec_decode(params, cfg, batch["tokens"][:, :1],
@@ -71,7 +77,8 @@ def prefill(params, cfg: ModelConfig, batch, caches, *, dtype=jnp.bfloat16):
     return lm_mod.lm_prefill(params, cfg, batch["tokens"], caches,
                              prefix_embeds=batch.get("frontend_embeds"),
                              dtype=dtype, lengths=batch.get("lengths"),
-                             offsets=batch.get("offsets"))
+                             offsets=batch.get("offsets"),
+                             active=batch.get("active"))
 
 
 def decode(params, cfg: ModelConfig, token, caches, *, dtype=jnp.bfloat16):

@@ -185,7 +185,13 @@ def init_encdec_caches(cfg: ModelConfig, batch: int, max_len: int,
 
 def encdec_start(params, cfg: ModelConfig, src_embeds, caches,
                  dtype=jnp.bfloat16):
-    """Encode source and populate per-layer cross-attention KV caches."""
+    """Encode source and populate per-layer cross-attention KV caches.
+
+    Note: the serving engine's chunked-continuation prefill (models/api.py
+    ``offsets``/``active``) does not apply here — encdec "prefill" is one
+    bidirectional encoder pass plus a single decoder step, not a causal
+    prompt scan, so there is no chunk boundary to resume from. The engine
+    serves encdec through its per-request fallback path."""
     enc_out = encode(params, cfg, src_embeds, dtype)
 
     def body(_, scanned):

@@ -236,10 +236,11 @@ def init_lm_caches(cfg: ModelConfig, batch: int, max_len: int,
 
 
 def _block_serve(lp, cfg: ModelConfig, x, cache, window: int, phase: str,
-                 lengths=None, offsets=None):
+                 lengths=None, offsets=None, active=None):
     """phase: 'prefill' or 'decode'. Returns (y, cache). ``lengths`` [B]
     enables right-padded batched prefill; ``offsets`` [B] additionally
-    selects the prefix-cache continuation prefill (prefill phase only)."""
+    selects the chunked-continuation prefill and ``active`` [B] masks the
+    rows it writes (prefill phase only)."""
     eps = cfg.norm_eps
     fam = cfg.family
     akw = {"window": window, "backend": cfg.backend}
@@ -247,6 +248,7 @@ def _block_serve(lp, cfg: ModelConfig, x, cache, window: int, phase: str,
         attn_fn = attn_prefill
         akw["lengths"] = lengths
         akw["offsets"] = offsets
+        akw["active"] = active
     else:
         attn_fn = attn_decode
     if fam == "ssm":
@@ -292,7 +294,7 @@ def _block_serve(lp, cfg: ModelConfig, x, cache, window: int, phase: str,
 
 
 def _serve_stack(params, cfg: ModelConfig, x, caches, phase: str,
-                 lengths=None, offsets=None):
+                 lengths=None, offsets=None, active=None):
     if cfg.family == "hybrid":
         new_caches = []
         for (window, _), gp, gc in zip(hybrid_groups(cfg),
@@ -309,7 +311,7 @@ def _serve_stack(params, cfg: ModelConfig, x, caches, phase: str,
     def body(h, scanned):
         lp, c = scanned
         h, c2 = _block_serve(lp, cfg, h, c, cfg.attn.sliding_window, phase,
-                             lengths, offsets)
+                             lengths, offsets, active)
         return h, c2
 
     x, caches = jax.lax.scan(body, x, (params["layers"], caches))
@@ -318,7 +320,7 @@ def _serve_stack(params, cfg: ModelConfig, x, caches, phase: str,
 
 def lm_prefill(params, cfg: ModelConfig, tokens, caches, *,
                prefix_embeds=None, dtype=jnp.bfloat16, lengths=None,
-               offsets=None):
+               offsets=None, active=None):
     """Returns (last-position logits [B,vocab], caches).
 
     lengths [B] (optional): per-sequence prompt lengths for right-padded
@@ -326,10 +328,12 @@ def lm_prefill(params, cfg: ModelConfig, tokens, caches, *,
     each sequence's own final real position. Incompatible with
     prefix_embeds (the prefix would shift per-sequence offsets).
 
-    offsets [B] (optional, with lengths): prefix-cache continuation —
-    ``tokens`` holds each row's uncached *suffix* and attention resumes at
-    the given stride-aligned absolute position against the row's cached
-    latent prefix pages (core/attention.py::attn_prefill)."""
+    offsets [B] (optional, with lengths): chunked continuation — ``tokens``
+    holds each row's next prompt *chunk* and attention resumes at the
+    given stride-aligned absolute position against the row's cached
+    prefix (earlier chunks and/or shared prefix pages); ``active`` [B]
+    masks the rows being prefilled, leaving decoding neighbours' cache
+    rows untouched (core/attention.py::attn_prefill)."""
     if lengths is not None and cfg.family in ("ssm", "hybrid"):
         raise ValueError("right-padded batched prefill is unsupported for "
                          "recurrent-state families (pad tokens would enter "
@@ -342,7 +346,7 @@ def lm_prefill(params, cfg: ModelConfig, tokens, caches, *,
         pe = dense(params["projector"], prefix_embeds.astype(dtype))
         x = jnp.concatenate([pe, x], axis=1)
     x, caches = _serve_stack(params, cfg, x.astype(dtype), caches, "prefill",
-                             lengths, offsets)
+                             lengths, offsets, active)
     x = norm_apply(params["final_norm"], x, eps=cfg.norm_eps, kind=cfg.norm)
     if lengths is None:
         xl = x[:, -1:]

@@ -321,15 +321,6 @@ def set_page_table(caches, table: np.ndarray):
     return rec(caches)
 
 
-def masked_page_table(table: np.ndarray, slots, sentinel: int) -> np.ndarray:
-    """Table visible to a batched prefill: only ``slots`` keep their
-    mappings; every other row is fully unmapped, so the dummy rows of the
-    right-padded prefill cannot write into live slots' pages."""
-    out = np.full_like(table, sentinel)
-    out[list(slots)] = table[list(slots)]
-    return out
-
-
 def _map_pool_leaves(caches, fn):
     """Apply ``fn(name, leaf) -> leaf`` to every pool leaf (POOL_LEAVES),
     rebuilding the pytree."""
@@ -355,8 +346,8 @@ def copy_pages(caches, src: Sequence[int], dst: Sequence[int]):
     """Copy physical pages ``src`` onto ``dst`` across every pool leaf
     (all layers, including int8 scale rows) — the device half of a
     copy-on-write page fork."""
-    s = jnp.asarray(list(src))
-    d = jnp.asarray(list(dst))
+    s = jnp.asarray(list(src), jnp.int32)
+    d = jnp.asarray(list(dst), jnp.int32)
     return _map_pool_leaves(caches, lambda k, v: v.at[:, d].set(v[:, s]))
 
 
@@ -364,8 +355,9 @@ def gather_pages(caches, pages: Sequence[int]) -> Dict[str, np.ndarray]:
     """Snapshot physical ``pages`` from every pool leaf to host arrays
     ({leaf name: [L, k, page, ...]}), in the given (logical) order —
     the swap-out half of slot preemption. Scale leaves ride along, so an
-    int8 snapshot remains dequantizable after restore."""
-    idx = jnp.asarray(list(pages))
+    int8 snapshot remains dequantizable after restore (an empty snapshot —
+    a slot preempted before its first chunk mapped a page — is legal)."""
+    idx = jnp.asarray(list(pages), jnp.int32)
     out: Dict[str, np.ndarray] = {}
 
     def grab(k, v):
@@ -380,27 +372,37 @@ def gather_pages(caches, pages: Sequence[int]) -> Dict[str, np.ndarray]:
 def scatter_pages(caches, pages: Sequence[int], data: Dict[str, np.ndarray]):
     """Restore a ``gather_pages`` snapshot into (freshly allocated)
     physical ``pages`` — the swap-in half of slot preemption."""
-    idx = jnp.asarray(list(pages))
+    idx = jnp.asarray(list(pages), jnp.int32)
     return _map_pool_leaves(
         caches,
         lambda k, v: v.at[:, idx].set(jnp.asarray(data[k]).astype(v.dtype)))
 
 
-def set_slot_pos(caches, slot: int, pos: int):
-    """Set one slot's ``pos`` across every layer-replicated pos leaf
-    (restores a resumed slot's feed position when no prefill follows to
-    rewrite it)."""
+def set_slots_pos(caches, slots: Sequence[int], values: Sequence[int]):
+    """Set ``slots``' feed positions to ``values`` across every
+    layer-replicated pos leaf in one traversal + one scatter per leaf
+    (restores resumed slots, and points freshly admitted PREFILLING
+    slots at their chunk cursor before any burst can write through a
+    stale position)."""
+    idx = jnp.asarray(list(slots), jnp.int32)
+    vals = jnp.asarray(list(values), jnp.int32)
+
     def rec(node):
         if isinstance(node, dict):
             out = {k: rec(v) for k, v in node.items()}
             if "pos" in out and hasattr(out["pos"], "dtype"):
-                out["pos"] = out["pos"].at[..., slot].set(pos)
+                out["pos"] = out["pos"].at[..., idx].set(vals)
             return out
         if isinstance(node, (list, tuple)):
             return type(node)(rec(v) for v in node)
         return node
 
     return rec(caches)
+
+
+def set_slot_pos(caches, slot: int, pos: int):
+    """Single-slot convenience wrapper over ``set_slots_pos``."""
+    return set_slots_pos(caches, [slot], [pos])
 
 
 def paged_pool_bytes(caches) -> Tuple[int, int]:

@@ -20,14 +20,28 @@ once per token; the loop exits early as soon as every slot finishes
 mid-burst. Scheduling policy (admission order, slot assignment, oversized-
 prompt rejection, burst quota) lives in serving/scheduler.py.
 
-Prefill is batched: all requests admitted in one scheduling round share a
-single right-padded jitted prefill call (prompts padded to a common bucketed
-length, per-sequence ``lengths`` keep pad tokens out of every cache), then
-the fresh cache rows are spliced into the live slots. Prompt shapes are
-bucketed to multiples of ``prefill_bucket`` so the prefill graph compiles
-once per bucket, not once per prompt length. Families with recurrent state
-(ssm/hybrid), frontend prefixes, or ring caches fall back to per-request
-prefill — right padding cannot be masked out of a recurrence.
+Prefill is **chunked and interleaved with decode** in a unified token-
+budget step loop. A freshly admitted slot enters a PREFILLING phase: each
+round, ``Scheduler.plan_round`` splits a global token budget
+(``round_budget``) between the resident decode burst and fixed-size
+prompt chunks (``chunk_tokens``, cut to multiples of MTLA's temporal
+stride so every chunk boundary lands on the chunk grid and the partial-
+stride merge at a chunk tail stays resumable), and the engine runs one
+jitted continuation-prefill call covering this round's chunks — each row
+prefilling its next prompt window at its absolute offset against the
+cache its earlier chunks (or a prefix-cache hit) already wrote — followed
+by one decode burst. Long prompts stream in across rounds while
+neighbouring slots keep decoding, so one long admission no longer stalls
+every resident stream (the TTFT head-of-line-blocking axis the MTLA
+speedup claim lives on); the final chunk samples the slot's first token
+and flips it to DECODING. Chunk widths are bucketed to multiples of
+``prefill_bucket`` so the prefill graph compiles once per bucket, and an
+``active`` row mask lets the call run directly on the live batch cache —
+there is no right-padded full-prompt prefill graph and no transient cache
+allocation. Families with recurrent state (ssm/hybrid), frontend
+prefixes, or ring caches fall back to whole-prompt per-request prefill at
+admission — their state cannot resume from an absolute-position chunk
+boundary.
 
 The attention backend (``ref`` jnp vs ``pallas`` fused kernels,
 core/dispatch.py) rides on ``cfg.backend`` into both the prefill graph and
@@ -48,16 +62,18 @@ prefix pages **across requests** through a radix tree keyed on prompt
 token IDs (serving/prefix.py): admission maps the longest cached
 stride-aligned prefix read-only into the slot's table (whole pages
 refcounted; a partially matched boundary page forks copy-on-write) and the
-batched prefill runs only the uncached suffix at its absolute offset
-(core/attention.py continuation path) — prefill compute and newly mapped
-bytes both drop in proportion to the shared-prefix length. Prefill-
-complete and retired requests publish their finalized pages back into the
-tree, which retains them LRU until admission pressure evicts them.
+slot's chunk cursor simply starts past the cached prefix — a hit is just
+a later first chunk, in the same continuation graph every prefill uses —
+so prefill compute and newly mapped bytes both drop in proportion to the
+shared-prefix length. Completed full pages publish into the tree as the
+cursor passes them (so concurrent admissions share a long prompt while it
+is still prefilling), and again at retire with the decode history; the
+tree retains pages LRU until admission pressure evicts them.
 ``preemption=True`` additionally lets the run loop evict a resident
-lower-priority slot mid-decode: its mapped pages snapshot to the pool's
-host-side swap area and the request re-queues, resuming bit-exact from the
-snapshot once pages free up — long decodes can no longer starve
-admissions.
+lower-priority slot mid-decode or mid-prefill: its mapped pages and chunk
+cursor snapshot to the pool's host-side swap area and the request
+re-queues, resuming bit-exact from the snapshot once pages free up — long
+decodes can no longer starve admissions.
 
 The KV-cache memory accounting (``cache_bytes`` allocated,
 ``cache_bytes_split`` active vs allocated, ``cache_report`` mapped-page
@@ -97,6 +113,10 @@ class Request:
     done: bool = False
     error: Optional[str] = None         # set when the request is rejected
     swapped: bool = False               # preempted; state in the swap area
+    t_submit: Optional[float] = None    # wall time run() first saw it
+    t_first: Optional[float] = None     # first-token wall time (TTFT base)
+    tok_t: List[float] = dataclasses.field(
+        default_factory=list)           # host-sync arrival time per token
     _hit: Optional[object] = dataclasses.field(
         default=None, repr=False)       # PrefixHit from the last plan
 
@@ -129,6 +149,24 @@ def cache_bytes_split(caches, active_slots: int, batch: int
     return active, allocated
 
 
+def splice_rows(caches, fresh, dst: Sequence[int],
+                src: Optional[Sequence[int]] = None):
+    """Copy slot rows ``src`` (default: ``dst``) of every slot-batched leaf
+    in ``fresh`` onto rows ``dst`` of ``caches``. Cache leaves are layer-
+    stacked ``[L, B, ...]``; leaves without a slot axis pass through. Used
+    by the per-request prefill fallback to install a freshly prefilled
+    single-row cache into its live slot."""
+    di = jnp.asarray(list(dst))
+    si = di if src is None else jnp.asarray(list(src))
+
+    def splice(big, small):
+        if big.ndim < 2:
+            return big
+        return big.at[:, di].set(small[:, si].astype(big.dtype))
+
+    return jax.tree_util.tree_map(splice, caches, fresh)
+
+
 class DecodeEngine:
     """Continuous-batching engine: one model, ``batch`` slots, shared cache,
     K-token jitted decode bursts with per-request sampling."""
@@ -136,10 +174,20 @@ class DecodeEngine:
     def __init__(self, params, cfg: ModelConfig, *, batch: int,
                  max_len: int, dtype=jnp.float32, eos: Optional[int] = None,
                  backend: Optional[str] = None, prefill_bucket: int = 16,
-                 burst: int = 8, page_size: int = 0,
+                 burst: int = 8, chunk_tokens: int = 0,
+                 round_budget: int = 0, page_size: int = 0,
                  pool_pages: int = 0, cache_dtype: str = "fp32",
                  prefix_cache: bool = False, preemption: bool = False):
-        """``page_size > 0`` switches the latent decode caches to the paged
+        """``chunk_tokens`` caps the prompt tokens one slot prefills per
+        round (0 = the whole remaining prompt in one chunk); it is rounded
+        up to a multiple of MTLA's temporal stride so chunk boundaries
+        stay on the chunk grid. ``round_budget`` bounds each round's total
+        token spend across the decode burst and all prefill chunks (0 =
+        unbounded; see Scheduler.plan_round for the split policy).
+        Chunking changes scheduling only — emitted tokens are identical to
+        an unchunked engine.
+
+        ``page_size > 0`` switches the latent decode caches to the paged
         block-pool layout (serving/cache.py): pages of ``page_size``
         compressed positions from a shared pool of ``pool_pages`` physical
         pages (0 = dense-equivalent sizing), stored as ``cache_dtype``
@@ -160,6 +208,10 @@ class DecodeEngine:
         self.burst = max(int(burst), 1)
         self.scheduler = Scheduler(batch, max_len)
         a = cfg.attn
+        self._stride = a.s if a.kind == "mtla" else 1
+        self.chunk_tokens = (-(-int(chunk_tokens) // self._stride)
+                             * self._stride if chunk_tokens > 0 else 0)
+        self.round_budget = max(int(round_budget), 0)
         ring = (a.kind in ("mha", "mqa", "gqa") and a.sliding_window
                 and a.sliding_window < max_len)
         self._batched_prefill = (cfg.family in ("dense", "moe")
@@ -194,13 +246,19 @@ class DecodeEngine:
                                       src_len=max(cfg.frontend_len, 4),
                                       paged=self.cache_spec)
         self.state = self._init_state()
-        self._prefill = jax.jit(
-            lambda p, b, c: api.prefill(p, cfg, b, c, dtype=dtype))
+
+        def _prefill_fn(p, b, c):
+            self.prefill_traces += 1    # trace-time side effect: counts
+            # compilations (one per chunk-width bucket), not executions
+            return api.prefill(p, cfg, b, c, dtype=dtype)
+
+        self._prefill = jax.jit(_prefill_fn)
         self._sample = jax.jit(sampling.sample)
         self._burst = jax.jit(self._make_burst())
         self._finished: List[Request] = []
         self.failed: List[Request] = []
         self.burst_traces = 0           # burst graph traces (compilations)
+        self.prefill_traces = 0         # prefill graph traces (per bucket)
         self._reset_counters()
 
     def _reset_counters(self):
@@ -247,6 +305,8 @@ class DecodeEngine:
         return {
             "tok": jnp.zeros((B,), jnp.int32),       # feedback token
             "done": jnp.ones((B,), bool),            # empty slots are done
+            "prefilling": jnp.zeros((B,), bool),     # mid-chunked-prefill
+            #   (done stays True too: the burst never decodes these rows)
             "produced": jnp.zeros((B,), jnp.int32),  # tokens emitted so far
             "length": jnp.zeros((B,), jnp.int32),    # prompt + emitted
             "max_new": jnp.zeros((B,), jnp.int32),
@@ -309,26 +369,29 @@ class DecodeEngine:
 
     # --- admission ---------------------------------------------------------
     def add_request(self, req: Request) -> bool:
-        """Admit one request; returns False if it was rejected (oversized),
-        deferred (page back-pressure), or no slot is free. Rejected
-        requests carry ``req.error``."""
-        plan = self.scheduler.plan([req], self.pool, self.prefix)
-        self._apply_plan(plan)
+        """Admit one request and drive its chunked prefill to completion;
+        returns False if it was rejected (oversized), deferred (page
+        back-pressure), or no slot is free. Rejected requests carry
+        ``req.error``."""
+        plan = self._admit([req])
+        while self.scheduler.any_prefilling():
+            self._prefill_round()
         return bool(plan.assignments)
 
     def add_requests(self, reqs: Sequence[Request]) -> List[Request]:
-        """One admission round over ``reqs`` (in arrival order): oversized
-        prompts are marked failed and skipped, the rest fill free slots —
-        gated on page availability in paged mode, where a request whose
-        (prefix-discounted) reservation does not fit is *deferred* (stays
-        queued, later fitting entries may skip past it) instead of
-        rejected — and share a single jitted right-padded prefill call on
-        the batched path. Returns the requests taken off the queue
+        """One admission round over ``reqs`` (in arrival order) followed by
+        the admitted prompts' chunked prefill, driven to completion with
+        no decode interleaving (``run`` is the step loop that interleaves).
+        Oversized prompts are marked failed and skipped; in paged mode a
+        request whose (prefix-discounted) reservation does not fit is
+        *deferred* (stays queued, later fitting entries may skip past it)
+        instead of rejected. Returns the requests taken off the queue
         (admitted + rejected); completions at admission time (max_new
         reached, EOS on the first token) land in the finished queue
         immediately."""
-        plan = self.scheduler.plan(reqs, self.pool, self.prefix)
-        self._apply_plan(plan)
+        plan = self._admit(reqs)
+        while self.scheduler.any_prefilling():
+            self._prefill_round()
         return plan.taken()
 
     @staticmethod
@@ -336,7 +399,17 @@ class DecodeEngine:
         hit = req._hit
         return hit.tokens if hit is not None else 0
 
-    def _apply_plan(self, plan):
+    def _admit(self, reqs: Sequence[Request]):
+        """One admission round: reject/defer per the scheduler plan, commit
+        assignments, reserve pages and map prefix-hit pages (shared pages
+        first so COW forks can never evict a page this round relies on),
+        swap preempted requests back in, and move fresh slots into the
+        PREFILLING phase with their chunk cursor past any cached prefix.
+        Prompt pages are NOT mapped here — they map chunk-by-chunk as the
+        cursor advances (the reservation made here keeps those top-ups
+        infallible). Per-request fallback families (no batched prefill)
+        still prefill whole prompts inline. Returns the AdmissionPlan."""
+        plan = self.scheduler.plan(reqs, self.pool, self.prefix)
         for req in plan.rejected:
             # scheduler.plan set req.error (oversized prompt / over-pool)
             req.done = True
@@ -345,7 +418,7 @@ class DecodeEngine:
         if plan.deferred:
             self.deferrals += 1
         if not plan.assignments:
-            return
+            return plan
         self.scheduler.commit(plan)
         fresh = [(s, r) for s, r in plan.assignments if not r.swapped]
         resumed = [(s, r) for s, r in plan.assignments if r.swapped]
@@ -367,8 +440,8 @@ class DecodeEngine:
                         self.pool.pin(hit.cow_page)
                 else:
                     self.pool.reserve(slot, need)
-            # pass 2: COW boundary-page forks + prompt-page mapping (these
-            # allocations may trigger LRU eviction of idle tree pages)
+            # pass 2: COW boundary-page forks (these allocations may
+            # trigger LRU eviction of idle tree pages)
             for slot, req in fresh:
                 hit = req._hit
                 if hit is not None and hit.cow_page is not None:
@@ -376,118 +449,126 @@ class DecodeEngine:
                     self.caches = cache_mod.copy_pages(
                         self.caches, [hit.cow_page], [fork])
                     self.pool.unpin(hit.cow_page)
-                # prefill writes compressed positions < prompt length
-                self.pool.ensure_mapped(slot, len(req.prompt))
             for slot, req in resumed:
                 self._swap_in(slot, req)
-        t0 = time.perf_counter()
         if fresh:
             if self._batched_prefill:
-                logits = self._prefill_batched(fresh)
+                self._admit_rows(fresh)
+                cursors = []
+                for slot, req in fresh:
+                    cached = self._cached_len(req)
+                    self.scheduler.begin_prefill(slot, cached)
+                    self.prefill_tokens_skipped += cached
+                    cursors.append((slot, cached))
+                # each slot's device feed position is stale from its
+                # previous occupant until the first chunk rewrites it, and
+                # a budget-deferred slot can sit through a decode burst
+                # before that chunk — whose dummy pass over done rows
+                # writes through the live page table at pos. Point pos at
+                # the chunk cursor: the first chunk rewrites that chunk
+                # slot, so the dummy write can never land in the newly
+                # mapped shared prefix pages (or any other live state)
+                self.caches = cache_mod.set_slots_pos(
+                    self.caches, [s for s, _ in cursors],
+                    [c for _, c in cursors])
             else:
+                # whole-prompt per-request fallback (recurrent state /
+                # frontend / ring caches cannot resume at a chunk offset)
+                t0 = time.perf_counter()
                 rows = np.zeros((self.batch, self.cfg.vocab_size),
                                 np.float32)
                 for slot, req in fresh:
                     rows[slot] = self._prefill_one(req)
-                logits = jnp.asarray(rows)
-            self._admit_rows(fresh)
-            if self.prefix is not None:
-                # publish the prompts' finalized full pages immediately so
-                # concurrent requests admitted in later rounds share them
-                # while these slots are still decoding
-                for slot, req in fresh:
-                    self.prefix.publish(slot, req.prompt)
-            self._first_tokens(fresh, logits)
-            self.prefill_tokens += sum(
-                len(r.prompt) - self._cached_len(r) for _, r in fresh)
-            self.prefill_tokens_skipped += sum(
-                self._cached_len(r) for _, r in fresh)
-        self.prefill_time_s += time.perf_counter() - t0
+                    self.prefill_tokens += len(req.prompt)
+                self._admit_rows(fresh)
+                self._first_tokens(fresh, jnp.asarray(rows))
+                self.prefill_time_s += time.perf_counter() - t0
         self.peak_active = max(self.peak_active,
                                len(self.scheduler.occupied()))
         for _, req in plan.assignments:
             req._hit = None         # hits are valid for one round only
+        return plan
 
-    def _prefill_batched(self, assignments) -> jnp.ndarray:
-        """Single right-padded jitted prefill for the admitted slots.
+    # --- chunked prefill ----------------------------------------------------
+    def _prefill_round(self) -> bool:
+        """One prefill-only round: execute every PREFILLING slot's next
+        chunk. Drives add_request/add_requests to completion, where no
+        decode burst runs between rounds — so the token budget (which
+        would reserve tokens for that burst) does not apply; ``run``'s
+        step loop calls plan_round with the budget itself. Returns True
+        if any chunk ran."""
+        chunks, _ = self.scheduler.plan_round(
+            chunk_tokens=self.chunk_tokens, round_budget=0,
+            burst=self.burst, stride=self._stride)
+        if chunks:
+            self._prefill_chunks(chunks)
+        return bool(chunks)
 
-        Dense caches: prefill runs on a fresh allocation and the admitted
-        rows are spliced into the live cache. Paged caches: prefill writes
-        straight into the live pool — the page table it sees is masked down
-        to the admitted slots, so the dummy rows (live neighbours mid-
-        decode, or empty slots) scatter through the unmapped sentinel and
-        drop; no transient dense allocation ever exists. With a prefix
-        cache, rounds containing a hit run the continuation graph: each
-        row prefills only its uncached suffix at its absolute stride-
-        aligned offset, reading the shared prefix pages through the same
-        (masked) table it writes its own pages through. Returns logits
-        [B, V]."""
-        slots = [s for s, _ in assignments]
-        cached = {s: self._cached_len(r) for s, r in assignments}
-        use_offsets = self.prefix is not None and any(cached.values())
-        lmax = max(len(r.prompt) - cached[s] for s, r in assignments)
-        bucket = self.prefill_bucket
-        lpad = min(-(-lmax // bucket) * bucket, self.max_len)
-        # full-width [batch, lpad] graph: shape varies only with the length
-        # bucket, so the prefill compiles once per bucket. Rows not being
-        # admitted run a dummy length-1 prompt and are never spliced.
-        toks = np.zeros((self.batch, lpad), np.int32)
-        lengths = np.ones((self.batch,), np.int32)
-        offsets = np.zeros((self.batch,), np.int32)
-        for slot, req in assignments:
-            suffix = np.asarray(req.prompt)[cached[slot]:]
-            toks[slot, :len(suffix)] = suffix
-            lengths[slot] = len(suffix)
-            offsets[slot] = cached[slot]
+    def _prefill_chunks(self, chunks):
+        """Execute one round's prompt chunks — ``(slot, req, start, n)``
+        windows from Scheduler.plan_round — in a single jitted
+        continuation-prefill call on the live batch cache.
+
+        Every row runs the offsets graph at its absolute start position
+        (first chunks at offset 0, prefix-cache hits starting past the
+        cached prefix, later chunks at their cursor); the ``active`` mask
+        keeps decoding neighbours' rows and positions untouched, so no
+        transient cache allocation and no masked page table are needed.
+        Chunk widths are bucketed to ``prefill_bucket`` multiples — the
+        graph compiles once per bucket and is reused across rounds. Pages
+        back the chunk's compressed positions just before the call
+        (mapped chunk-by-chunk inside the admission-time reservation).
+        Slots whose cursor reaches the prompt end sample their first token
+        from this call's logits and flip to DECODING; with a prefix cache,
+        completed full pages publish as the cursor passes them, so
+        concurrent admissions share a long prompt mid-prefill."""
+        t0 = time.perf_counter()
+        B = self.batch
+        lmax = max(n for *_, n in chunks)
+        lpad = min(-(-lmax // self.prefill_bucket) * self.prefill_bucket,
+                   self.max_len)
+        toks = np.zeros((B, lpad), np.int32)
+        lengths = np.ones((B,), np.int32)
+        offsets = np.zeros((B,), np.int32)
+        active = np.zeros((B,), bool)
+        for slot, req, start, n in chunks:
+            toks[slot, :n] = np.asarray(req.prompt)[start:start + n]
+            lengths[slot] = n
+            offsets[slot] = start
+            active[slot] = True
         if self.pool is not None:
-            # live rows keep their true feed position: the prefill rewrites
-            # cache["pos"] from `lengths` for every row, and a mid-decode
-            # slot's device pos lags its host length by one (the latest
-            # sampled token is only written at its next decode step)
-            admitted = set(slots)
-            for slot, req in self.scheduler.occupied():
-                if slot not in admitted:
-                    lengths[slot] = len(req.prompt) + len(req.out) - 1
-            masked = cache_mod.masked_page_table(self.pool.table, slots,
-                                                 self.pool.sentinel)
-            caches = cache_mod.set_page_table(self.caches, masked)
-            batch = {"tokens": jnp.asarray(toks),
-                     "lengths": jnp.asarray(lengths)}
-            if use_offsets:
-                # hit rounds route through the continuation graph (cold
-                # rows ride along at offset 0); hit-free rounds keep the
-                # fresh-prefill graph, which stays bitwise identical to a
-                # prefix-cache-disabled engine
-                batch["offsets"] = jnp.asarray(offsets)
-            logits, caches = self._prefill(self.params, batch, caches)
-            self.caches = cache_mod.set_page_table(caches, self.pool.table)
-            self.pool.dirty = False
-            self.prefill_calls += 1
-            return logits
-        fresh = api.init_caches(self.cfg, self.batch, self.max_len,
-                                dtype=self.dtype,
-                                src_len=max(self.cfg.frontend_len, 4))
-        logits, fresh = self._prefill(
+            for slot, req, start, n in chunks:
+                self.pool.ensure_mapped(slot, start + n)
+            if self.pool.dirty:
+                self.caches = cache_mod.set_page_table(self.caches,
+                                                       self.pool.table)
+                self.pool.dirty = False
+        logits, self.caches = self._prefill(
             self.params,
-            {"tokens": jnp.asarray(toks), "lengths": jnp.asarray(lengths)},
-            fresh)
+            {"tokens": jnp.asarray(toks), "lengths": jnp.asarray(lengths),
+             "offsets": jnp.asarray(offsets),
+             "active": jnp.asarray(active)},
+            self.caches)
         self.prefill_calls += 1
-        # splice the freshly prefilled rows into the live cache at `slots`
-        # (all cache leaves are layer-stacked: [L, B, ...])
-        idx = jnp.asarray(slots)
-
-        def splice(big, small):
-            if big.ndim < 2:
-                return big
-            return big.at[:, idx].set(small[:, idx].astype(big.dtype))
-
-        self.caches = jax.tree_util.tree_map(splice, self.caches, fresh)
-        return logits
+        self.prefill_tokens += sum(n for *_, n in chunks)
+        finished = []
+        for slot, req, start, n in chunks:
+            self.scheduler.advance_prefill(slot, n)
+            if self.prefix is not None:
+                self.prefix.publish(slot,
+                                    np.asarray(req.prompt)[:start + n])
+            if start + n == len(req.prompt):
+                self.scheduler.finish_prefill(slot)
+                finished.append((slot, req))
+        if finished:
+            self._first_tokens(finished, logits)
+        self.prefill_time_s += time.perf_counter() - t0
 
     def _prefill_one(self, req: Request) -> np.ndarray:
-        """Fallback single-sequence prefill into one slot of the shared
-        cache (families whose state cannot be right-padded: recurrent ssm /
-        hybrid, frontend prefixes, ring caches). Returns logits [V]."""
+        """Fallback single-sequence whole-prompt prefill into one slot of
+        the shared cache (families whose state cannot resume at a chunk
+        offset: recurrent ssm / hybrid, frontend prefixes, ring caches,
+        encdec). Returns logits [V]."""
         cfg = self.cfg
         slot = next(i for i, s in enumerate(self.scheduler.slots)
                     if s is req)
@@ -497,24 +578,18 @@ class DecodeEngine:
         logits, single = api.prefill(self.params, cfg, batch, single,
                                      dtype=self.dtype)
         self.prefill_calls += 1
-
-        def splice(big, small):
-            if big.ndim < 2:
-                return big
-            return big.at[:, slot:slot + 1].set(small.astype(big.dtype))
-
-        self.caches = jax.tree_util.tree_map(splice, self.caches, single)
+        self.caches = splice_rows(self.caches, single, [slot], src=[0])
         return np.asarray(logits[0], np.float32)
 
     @staticmethod
     def _slot_row(st, slot: int, req: Request):
-        """Per-slot lifecycle + sampling fields a fresh admission and a
-        swap-in resume must agree on — one writer, so the bitwise-resume
+        """Per-slot sampling + lifecycle-limit fields a fresh admission and
+        a swap-in resume must agree on — one writer, so the bitwise-resume
         guarantee cannot drift when SlotState grows a field. The caller
-        sets the progress fields (tok/rng/produced/length): seeded fresh at
-        admission, restored from the snapshot at resume."""
+        sets the progress/phase fields (tok/rng/produced/length and
+        done/prefilling): seeded fresh at admission, restored from the
+        snapshot at resume."""
         sp = req.sampling
-        st["done"][slot] = False
         st["max_new"][slot] = req.max_new
         st["temp"][slot] = max(sp.temperature, 0.0)
         st["top_k"][slot] = sp.top_k
@@ -523,10 +598,15 @@ class DecodeEngine:
 
     def _admit_rows(self, assignments):
         """Write the admitted requests' lifecycle + sampling rows into the
-        device SlotState (per-slot PRNG keys seeded fresh from req.seed)."""
+        device SlotState (per-slot PRNG keys seeded fresh from req.seed).
+        Rows enter PREFILLING: ``done`` stays True — the burst loop never
+        decodes them — until the final chunk's first token flips the phase
+        (``_first_tokens``; fallback families reach it immediately)."""
         st = {k: np.array(v) for k, v in self.state.items()}
         for slot, req in assignments:
             self._slot_row(st, slot, req)
+            st["done"][slot] = True
+            st["prefilling"][slot] = True
             st["produced"][slot] = 0
             st["length"][slot] = len(req.prompt)
             seed = req.rid if req.seed is None else req.seed
@@ -534,19 +614,26 @@ class DecodeEngine:
         self.state = {k: jnp.asarray(v) for k, v in st.items()}
 
     def _first_tokens(self, assignments, logits):
-        """Sample each admitted slot's first token from its prefill logits
-        (same per-slot sampler as the burst loop) and fold completions —
-        max_new=1, EOS, cache already full — back into the scheduler."""
+        """Sample each finished-prefill slot's first token from its final
+        chunk's logits (same per-slot sampler as the burst loop), flip the
+        slot PREFILLING -> DECODING, and fold completions — max_new=1,
+        EOS, cache already full — back into the scheduler."""
         tok, rng = self._sample(self.state["rng"], logits,
                                 self.state["temp"], self.state["top_k"],
                                 self.state["top_p"], self.state["greedy"])
         tok, rng = np.asarray(tok), np.asarray(rng)
+        now = time.perf_counter()
         st = {k: np.array(v) for k, v in self.state.items()}
         for slot, req in assignments:
             t = int(tok[slot])
             req.out.append(t)
+            if req.t_first is None:
+                req.t_first = now
+            req.tok_t.append(now)
             st["tok"][slot] = t
-            st["rng"][slot] = rng[slot]     # only admitted rows advance
+            st["rng"][slot] = rng[slot]     # only finishing rows advance
+            st["done"][slot] = False
+            st["prefilling"][slot] = False
             st["produced"][slot] = 1
             st["length"][slot] += 1
             if bool(done_after_emit(t, 1, st["length"][slot], req.max_new,
@@ -576,13 +663,15 @@ class DecodeEngine:
 
     # --- preemption ---------------------------------------------------------
     def preempt(self, slot: int) -> Request:
-        """Evict a resident slot mid-decode: snapshot its mapped pages
-        (shared + private, so the snapshot stays valid even if the tree
-        evicts the shared originals before resume) and its SlotState row
-        into the pool's host-side swap area, release the slot, and return
-        the request for re-queueing. ``_swap_in`` restores the snapshot
-        verbatim into fresh pages, so preempt -> resume is token-for-token
-        identical to an uninterrupted decode."""
+        """Evict a resident slot mid-decode or mid-prefill: snapshot its
+        mapped pages (shared + private, so the snapshot stays valid even
+        if the tree evicts the shared originals before resume), its
+        SlotState row, and its prefill phase/cursor into the pool's
+        host-side swap area, release the slot, and return the request for
+        re-queueing. ``_swap_in`` restores the snapshot verbatim into
+        fresh pages, so preempt -> resume is token-for-token identical to
+        an uninterrupted run — a PREFILLING victim resumes its chunk
+        cursor without re-prefilling the chunks already written."""
         req = self.scheduler.slots[slot]
         assert req is not None and self.pool is not None
         st = {k: np.asarray(v) for k, v in self.state.items()}
@@ -594,6 +683,11 @@ class DecodeEngine:
             "rng": np.array(st["rng"][slot]),
             "produced": int(st["produced"][slot]),
             "length": int(st["length"][slot]),
+            # the device row is the snapshot's source of truth for the
+            # phase (mirrored from the scheduler at every transition);
+            # the cursor lives host-side only
+            "prefilling": bool(st["prefilling"][slot]),
+            "cursor": self.scheduler.cursor[slot],
         })
         req.swapped = True
         done = np.array(st["done"])
@@ -609,8 +703,10 @@ class DecodeEngine:
         pages for the snapshot (the reservation made at re-admission covers
         them), scatter the page contents back — int8 scale rows travel
         with their pages — and rebuild the slot's device lifecycle row.
-        No prefill and no first-token sampling: the pending feedback token
-        and the PRNG key resume exactly where the burst loop left them."""
+        A mid-decode victim resumes its pending feedback token and PRNG
+        key exactly where the burst loop left them (no prefill, no
+        first-token sampling); a mid-prefill victim re-enters PREFILLING
+        at its saved chunk cursor and streams the rest of its prompt."""
         entry = self.pool.swap_take(req.rid)
         self.pool.ensure_mapped(
             slot, entry["npages"] * self.pool.spec.tokens_per_page(
@@ -618,15 +714,20 @@ class DecodeEngine:
         assert len(self.pool.mapped[slot]) == entry["npages"]
         self.caches = cache_mod.scatter_pages(
             self.caches, self.pool.mapped[slot], entry["data"])
-        self.caches = cache_mod.set_slot_pos(self.caches, slot,
-                                             entry["length"] - 1)
+        prefilling = entry["prefilling"]
+        pos = entry["cursor"] if prefilling else entry["length"] - 1
+        self.caches = cache_mod.set_slot_pos(self.caches, slot, pos)
         st = {k: np.array(v) for k, v in self.state.items()}
         self._slot_row(st, slot, req)
         st["tok"][slot] = entry["tok"]
         st["rng"][slot] = entry["rng"]
+        st["done"][slot] = prefilling
+        st["prefilling"][slot] = prefilling
         st["produced"][slot] = entry["produced"]
         st["length"][slot] = entry["length"]
         self.state = {k: jnp.asarray(v) for k, v in st.items()}
+        if prefilling:
+            self.scheduler.begin_prefill(slot, entry["cursor"])
         req.swapped = False
         self.resumes += 1
 
@@ -648,12 +749,15 @@ class DecodeEngine:
         return self.preempt(victim)
 
     def _sync_pages(self, quota: int):
-        """Pre-burst page top-up: back every active slot's writes for the
+        """Pre-burst page top-up: back every DECODING slot's writes for the
         coming burst (positions < length + quota - 1 on device, where the
         host length leads the device feed position by one pending token)
         with physical pages, then push the page table once if anything
-        changed (mappings grown or retired slots cleared)."""
-        for slot, req in self.scheduler.occupied():
+        changed (mappings grown or retired slots cleared). PREFILLING
+        slots map their pages chunk-by-chunk instead — the burst's dummy
+        pass over them writes only into already-covered or soon-rewritten
+        chunk slots."""
+        for slot, req in self.scheduler.decoding():
             self.pool.ensure_mapped(
                 slot, len(req.prompt) + len(req.out) + quota - 1)
         if self.pool.dirty:
@@ -700,12 +804,15 @@ class DecodeEngine:
                 "pages_total": pool.total_pages}
 
     # --- decode burst orchestration ----------------------------------------
-    def _burst_step(self) -> List[Request]:
+    def _burst_step(self, quota: Optional[int] = None) -> List[Request]:
         """One jitted decode burst (<= ``burst`` tokens per slot) + one host
-        sync to harvest emitted tokens. Returns requests that finished."""
-        if not self.scheduler.any_active():
+        sync to harvest emitted tokens. ``quota`` is the loop bound from
+        this round's budget split (None = the scheduler's full quota).
+        Returns requests that finished."""
+        if not self.scheduler.decoding():
             return []
-        quota = self.scheduler.burst_quota(self.burst)
+        if quota is None:
+            quota = self.scheduler.burst_quota(self.burst)
         if self.pool is not None:
             self._sync_pages(quota)
         t0 = time.perf_counter()
@@ -715,14 +822,16 @@ class DecodeEngine:
         # the single host sync of the burst:
         out_tok, out_val = np.asarray(out_tok), np.asarray(out_val)
         done = np.asarray(state["done"])
-        self.decode_time_s += time.perf_counter() - t0
+        now = time.perf_counter()
+        self.decode_time_s += now - t0
         self.state, self.caches = state, caches
         self.decode_calls += 1
         self.steps += int(k)
         finished = []
-        for slot, req in self.scheduler.occupied():
+        for slot, req in self.scheduler.decoding():
             new = out_tok[out_val[:, slot], slot]
             req.out.extend(int(t) for t in new)
+            req.tok_t.extend([now] * len(new))
             self.decoded_tokens += len(new)
             if done[slot]:
                 req.done = True
@@ -732,13 +841,21 @@ class DecodeEngine:
 
     def run(self, requests: List[Request], max_steps: int = 10_000
             ) -> Dict[int, List[int]]:
-        """Serve ``requests`` to completion with continuous batching; returns
-        {rid: tokens}. Rejected requests appear with their (empty) output
-        and ``req.error`` set — one oversized prompt never aborts the run.
-        With ``preemption=True``, a queue head that admission left starved
-        may evict a strictly-lower-priority resident slot to the swap
-        area; the victim re-queues just behind it and resumes bit-exact."""
+        """Serve ``requests`` to completion through the token-budget step
+        loop; returns {rid: tokens}. Each round admits what fits, runs one
+        chunked-prefill call over the PREFILLING slots' next chunks, and
+        runs one decode burst — so a long prompt streams in across rounds
+        while resident slots keep emitting. Rejected requests appear with
+        their (empty) output and ``req.error`` set — one oversized prompt
+        never aborts the run. With ``preemption=True``, a queue head that
+        admission left starved may evict a strictly-lower-priority
+        resident slot (mid-decode or mid-prefill) to the swap area; the
+        victim re-queues just behind it and resumes bit-exact."""
         pending = list(requests)
+        now = time.perf_counter()
+        for req in pending:
+            if req.t_submit is None:
+                req.t_submit = now      # re-queued victims keep the original
         done: Dict[int, List[int]] = {}
 
         def drain():
@@ -749,7 +866,8 @@ class DecodeEngine:
         while (pending or self.scheduler.any_active()) \
                 and self.steps < max_steps:
             if pending and self.scheduler.free_slots():
-                taken = self.add_requests(pending)
+                plan = self._admit(pending)
+                taken = plan.taken()
                 if taken:
                     tid = {id(r) for r in taken}
                     pending = [r for r in pending if id(r) not in tid]
@@ -759,7 +877,21 @@ class DecodeEngine:
                 if victim is not None:
                     pending.insert(1, victim)
                     continue        # retry admission before decoding on
-            for fin in self._burst_step():
+            # one round of the step loop: the budget split plans the
+            # chunk set and the burst bound together
+            had_decoding = bool(self.scheduler.decoding())
+            chunks, quota = self.scheduler.plan_round(
+                chunk_tokens=self.chunk_tokens,
+                round_budget=self.round_budget, burst=self.burst,
+                stride=self._stride)
+            if chunks:
+                self._prefill_chunks(chunks)
+                drain()
+            if not had_decoding:
+                # slots that just finished their final chunk decode at the
+                # full quota — there was no decode phase in this budget
+                quota = self.scheduler.burst_quota(self.burst)
+            for fin in self._burst_step(quota):
                 done[fin.rid] = fin.out
         drain()
         return done

@@ -1,14 +1,35 @@
-"""Scheduling policy for the decode engine: admission, slot assignment, and
-the burst-length quota — split from the device-resident burst loop
-(serving/engine.py) so policy can evolve without touching jitted code.
+"""Scheduling policy for the decode engine: admission, slot assignment,
+the per-round token budget, and the burst-length quota — split from the
+device-resident burst loop (serving/engine.py) so policy can evolve
+without touching jitted code.
 
-The scheduler owns the host-side request <-> slot mapping. The engine asks
-it to ``plan`` an admission round over the pending queue (in arrival order),
-``commit`` the resulting assignments after prefill succeeds, and ``release``
-slots whose requests finish. Oversized prompts (longer than the engine's
-``max_len``) are *rejected* in the plan — marked failed and skipped — rather
-than aborting the whole admission round, so one bad request can never block
-its neighbours.
+The scheduler owns the host-side request <-> slot mapping and each slot's
+**phase**: a freshly admitted slot is PREFILLING — its prompt streams into
+the cache in fixed-size, stride-aligned chunks across rounds
+(``begin_prefill`` / ``cursor``) — and becomes DECODING once the final
+chunk samples its first token (``finish_prefill``). The engine asks the
+scheduler to ``plan`` an admission round over the pending queue (in
+arrival order), ``commit`` the resulting assignments, ``plan_round`` each
+serving round's token budget split, and ``release`` slots whose requests
+finish. Oversized prompts (longer than the engine's ``max_len``) are
+*rejected* in the plan — marked failed and skipped — rather than aborting
+the whole admission round, so one bad request can never block its
+neighbours.
+
+``plan_round`` is the step-loop policy: every round spends a global token
+budget (``round_budget``, 0 = unbounded) across the resident decode burst
+and the PREFILLING slots' next chunks. Decode claims its tokens first —
+one per decoding slot per device step, so the burst quota shrinks to
+``budget // decoding_slots`` when the budget is tight (never below 1) —
+and the remainder funds prompt chunks in admission (FIFO) order, each
+capped at ``chunk_tokens`` and cut *down* to a multiple of the temporal
+stride ``s`` unless it finishes the prompt: a chunk boundary must land on
+a chunk-grid boundary or the hyper-network's partial-stride merge state
+at the tail could not be resumed by the next chunk. Two liveness
+guarantees keep the loop moving under any budget: the burst quota is at
+least 1, and the oldest PREFILLING slot always receives a chunk — so a
+tiny budget degrades to alternating single-chunk/single-step rounds
+instead of starving either phase.
 
 With a page ``pool``, admission reserves each request's worst-case page
 demand; a prefix cache (serving/prefix.py) *discounts* the reservation by
@@ -65,6 +86,10 @@ class Scheduler:
         self.slots: List[Optional[object]] = [None] * batch
         self.admit_seq = 0
         self._admitted_at = [0] * batch
+        # chunked-prefill phase: prefilling[i] marks a PREFILLING slot and
+        # cursor[i] the prompt tokens already written to its cache
+        self.prefilling = [False] * batch
+        self.cursor = [0] * batch
 
     # --- occupancy ---------------------------------------------------------
     def free_slots(self) -> List[int]:
@@ -73,13 +98,44 @@ class Scheduler:
     def occupied(self) -> List[Tuple[int, object]]:
         return [(i, s) for i, s in enumerate(self.slots) if s is not None]
 
+    def decoding(self) -> List[Tuple[int, object]]:
+        """Occupied slots past their prompt (first token sampled)."""
+        return [(i, s) for i, s in enumerate(self.slots)
+                if s is not None and not self.prefilling[i]]
+
+    def prefilling_slots(self) -> List[Tuple[int, object]]:
+        """PREFILLING slots in admission (FIFO) order — the chunk queue."""
+        return sorted(((i, s) for i, s in enumerate(self.slots)
+                       if s is not None and self.prefilling[i]),
+                      key=lambda sr: self._admitted_at[sr[0]])
+
     def any_active(self) -> bool:
         return any(s is not None for s in self.slots)
+
+    def any_prefilling(self) -> bool:
+        return any(self.prefilling[i] for i, s in enumerate(self.slots)
+                   if s is not None)
 
     def reset(self):
         self.slots = [None] * self.batch
         self.admit_seq = 0
         self._admitted_at = [0] * self.batch
+        self.prefilling = [False] * self.batch
+        self.cursor = [0] * self.batch
+
+    # --- prefill phase ------------------------------------------------------
+    def begin_prefill(self, slot: int, cursor: int = 0):
+        """Mark a committed slot PREFILLING with ``cursor`` prompt tokens
+        already cached (a prefix-cache hit or a mid-prefill swap-in resumes
+        past them)."""
+        self.prefilling[slot] = True
+        self.cursor[slot] = cursor
+
+    def advance_prefill(self, slot: int, tokens: int):
+        self.cursor[slot] += tokens
+
+    def finish_prefill(self, slot: int):
+        self.prefilling[slot] = False
 
     # --- admission ---------------------------------------------------------
     def plan(self, pending: Sequence, pool=None,
@@ -160,6 +216,8 @@ class Scheduler:
 
     def release(self, slot: int):
         req, self.slots[slot] = self.slots[slot], None
+        self.prefilling[slot] = False
+        self.cursor[slot] = 0
         return req
 
     # --- preemption policy -------------------------------------------------
@@ -178,15 +236,62 @@ class Scheduler:
 
     # --- burst policy ------------------------------------------------------
     def burst_quota(self, burst: int) -> int:
-        """Largest useful burst length right now: no resident request can
-        emit more than ``max_new - emitted`` further tokens, nor continue
-        past the cache capacity, so cap the device loop bound there. Returns
-        a value in [1, burst]; with an empty batch, 1 (the device loop's
-        all-done condition exits immediately anyway)."""
+        """Largest useful burst length right now: no resident DECODING
+        request can emit more than ``max_new - emitted`` further tokens,
+        nor continue past the cache capacity, so cap the device loop bound
+        there (PREFILLING slots have no feedback token yet and do not
+        count). Returns a value in [1, burst]; with no decoding slot, 1
+        (the device loop's all-done condition exits immediately anyway)."""
         need = 0
-        for _, req in self.occupied():
+        for _, req in self.decoding():
             seq_len = len(req.prompt) + len(req.out)
             remaining = min(req.max_new - len(req.out),
                             self.max_len + 1 - seq_len)
             need = max(need, remaining)
         return max(1, min(burst, need))
+
+    # --- the per-round token budget -----------------------------------------
+    def plan_round(self, *, chunk_tokens: int, round_budget: int,
+                   burst: int, stride: int = 1
+                   ) -> Tuple[List[Tuple[int, object, int, int]], int]:
+        """Split one round's token budget between the decode burst and the
+        PREFILLING slots' next prompt chunks.
+
+        Returns ``(chunks, quota)``: ``chunks`` is a list of
+        ``(slot, request, start, tokens)`` prompt windows — FIFO by
+        admission, each at the slot's cursor, at most ``chunk_tokens``
+        long (0 = the whole remaining prompt) and cut down to a multiple
+        of ``stride`` unless it reaches the prompt end, so every chunk
+        boundary lands on the temporal chunk grid and the MTLA partial-
+        stride merge at the tail stays resumable. ``quota`` is the decode
+        burst bound. With ``round_budget > 0``, decode claims one token
+        per decoding slot per step first (quota shrinks to fit, never
+        below 1) and chunks spend the remainder — the budget bounds every
+        chunk, including an uncapped (chunk_tokens=0) head's — but the
+        oldest PREFILLING slot always advances at least one stride per
+        round, so neither phase can starve the other."""
+        decoding = self.decoding()
+        quota = self.burst_quota(burst)
+        budget = float("inf") if round_budget <= 0 else float(round_budget)
+        if decoding and budget < len(decoding) * quota:
+            quota = max(1, int(budget) // len(decoding))
+        if decoding:
+            budget -= len(decoding) * quota
+        chunks: List[Tuple[int, object, int, int]] = []
+        for slot, req in self.prefilling_slots():
+            start = self.cursor[slot]
+            remaining = len(req.prompt) - start
+            cap = min(chunk_tokens, remaining) if chunk_tokens > 0 \
+                else remaining
+            take = int(min(cap, max(budget, 0)))
+            if take < remaining:
+                take = take // stride * stride
+            if take <= 0:
+                if chunks:
+                    continue        # out of budget: wait for a later round
+                # the FIFO head's soft floor: one stride of guaranteed
+                # progress per round, however small the budget
+                take = min(stride, remaining)
+            budget -= take
+            chunks.append((slot, req, start, take))
+        return chunks, quota

@@ -1,8 +1,9 @@
 """Backend dispatch parity: the fused Pallas kernels (interpret=True on
 CPU — the exact kernel bodies run) must match the pure-jnp reference path
-through the full model serving stack, and the DecodeEngine's right-padded
-batched prefill must be equivalent to sequential per-request prefill while
-issuing exactly one jitted prefill call per admitted batch."""
+through the full model serving stack, and the DecodeEngine's batched
+chunked-continuation prefill must be equivalent to sequential per-request
+prefill while issuing exactly one jitted prefill call per admitted
+batch (chunk_tokens=0: each prompt is one whole chunk)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -89,8 +90,9 @@ def _run_requests(eng, prompts, max_new=5):
 
 
 def test_engine_batched_prefill_equals_sequential():
-    """One right-padded jitted prefill call for a batch of admitted requests
-    reproduces the sequential per-request prefill exactly."""
+    """One jitted continuation-prefill call for a batch of admitted
+    requests (each prompt a whole chunk at offset 0) reproduces the
+    sequential per-request prefill exactly."""
     cfg = mtla_model("ref")
     params = api.init_model(jax.random.PRNGKey(4), cfg)
     rng = np.random.default_rng(5)

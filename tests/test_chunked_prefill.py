@@ -1,0 +1,421 @@
+"""Unified token-budget step loop: chunked prefill interleaved with decode
+bursts (serving/engine.py + serving/scheduler.py::plan_round).
+
+Pins the refactor's contract:
+
+* chunking changes scheduling, never values — a chunked engine's emitted
+  tokens are identical to the unchunked engine's on mtla/mla/mha across
+  ref and pallas backends, on dense and paged caches, under a prefix
+  cache, and under a round budget;
+* a long prompt streams in across rounds while resident slots keep
+  decoding (a short neighbour finishes before the long prompt's first
+  token) — the TTFT head-of-line-blocking fix;
+* compile-count guard: mixed chunk+decode rounds reuse one prefill trace
+  per bucketed chunk width and one burst trace — no per-round retrace;
+* chunk boundaries are stride-aligned (chunk_tokens rounds up to a
+  multiple of s) so the MTLA partial-stride merge at each chunk tail
+  stays exact;
+* preempting a mid-prefill slot snapshots its chunk cursor + written
+  pages and resumes token-for-token identically;
+* Scheduler.plan_round budget arithmetic: decode claims its tokens
+  first, chunks spend the remainder, and both phases keep minimum
+  progress under any budget.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.types import AttentionConfig, ModelConfig
+from repro.models import api
+from repro.serving.engine import DecodeEngine, Request
+from repro.serving.scheduler import Scheduler
+
+
+def model(kind, backend="ref", s=2):
+    latent = kind in ("mla", "mtla")
+    return ModelConfig(
+        name="chunked", family="dense", num_layers=2, d_model=64, d_ff=128,
+        vocab_size=97, backend=backend,
+        attn=AttentionConfig(kind=kind, num_heads=4, num_kv_heads=4,
+                             head_dim=16,
+                             kv_lora_rank=32 if latent else 0,
+                             rope_head_dim=8 if latent else 0,
+                             hyper_dim=8, s=s, q_chunk=0))
+
+
+def mixed_requests(seed=1, long_len=40, max_new=None):
+    """Short prompts around one long prompt — the HOL workload."""
+    rng = np.random.default_rng(seed)
+    lens = (5, long_len, 7, 4, 9)
+    return [Request(rid=i,
+                    prompt=rng.integers(0, 97, size=(lens[i],)
+                                        ).astype(np.int32),
+                    max_new=max_new or (4 + i % 5))
+            for i in range(len(lens))]
+
+
+# ---------------------------------------------------------------------------
+# token identity: chunking never changes values
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind,backend", [
+    ("mtla", "ref"), ("mtla", "pallas"), ("mla", "ref"), ("mla", "pallas"),
+    ("mha", "ref")])
+def test_chunked_matches_unchunked(kind, backend):
+    """Chunked == unchunked token streams on dense caches while the chunked
+    engine actually splits prompts (more prefill calls), across attention
+    kinds and backends."""
+    cfg = model(kind, backend)
+    params = api.init_model(jax.random.PRNGKey(0), cfg)
+    base = DecodeEngine(params, cfg, batch=2, max_len=64, dtype=jnp.float32,
+                        burst=4)
+    want = base.run(mixed_requests())
+    eng = DecodeEngine(params, cfg, batch=2, max_len=64, dtype=jnp.float32,
+                       burst=4, chunk_tokens=8, prefill_bucket=8)
+    got = eng.run(mixed_requests())
+    assert got == want
+    assert eng.prefill_calls > base.prefill_calls      # the 40-tok prompt
+    #                                                    really was split
+    assert eng.prefill_tokens == base.prefill_tokens
+
+
+@pytest.mark.parametrize("kind", ["mtla", "mla"])
+def test_chunked_matches_unchunked_paged(kind):
+    """Chunked == unchunked on the paged pool, and pages drain at the end
+    exactly as in the unchunked engine."""
+    cfg = model(kind)
+    params = api.init_model(jax.random.PRNGKey(1), cfg)
+    base = DecodeEngine(params, cfg, batch=2, max_len=64, dtype=jnp.float32,
+                        burst=4, page_size=4)
+    want = base.run(mixed_requests(seed=2))
+    eng = DecodeEngine(params, cfg, batch=2, max_len=64, dtype=jnp.float32,
+                       burst=4, page_size=4, chunk_tokens=8,
+                       prefill_bucket=8)
+    got = eng.run(mixed_requests(seed=2))
+    assert got == want
+    assert eng.pool.used_pages == 0
+
+
+def test_chunked_identity_under_prefix_cache():
+    """A prefix-cache hit is just a later chunk cursor: chunked + prefix ==
+    unchunked + prefix token-for-token, with identical hit accounting."""
+    cfg = model("mtla")
+    params = api.init_model(jax.random.PRNGKey(2), cfg)
+    rng0 = np.random.default_rng(3)
+    pre = rng0.integers(0, 97, size=(16,)).astype(np.int32)
+
+    def mk():
+        rng = np.random.default_rng(4)
+        return [Request(rid=i, prompt=np.concatenate(
+                    [pre, rng.integers(0, 97, size=(5 + i,)
+                                       ).astype(np.int32)]),
+                        max_new=5)
+                for i in range(6)]
+
+    base = DecodeEngine(params, cfg, batch=2, max_len=64, dtype=jnp.float32,
+                        burst=4, page_size=4, prefix_cache=True)
+    want = base.run(mk())
+    eng = DecodeEngine(params, cfg, batch=2, max_len=64, dtype=jnp.float32,
+                       burst=4, page_size=4, prefix_cache=True,
+                       chunk_tokens=8, prefill_bucket=8)
+    got = eng.run(mk())
+    assert got == want
+    assert eng.prefix.hits == base.prefix.hits
+    assert eng.prefill_tokens_skipped == base.prefill_tokens_skipped
+
+
+def test_round_budget_identity_and_interleaving():
+    """Under a tight round budget the step loop interleaves: the short
+    neighbour finishes its whole stream before the long prompt produces
+    its first token, and the emitted tokens still match the unbudgeted
+    engine exactly."""
+    cfg = model("mtla")
+    params = api.init_model(jax.random.PRNGKey(4), cfg)
+    rng = np.random.default_rng(5)
+    mk = lambda: [Request(rid=0, prompt=np.array(p0), max_new=20),
+                  Request(rid=1, prompt=np.array(p1), max_new=6)]
+    p0 = rng.integers(0, 97, size=(5,)).astype(np.int32)
+    p1 = rng.integers(0, 97, size=(48,)).astype(np.int32)
+    base = DecodeEngine(params, cfg, batch=2, max_len=64, dtype=jnp.float32,
+                        burst=4)
+    want = base.run(mk())
+    eng = DecodeEngine(params, cfg, batch=2, max_len=64, dtype=jnp.float32,
+                       burst=4, chunk_tokens=8, round_budget=16,
+                       prefill_bucket=8)
+    reqs = mk()
+    got = eng.run(reqs)
+    assert got == want
+    # rid 0 (short, 20 tokens) finished while rid 1 (48-token prompt) was
+    # still prefilling: decode really ran between rid 1's chunks
+    assert reqs[1].t_first is not None
+    assert max(reqs[0].tok_t) < reqs[1].t_first
+
+
+def test_budget_prefix_identity_with_slot_reuse():
+    """Regression: a prefix-hit slot admitted under a tight round budget
+    can sit through a decode burst before its first chunk runs. The
+    burst's dummy pass over done rows writes through the live page table
+    at the slot's device feed position — which admission must reset to
+    the chunk cursor, or the position left stale by the slot's previous
+    occupant lets the write corrupt the newly mapped (refcounted, shared)
+    prefix pages and every request reading them."""
+    cfg = model("mtla")
+    params = api.init_model(jax.random.PRNGKey(16), cfg)
+    pre = np.random.default_rng(20).integers(0, 97, size=(32,)
+                                             ).astype(np.int32)
+
+    def mk():
+        rng = np.random.default_rng(21)
+        tail = lambda n: rng.integers(0, 97, size=(n,)).astype(np.int32)
+        return [
+            # retires fast, leaving a stale mid-prefix feed position on
+            # the slot a prefix-hit request is about to reuse
+            Request(rid=0, prompt=tail(9), max_new=4),
+            # keeps decoding, so bursts run between the hits' chunks
+            Request(rid=1, prompt=tail(8), max_new=24),
+            # publishes the 32-token prefix for the second wave to hit
+            Request(rid=2, prompt=np.concatenate([pre, tail(4)]),
+                    max_new=6),
+            Request(rid=3, prompt=np.concatenate([pre, tail(5)]),
+                    max_new=6),
+            Request(rid=4, prompt=np.concatenate([pre, tail(6)]),
+                    max_new=6),
+        ]
+
+    def serve(budget):
+        eng = DecodeEngine(params, cfg, batch=3, max_len=64,
+                           dtype=jnp.float32, burst=4, page_size=4,
+                           prefix_cache=True, chunk_tokens=8,
+                           prefill_bucket=8, round_budget=budget)
+        return eng.run(mk())
+
+    assert serve(4) == serve(0)
+
+
+# ---------------------------------------------------------------------------
+# compile-count guard
+# ---------------------------------------------------------------------------
+
+def test_mixed_rounds_reuse_traces():
+    """Mixed chunk+decode rounds reuse one prefill trace per bucketed chunk
+    width and one burst trace: a long prompt spanning many rounds adds
+    prefill *calls*, never prefill *compiles*."""
+    cfg = model("mtla")
+    params = api.init_model(jax.random.PRNGKey(6), cfg)
+    rng = np.random.default_rng(7)
+    reqs = [Request(rid=0, prompt=rng.integers(0, 97, size=(6,)
+                    ).astype(np.int32), max_new=24),
+            Request(rid=1, prompt=rng.integers(0, 97, size=(64,)
+                    ).astype(np.int32), max_new=6),
+            Request(rid=2, prompt=rng.integers(0, 97, size=(7,)
+                    ).astype(np.int32), max_new=8)]
+    eng = DecodeEngine(params, cfg, batch=2, max_len=96, dtype=jnp.float32,
+                       burst=4, chunk_tokens=8, prefill_bucket=8)
+    out = eng.run(reqs)
+    assert all(len(out[r.rid]) == r.max_new for r in reqs)
+    # the 64-token prompt alone takes 8 chunk rounds; every chunk call
+    # (and the short prompts riding along) hits the same 8-wide bucket
+    assert eng.prefill_calls >= 8
+    assert eng.prefill_traces == 1
+    assert eng.burst_traces == 1
+
+
+def test_windowed_nonring_cache_serves_chunked():
+    """Regression: a standard-kind config with sliding_window == max_len
+    is NON-ring (the cache spans max_len; the window mask is a no-op
+    within capacity) and must flow through the chunked continuation path
+    — and emit the same tokens as the global-attention engine, since a
+    max_len-wide window excludes nothing."""
+    cfg_w = model("mha").with_attn(sliding_window=32)
+    cfg_g = model("mha")
+    params = api.init_model(jax.random.PRNGKey(7), cfg_g)
+
+    def mk(seed=8):
+        rng = np.random.default_rng(seed)
+        return [Request(rid=i,
+                        prompt=rng.integers(0, 97, size=(n,)
+                                            ).astype(np.int32),
+                        max_new=5)
+                for i, n in enumerate((4, 20, 6))]
+
+    want = DecodeEngine(params, cfg_g, batch=2, max_len=32,
+                        dtype=jnp.float32, burst=4).run(mk())
+    eng = DecodeEngine(params, cfg_w, batch=2, max_len=32,
+                       dtype=jnp.float32, burst=4, chunk_tokens=8,
+                       prefill_bucket=8)
+    assert eng._batched_prefill          # window == max_len is not a ring
+    assert eng.run(mk()) == want
+
+
+def test_chunk_tokens_rounds_up_to_stride():
+    """chunk_tokens rounds up to a multiple of s, so every non-final chunk
+    boundary is stride-aligned and a chunk never ends mid-stride (the
+    hyper-network merge state at a cut stride could not be resumed)."""
+    cfg = model("mtla", s=3)
+    params = api.init_model(jax.random.PRNGKey(8), cfg)
+    eng = DecodeEngine(params, cfg, batch=1, max_len=64, dtype=jnp.float32,
+                       chunk_tokens=7)
+    assert eng.chunk_tokens == 9                      # ceil(7/3)*3
+    rng = np.random.default_rng(9)
+    base = DecodeEngine(params, cfg, batch=1, max_len=64, dtype=jnp.float32)
+    prompt = rng.integers(0, 97, size=(22,)).astype(np.int32)
+    want = base.run([Request(rid=0, prompt=prompt, max_new=6)])
+    got = eng.run([Request(rid=0, prompt=prompt, max_new=6)])
+    assert got == want
+    # 22 tokens at chunk 9: chunks of 9, 9, 4 — boundaries on the s=3 grid
+    assert eng.prefill_calls == 3
+
+
+# ---------------------------------------------------------------------------
+# preemption of a mid-prefill slot
+# ---------------------------------------------------------------------------
+
+def test_preempt_mid_prefill_resumes_identically():
+    """A slot preempted between prompt chunks snapshots its cursor and the
+    chunks already written; on resume it streams the remaining chunks and
+    emits exactly the uninterrupted engine's tokens (no re-prefill of the
+    written prefix: prefill_tokens counts each prompt token once)."""
+    cfg = model("mtla")
+    params = api.init_model(jax.random.PRNGKey(10), cfg)
+    rng = np.random.default_rng(11)
+    long_p = rng.integers(0, 97, size=(32,)).astype(np.int32)
+    hi_p = rng.integers(0, 97, size=(6,)).astype(np.int32)
+    ref = DecodeEngine(params, cfg, batch=1, max_len=64, dtype=jnp.float32,
+                       burst=4, page_size=4, chunk_tokens=8,
+                       prefill_bucket=8)
+    want_long = ref.run([Request(rid=0, prompt=long_p, max_new=8)])[0]
+    ref.reset()
+    want_hi = ref.run([Request(rid=1, prompt=hi_p, max_new=6)])[1]
+
+    eng = DecodeEngine(params, cfg, batch=1, max_len=64, dtype=jnp.float32,
+                       burst=4, page_size=4, chunk_tokens=8,
+                       prefill_bucket=8, preemption=True)
+    low = Request(rid=0, prompt=long_p, max_new=8, priority=0)
+    # admit and run exactly two of the four chunks, then preempt mid-prefill
+    plan = eng._admit([low])
+    assert plan.assignments and eng.scheduler.any_prefilling()
+    eng._prefill_round()
+    eng._prefill_round()
+    slot = eng.scheduler.slots.index(low)
+    assert eng.scheduler.prefilling[slot]
+    assert eng.scheduler.cursor[slot] == 16
+    eng.preempt(slot)
+    entry = eng.pool.swap[low.rid]
+    assert entry["prefilling"] and entry["cursor"] == 16
+    assert entry["npages"] == 2                       # 16 toks / (4*s) page
+    # the high-priority request runs first; the victim resumes after
+    out = eng.run([Request(rid=1, prompt=hi_p, max_new=6, priority=5),
+                   low])
+    assert out[1] == want_hi
+    assert out[0] == want_long
+    assert eng.preemptions == 1 and eng.resumes == 1
+    assert not eng.pool.swap and eng.pool.swap_bytes == 0
+    # 16 tokens prefilled before the preempt + 16 after the resume
+    assert eng.prefill_tokens == len(long_p) + len(hi_p)
+
+
+def test_run_loop_preempts_prefilling_victim():
+    """The run loop may evict a victim the instant a starved higher
+    priority head arrives — even one still PREFILLING at cursor 0 (an
+    empty snapshot) — and both streams stay exact."""
+    cfg = model("mtla")
+    params = api.init_model(jax.random.PRNGKey(12), cfg)
+    rng = np.random.default_rng(13)
+    long_p = rng.integers(0, 97, size=(24,)).astype(np.int32)
+    hi_p = rng.integers(0, 97, size=(6,)).astype(np.int32)
+    ref = DecodeEngine(params, cfg, batch=1, max_len=64, dtype=jnp.float32,
+                       burst=4, page_size=4, chunk_tokens=8)
+    want_long = ref.run([Request(rid=0, prompt=long_p, max_new=8)])[0]
+    ref.reset()
+    want_hi = ref.run([Request(rid=1, prompt=hi_p, max_new=6)])[1]
+    eng = DecodeEngine(params, cfg, batch=1, max_len=64, dtype=jnp.float32,
+                       burst=4, page_size=4, chunk_tokens=8,
+                       preemption=True)
+    out = eng.run([Request(rid=0, prompt=long_p, max_new=8, priority=0),
+                   Request(rid=1, prompt=hi_p, max_new=6, priority=5)])
+    assert out[1] == want_hi and out[0] == want_long
+    assert eng.preemptions == 1 and eng.resumes == 1
+
+
+# ---------------------------------------------------------------------------
+# plan_round budget arithmetic (host-only)
+# ---------------------------------------------------------------------------
+
+def test_plan_round_budget_split():
+    """Decode claims one token per decoding slot per step first; chunks
+    spend the remainder FIFO; the head chunk and the burst quota never
+    drop to zero."""
+    sched = Scheduler(batch=4, max_len=128)
+    reqs = [Request(rid=0, prompt=np.zeros(8, np.int32), max_new=16),
+            Request(rid=1, prompt=np.zeros(64, np.int32), max_new=4),
+            Request(rid=2, prompt=np.zeros(40, np.int32), max_new=4)]
+    plan = sched.plan(reqs)
+    sched.commit(plan)
+    # slot 0 decodes; slots 1 and 2 are mid-prefill
+    reqs[0].out = [1, 2]
+    sched.begin_prefill(1, 16)
+    sched.begin_prefill(2, 0)
+    # budget 40: decode books 1 slot * quota 8 = 8; chunk cap 16 each ->
+    # head (slot 1, earlier admission) takes 16, slot 2 gets the last 16
+    chunks, quota = sched.plan_round(chunk_tokens=16, round_budget=40,
+                                     burst=8, stride=2)
+    assert quota == 8
+    assert [(s, a, n) for s, _, a, n in chunks] == [(1, 16, 16), (2, 0, 16)]
+    # budget 12: decode books 8, leaving 4 — the budget bounds the head's
+    # chunk too (stride-cut to 4); the second prefilling slot waits
+    chunks, quota = sched.plan_round(chunk_tokens=16, round_budget=12,
+                                     burst=8, stride=2)
+    assert quota == 8
+    assert [(s, n) for s, _, _, n in chunks] == [(1, 4)]
+    # an uncapped head (chunk_tokens=0) is budget-bound as well: a long
+    # prompt cannot reintroduce whole-prompt HOL blocking under a budget
+    chunks, _ = sched.plan_round(chunk_tokens=0, round_budget=20,
+                                 burst=8, stride=2)
+    assert [(s, n) for s, _, _, n in chunks] == [(1, 12)]
+    # budget 3 with a decoding slot: quota clamps to 3 but stays >= 1, and
+    # the head chunk still advances by at least one stride
+    chunks, quota = sched.plan_round(chunk_tokens=16, round_budget=3,
+                                     burst=8, stride=2)
+    assert quota == 3
+    assert len(chunks) == 1 and chunks[0][3] >= 2
+    # stride alignment: a mid-prompt chunk cut by the budget lands on the
+    # stride grid (22 -> 22 // 2 * 2, never 21)
+    chunks, _ = sched.plan_round(chunk_tokens=25, round_budget=100,
+                                 burst=8, stride=2)
+    for _, req, start, n in chunks:
+        assert n % 2 == 0 or start + n == len(req.prompt)
+
+
+def test_plan_round_without_budget_takes_whole_prompts():
+    """chunk_tokens=0 and round_budget=0 degrade to the classic regime:
+    each PREFILLING slot takes its whole remaining prompt in one chunk."""
+    sched = Scheduler(batch=2, max_len=64)
+    reqs = [Request(rid=0, prompt=np.zeros(40, np.int32), max_new=4),
+            Request(rid=1, prompt=np.zeros(9, np.int32), max_new=4)]
+    plan = sched.plan(reqs)
+    sched.commit(plan)
+    sched.begin_prefill(0, 0)
+    sched.begin_prefill(1, 0)
+    chunks, quota = sched.plan_round(chunk_tokens=0, round_budget=0,
+                                     burst=8, stride=2)
+    assert [(s, a, n) for s, _, a, n in chunks] == [(0, 0, 40), (1, 0, 9)]
+    assert quota == 1                   # no decoding slot yet
+
+
+def test_ttft_fields_populated():
+    """run() stamps t_submit / t_first / per-token host-sync times — the
+    TTFT and inter-token-latency source for bench_serving."""
+    cfg = model("mtla")
+    params = api.init_model(jax.random.PRNGKey(14), cfg)
+    rng = np.random.default_rng(15)
+    reqs = [Request(rid=i, prompt=rng.integers(0, 97, size=(6,)
+                    ).astype(np.int32), max_new=5) for i in range(2)]
+    eng = DecodeEngine(params, cfg, batch=2, max_len=32, dtype=jnp.float32,
+                       burst=4)
+    eng.run(reqs)
+    for r in reqs:
+        assert r.t_submit is not None and r.t_first is not None
+        assert r.t_first >= r.t_submit
+        assert len(r.tok_t) == len(r.out) == 5
+        assert all(b >= a for a, b in zip(r.tok_t, r.tok_t[1:]))

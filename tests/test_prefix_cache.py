@@ -261,10 +261,14 @@ def test_plan_skip_scan_defers_without_cutting_round():
 @pytest.mark.parametrize("kind,backend", [
     ("mtla", "ref"), ("mtla", "pallas"), ("mla", "ref"), ("mla", "pallas")])
 def test_preempt_resume_token_identity(kind, backend):
-    """A high-priority arrival evicts the resident low-priority slot; the
-    victim's resumed stream is token-for-token identical to an
-    uninterrupted run (swap restore is bitwise), and the high-priority
-    request is served without waiting for the long decode."""
+    """A high-priority arrival evicts the resident low-priority slot
+    mid-decode; the victim's resumed stream is token-for-token identical
+    to an uninterrupted run (swap restore is bitwise), and the
+    high-priority request is served without waiting for the long decode.
+    The long request prefills and decodes a burst before the arrival so
+    the swap parks real mid-decode state (a victim caught still
+    PREFILLING snapshots just its cursor + written chunks — that path is
+    pinned by tests/test_chunked_prefill.py)."""
     cfg = model(kind, backend)
     params = api.init_model(jax.random.PRNGKey(8), cfg)
     rng = np.random.default_rng(9)
@@ -277,8 +281,10 @@ def test_preempt_resume_token_identity(kind, backend):
     want_hi = ref.run([Request(rid=1, prompt=hi_p, max_new=6)])[1]
     eng = DecodeEngine(params, cfg, batch=1, max_len=64, dtype=jnp.float32,
                        burst=4, page_size=4, preemption=True)
-    out = eng.run([Request(rid=0, prompt=long_p, max_new=24, priority=0),
-                   Request(rid=1, prompt=hi_p, max_new=6, priority=5)])
+    low = Request(rid=0, prompt=long_p, max_new=24, priority=0)
+    assert eng.add_request(low)
+    eng._burst_step()                   # decode a burst before the arrival
+    out = eng.run([Request(rid=1, prompt=hi_p, max_new=6, priority=5)])
     assert eng.preemptions == 1 and eng.resumes == 1
     assert out[1] == want_hi
     assert out[0] == want_long
