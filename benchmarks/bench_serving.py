@@ -21,6 +21,13 @@ and recycles them across waves. ``peak_cache_bytes`` is the mapped-page
 high-water mark (dense: the allocation); ``vs_dense_fp32`` is the ratio
 the CI regression gate and the paged-cache acceptance check read.
 
+The prefill-throughput section streams a wave of long prompts through the
+chunked continuation path on the paged pool on both attention backends:
+``toks_per_s`` is prompt tokens over chunked-prefill wall clock, gated by
+benchmarks/compare.py like the decode rows; ``vs_ref`` compares the fused
+stride-aware prefill kernel (kernels/mtla_prefill.py) against the jnp
+graph — interpret-mode on CPU, so off-TPU the ratio is informational.
+
 The TTFT head-of-line section serves a mixed workload — one long prompt
 admitted alongside short prompts — through the unchunked engine (the whole
 long prompt prefills in the admission round's single call, so every
@@ -73,6 +80,13 @@ CACHE_MODES = (("dense-fp32", {}),
 # slots so later waves hit the pages the first wave published
 PREFIX_PROMPT, PREFIX_SHARED, PREFIX_MAX_LEN = 40, 32, 96
 
+# prefill-throughput section: a wave of long prompts streamed through the
+# chunked continuation path on the paged pool, on both backends — prompt
+# tokens over prefill wall clock. ref is the jnp graph; pallas is the fused
+# stride-aware kernel (kernels/mtla_prefill.py, interpret-mode on CPU, so
+# vs_ref is informational off-TPU)
+PF_PROMPT, PF_CHUNK, PF_MAX_NEW = 48, 16, 1
+
 # TTFT head-of-line section: one wave of 3 shorts + one long prompt
 # (rid 3) on 4 slots. All four admit in the same round, so unchunked TTFT
 # makes every short wait out the whole 96-token prefill while the chunked
@@ -112,6 +126,27 @@ def _timed_run(eng, cfg, n, maker=_requests):
         eng.reset()
         eng.run(maker(cfg, n))
         best = max(best, eng.decoded_tokens / max(eng.decode_time_s, 1e-9))
+    return best
+
+
+def _pf_requests(cfg, n=BATCH, seed=0):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size,
+                                        size=(PF_PROMPT,)).astype(np.int32),
+                    max_new=PF_MAX_NEW)
+            for i in range(n)]
+
+
+def _timed_prefill(eng, cfg, n):
+    """Best prefill tokens/s (prompt tokens over chunked-prefill wall
+    clock) over TIMED_RUNS repetitions on warmed graphs."""
+    best = 0.0
+    for _ in range(TIMED_RUNS):
+        eng.reset()
+        eng.run(_pf_requests(cfg, n))
+        best = max(best,
+                   eng.prefill_tokens / max(eng.prefill_time_s, 1e-9))
     return best
 
 
@@ -206,6 +241,27 @@ def run():
                 f"toks_per_s={rate:.1f};peak_cache_bytes={peak};"
                 f"vs_dense_fp32={peak / dense_peak:.3f}x;"
                 f"peak_slot_occupancy={occ:.2f}{pages}")
+
+    for kind, s in (("mla", 2), ("mtla", 2)):
+        cfg = paper_model(kind, s=s, layers=2, d=64)
+        params = api.init_model(jax.random.PRNGKey(0), cfg)
+        ref_rate = None
+        for backend in ("ref", "pallas"):
+            eng = DecodeEngine(params, cfg, batch=BATCH,
+                               max_len=PF_PROMPT + PF_MAX_NEW + 8,
+                               dtype=jnp.float32, burst=CACHE_BURST,
+                               page_size=8, chunk_tokens=PF_CHUNK,
+                               backend=backend)
+            eng.run(_pf_requests(cfg))          # warmup: compile all buckets
+            rate = _timed_prefill(eng, cfg, BATCH)
+            if ref_rate is None:
+                ref_rate = rate
+            us = 1e6 / rate
+            rows.append(
+                f"bench_serving/prefill/{cfg.name}-{backend},{us:.1f},"
+                f"toks_per_s={rate:.1f};vs_ref={rate / ref_rate:.2f}x;"
+                f"prefill_calls={eng.prefill_calls}"
+                f";prefill_traces={eng.prefill_traces}")
 
     for kind, s in (("mtla", 2),):
         cfg = paper_model(kind, s=s, layers=2, d=64)

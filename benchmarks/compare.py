@@ -137,6 +137,10 @@ def main() -> int:
           f"(normalized by {args.reference})")
     for f_ in failures:
         print(f"FAIL: {f_}", file=sys.stderr)
+    if failures:
+        print("See docs/benchmarking.md for the gate methodology, what "
+              "each gated key means, and how to recalibrate the baseline.",
+              file=sys.stderr)
     return 1 if failures else 0
 
 

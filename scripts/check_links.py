@@ -1,0 +1,89 @@
+"""Intra-repo markdown link check (CI docs job).
+
+Scans every tracked ``*.md`` file for inline markdown links
+(``[text](target)``) and reference definitions (``[label]: target``),
+and fails if a *relative* target does not exist on disk (optionally with
+an anchor, which is checked against the target file's headings). External
+links (``http(s)://``, ``mailto:``), bare anchors into the same file, and
+badge/image URLs are checked only when relative.
+
+    python scripts/check_links.py [root]
+
+Exit code 0 when every relative link resolves, 1 otherwise (each broken
+link is printed as ``file:line: target``).
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+INLINE = re.compile(r"\[[^\]^\[]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+REFDEF = re.compile(r"^\s*\[[^\]]+\]:\s+(\S+)", re.M)
+SKIP_DIRS = {".git", ".github", "node_modules", "__pycache__", ".venv"}
+
+
+def _anchor_of(heading: str) -> str:
+    """GitHub-style slug: lowercase, drop punctuation, spaces to dashes."""
+    slug = heading.strip().lower()
+    slug = re.sub(r"[`*_~]", "", slug)
+    slug = re.sub(r"[^\w\- ]", "", slug)
+    return slug.replace(" ", "-")
+
+
+def _headings(path: pathlib.Path) -> set:
+    out = set()
+    for line in path.read_text(encoding="utf-8").splitlines():
+        m = re.match(r"\s{0,3}(#{1,6})\s+(.*)", line)
+        if m:
+            out.add(_anchor_of(m.group(2)))
+    return out
+
+
+def _targets(text: str):
+    for m in INLINE.finditer(text):
+        yield m.start(), m.group(1)
+    for m in REFDEF.finditer(text):
+        yield m.start(), m.group(1)
+
+
+def check(root: pathlib.Path):
+    broken = []
+    md_files = [p for p in sorted(root.rglob("*.md"))
+                if not (SKIP_DIRS & set(part.name for part in p.parents))]
+    for md in md_files:
+        text = md.read_text(encoding="utf-8")
+        for pos, target in _targets(text):
+            if re.match(r"[a-z][a-z0-9+.-]*:", target):   # http:, mailto:
+                continue
+            line = text.count("\n", 0, pos) + 1
+            path_part, _, anchor = target.partition("#")
+            if not path_part:                              # same-file anchor
+                if anchor and _anchor_of(anchor) not in _headings(md):
+                    broken.append((md, line, target))
+                continue
+            dest = (md.parent / path_part).resolve()
+            if root.resolve() not in dest.parents and dest != root.resolve():
+                continue        # escapes the repo: a GitHub web path like
+                #                 the CI badge's ../../actions/... URL
+            if not dest.exists():
+                broken.append((md, line, target))
+                continue
+            if anchor and dest.suffix == ".md" \
+                    and _anchor_of(anchor) not in _headings(dest):
+                broken.append((md, line, target))
+    return md_files, broken
+
+
+def main() -> int:
+    root = pathlib.Path(sys.argv[1] if len(sys.argv) > 1 else ".")
+    md_files, broken = check(root)
+    for md, line, target in broken:
+        print(f"{md}:{line}: broken link -> {target}", file=sys.stderr)
+    print(f"checked {len(md_files)} markdown files, "
+          f"{len(broken)} broken links")
+    return 1 if broken else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -280,7 +280,14 @@ def init_attn_cache(cfg: AttentionConfig, batch: int, max_len: int,
     page table (core/mtla.py paged_* ops), with ``paged.cache_dtype``
     governing the pool element type instead of ``dtype`` (int8 pools carry
     per-row fp32 scales). The page table starts fully unmapped (sentinel
-    = pool size); serving/cache.py::PagePool assigns physical pages."""
+    = pool size); serving/cache.py::PagePool assigns physical pages
+    0..pool-1. The pool arrays allocate one extra physical page — a *trash
+    page* at index ``pool`` the allocator never hands out — so the
+    sentinel clamps to a real, never-read-unmasked row: the fused prefill
+    kernel (kernels/mtla_prefill.py) expresses "skip this write" as a
+    legal write to it, and the jnp paths' out-of-range drops / clip-reads
+    keep their exact semantics (reads of unmapped pages were always
+    masked garbage)."""
     if cfg.kind in ("mla", "mtla"):
         s = cfg.s if cfg.kind == "mtla" else 1
         t = -(-max_len // s)
@@ -289,14 +296,15 @@ def init_attn_cache(cfg: AttentionConfig, batch: int, max_len: int,
             _, n, pool = paged.geometry(batch, max_len, s)
             cdt = CACHE_JNP_DTYPES[paged.cache_dtype]
             cache = {
-                "pool_c": jnp.zeros((pool, page, cfg.kv_lora_rank), cdt),
-                "pool_kr": jnp.zeros((pool, page, cfg.rope_head_dim), cdt),
+                "pool_c": jnp.zeros((pool + 1, page, cfg.kv_lora_rank), cdt),
+                "pool_kr": jnp.zeros((pool + 1, page, cfg.rope_head_dim),
+                                     cdt),
                 "page_table": jnp.full((batch, n), pool, jnp.int32),
                 "pos": jnp.zeros((batch,), jnp.int32),
             }
             if paged.quantized:
-                cache["scale_c"] = jnp.zeros((pool, page), jnp.float32)
-                cache["scale_kr"] = jnp.zeros((pool, page), jnp.float32)
+                cache["scale_c"] = jnp.zeros((pool + 1, page), jnp.float32)
+                cache["scale_kr"] = jnp.zeros((pool + 1, page), jnp.float32)
             return cache
         return {
             "c": jnp.zeros((batch, t, cfg.kv_lora_rank), dtype),
@@ -316,7 +324,7 @@ def init_attn_cache(cfg: AttentionConfig, batch: int, max_len: int,
 
 
 def _latent_prefill_continuation(p, cfg: AttentionConfig, x, cache,
-                                 offsets, lengths, active):
+                                 offsets, lengths, active, backend=None):
     """Prefill a per-sequence token window (a *chunk*) against the latent
     prefix already in the cache — the single prefill primitive of the
     serving step loop (serving/engine.py) and of prefix-cache continuation
@@ -344,10 +352,14 @@ def _latent_prefill_continuation(p, cfg: AttentionConfig, x, cache,
     chunk track. Writes land at absolute chunk slots >= offset//s, so a
     prefix hit's shared pages stay read-only by construction.
 
-    Backend note: this path always runs the reference jnp math, on every
-    backend — the fused Pallas training kernels assume fresh positions
-    0..T-1 (core/dispatch.py), and the per-row offsets here violate that
-    layout. A fused continuation kernel is future work.
+    Backend note: ``backend='pallas'`` routes through the fused
+    continuation kernel (kernels/mtla_prefill.py via
+    core/dispatch.py::mtla_prefill_continuation) in absorbed form — merge,
+    stride-aware attention and the cache write in one pass, with paged
+    pools written inside the kernel. The reference branch below runs the
+    up-projected train-path math; both produce the same attended sets and
+    identical cache writes (fp pools bitwise, tests/test_chunked_prefill.py
+    pins chunked == unchunked token-for-token per backend).
     """
     B, T, _ = x.shape
     s = cfg.s if cfg.kind == "mtla" else 1
@@ -360,11 +372,23 @@ def _latent_prefill_continuation(p, cfg: AttentionConfig, x, cache,
         g = mtla.merge_gates(p, c, positions // s)                 # [B, T]
     else:
         g = jnp.ones((B, T), jnp.float32)
+    scale = mtla.default_scale(cfg.head_dim, cfg.softmax_scale)
+
+    if _resolve_backend(cfg, backend) == "pallas":
+        q_lat = mtla.absorbed_queries(q_nope, p["w_uk"]["w"])  # [B,T,H,r]
+        ctx_lat, cache = dispatch.mtla_prefill_continuation(
+            q_lat, q_rope, c, kr, g, cache, offsets, lengths, active,
+            s, scale, backend="pallas")
+        ctx = jnp.einsum("bthr,rhd->bthd", ctx_lat,
+                         p["w_uv"]["w"].astype(jnp.float32)).astype(x.dtype)
+        y = dense(p["wo"], ctx.reshape(B, T, -1))
+        cache["pos"] = jnp.where(active, offsets + lengths, cache["pos"])
+        return y, cache
+
     # local merge is exact because offsets are stride-aligned: the chunk's
     # stride grid coincides with its local token grid
     P_, C_hat = mtla.temporal_merge(c, g, s)
     local_t = C_hat.shape[1]
-    scale = mtla.default_scale(cfg.head_dim, cfg.softmax_scale)
 
     # chunk track over the slot's full logical space: cached prefix chunks
     # from the pool / dense rows, local finalized chunks overlaid at their
@@ -483,7 +507,8 @@ def attn_prefill(p, cfg: AttentionConfig, x, cache, *, window: int = 0,
             active = jnp.ones((x.shape[0],), bool)
         if cfg.kind in ("mla", "mtla"):
             return _latent_prefill_continuation(p, cfg, x, cache, offsets,
-                                                lengths, active)
+                                                lengths, active,
+                                                backend=backend)
         if "slot_pos" not in cache:
             raise ValueError(
                 "chunked continuation prefill for standard kinds requires "

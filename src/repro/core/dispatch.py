@@ -19,10 +19,13 @@ re-derives gradients through the reference implementation, so
 ``backend="pallas"`` composes with ``jax.grad`` / training (fused forward,
 reference backward — the standard recompute trade).
 
-Constraint: the fused training kernels assume *fresh* sequences (positions
-``0..T-1``, the layout used by training and prefill). Callers with scattered
-positions must stay on ``ref`` — ``core/attention.py`` enforces this via its
-``fresh`` flag.
+Constraint: the fused *training* kernels assume *fresh* sequences (positions
+``0..T-1``, the layout used by training and whole-prompt prefill). Callers
+with scattered positions must stay on ``ref`` — ``core/attention.py``
+enforces this via its ``fresh`` flag. The chunked continuation prefill is
+the exception: ``mtla_prefill_continuation`` carries per-row absolute
+offsets into the fused kernel directly (kernels/mtla_prefill.py), so the
+serving step loop runs fused end-to-end. See docs/kernels.md.
 """
 from __future__ import annotations
 
@@ -153,6 +156,65 @@ def mtla_train_attention(q_nope, q_rope, k_chunk, v_chunk, kr_chunk,
     ctx = _attn_fused(tr(q_nope), tr(q_rope), tr(k_chunk), tr(v_chunk),
                       kr_chunk, tr(k_self), tr(v_self), kr_self, s, scale)
     return tr(ctx)
+
+
+# ---------------------------------------------------------------------------
+# chunked continuation prefill (the serving step loop's prefill primitive)
+# ---------------------------------------------------------------------------
+
+def mtla_prefill_continuation(q_lat, q_rope, c, kr, g, cache, offsets,
+                              lengths, active, s: int, scale: float, *,
+                              backend: str):
+    """Absorbed-form chunked continuation prefill + cache write.
+
+    q_lat [B,T,H,r] absorbed chunk queries (q_nope folded through W_UK),
+    q_rope [B,T,H,dr]; c [B,T,r] post-norm chunk latents, kr [B,T,dr]
+    RoPE'd keys, g [B,T] hyper-net gates (all-ones for MLA, where s == 1);
+    ``cache`` a latent decode cache from core/attention.py::init_attn_cache
+    — dense (c/kr) or paged (pool_c/pool_kr/page_table, + int8 scales);
+    offsets [B] stride-aligned absolute chunk starts, lengths [B] real
+    chunk lengths, active [B] bool rows this call prefills.
+
+    Returns (ctx_lat [B,T,H,r] fp32, cache with the chunk's finalized rows
+    written at absolute slots offsets//s + j). ``pos`` is NOT advanced —
+    the caller owns that, as with the other cache-write helpers.
+
+    backend='pallas' runs the fused kernel (kernels/mtla_prefill.py): the
+    paged pool is read AND written inside the kernel via gathered, aliased
+    block specs; the dense cache takes the kernel's (cc, ckr) through
+    ``dense_prefill_write_at``. backend='ref' runs the pure-jnp oracle
+    (kernels/ref.py) over the materialized view plus the same write
+    helpers — always available, identical masking and write semantics.
+    """
+    paged = "pool_c" in cache
+    if backend == "pallas":
+        if paged:
+            ctx_lat, pool_c, pool_kr, sc, skr = kops.mtla_prefill_paged(
+                q_lat, q_rope, c, kr, g, cache["pool_c"], cache["pool_kr"],
+                cache["page_table"], offsets, lengths, active, s, scale,
+                cache.get("scale_c"), cache.get("scale_kr"))
+            cache = dict(cache, pool_c=pool_c, pool_kr=pool_kr)
+            if sc is not None:
+                cache = dict(cache, scale_c=sc, scale_kr=skr)
+            return ctx_lat, cache
+        ctx_lat, cc, ckr = kops.mtla_prefill(
+            q_lat, q_rope, c, kr, g, cache["c"], cache["kr"],
+            offsets, lengths, s, scale)
+    else:
+        if paged:
+            view_c, view_kr = mtla.paged_view(cache)
+        else:
+            view_c, view_kr = cache["c"], cache["kr"]
+        ctx_lat, cc, ckr = kref.mtla_prefill_ref(
+            q_lat, q_rope, c, kr, g, view_c, view_kr, offsets, lengths,
+            s, scale)
+    t = cc.shape[1]
+    last = lengths.astype(jnp.int32) - 1
+    live = (jnp.arange(t)[None, :] <= (last // s)[:, None]) & active[:, None]
+    write = mtla.paged_prefill_write_at if paged else \
+        mtla.dense_prefill_write_at
+    cache = write(cache, cc, ckr, offsets.astype(jnp.int32) // s, live)
+    return ctx_lat, cache
 
 
 # ---------------------------------------------------------------------------

@@ -241,11 +241,18 @@ def decode_cache_update(cache_c, cache_kr, pos, c_t, kr_t, g_t, s: int):
 #   pool_c     [P, page, r]    latent rows, P shared physical pages
 #   pool_kr    [P, page, dr]   per-chunk RoPE keys
 #   page_table [B, n] int32    logical chunk page -> physical page; the
-#                              sentinel value P marks an unmapped page, so
-#                              every write through it lands out of range and
-#                              is dropped (mode="drop") — the same semantics
-#                              dense caches use for retired slots past
-#                              capacity
+#                              sentinel value pool marks an unmapped page.
+#                              The pool arrays carry pool+1 physical rows:
+#                              the last one is a *trash page* the allocator
+#                              never hands out, so the sentinel points at a
+#                              real row. Reads through it are masked out;
+#                              the jnp write helpers here still drop
+#                              unmapped writes outright (phys is bumped out
+#                              of range, mode="drop"), while the fused
+#                              prefill kernel (kernels/mtla_prefill.py)
+#                              expresses the same skip as a legal write to
+#                              the trash row — the same retired-slot
+#                              semantics dense caches use past capacity
 #   scale_c/scale_kr [P, page] fp32 per-row scales (int8 pools only)
 #
 # The host-side allocator that assigns physical pages and enforces

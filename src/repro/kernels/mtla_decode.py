@@ -12,7 +12,10 @@ The paged variant (``mtla_decode_paged_pallas``) reads the serving block
 pool directly: the per-slot page table rides in as a scalar-prefetch
 operand, so each grid step's BlockSpec index map dereferences it to DMA the
 right physical page — the gather never materializes a dense copy of the
-cache. int8 pools are dequantized in-register from per-row scales.
+cache. int8 pools are dequantized in-register from per-row scales. The
+fused continuation-prefill kernel (``mtla_prefill.py``) reuses this
+scalar-prefetch gather pattern for both its paged reads and its in-kernel
+pool writes.
 """
 from __future__ import annotations
 
@@ -170,14 +173,14 @@ def mtla_decode_paged_pallas(q_lat, q_rope, pool_c, pool_kr, page_table, j,
     n = page_table.shape[1]
     quantized = scale_c is not None
 
-    def page_idx(b, k, pt, jj):
+    def _page_idx(b, k, pt, jj):
         return (jnp.minimum(pt[b, k], P - 1), 0, 0)
 
     in_specs = [
         pl.BlockSpec((1, H, r), lambda b, k, pt, jj: (b, 0, 0)),
         pl.BlockSpec((1, H, dr), lambda b, k, pt, jj: (b, 0, 0)),
-        pl.BlockSpec((1, page, r), page_idx),
-        pl.BlockSpec((1, page, dr), page_idx),
+        pl.BlockSpec((1, page, r), _page_idx),
+        pl.BlockSpec((1, page, dr), _page_idx),
     ]
     args = [q_lat, q_rope, pool_c, pool_kr]
     if quantized:

@@ -1,0 +1,417 @@
+"""Pallas TPU kernel: stride-aware chunked continuation prefill.
+
+The serving step loop prefills every prompt as a sequence of stride-aligned
+token *chunks* at absolute offsets against the latent cache already in place
+(core/attention.py::_latent_prefill_continuation). This kernel fuses that
+whole round for MTLA/MLA in absorbed form (paper Eq. 12/17):
+
+  * the partial-stride hyper-network merge of the chunk's own latents — a
+    chunked gated prefix-sum yielding the per-query "self" track P and the
+    chunk-tail states C_hat — runs in VMEM at the first grid step;
+  * flash-style online softmax streams the cache's chunk track through VMEM
+    in blocks (like kernels/mtla_attn.py), with the chunk's freshly merged
+    rows overlaid at their absolute chunk slots via a one-hot matmul, under
+    the stride-aware mask: a query at absolute position m admits finalized
+    chunks j < m // s plus its own partial state;
+  * the paged variant additionally writes the finalized rows straight into
+    the physical page pool through the scalar-prefetch page-table gather of
+    kernels/mtla_decode.py — int8 pools are requantized in-register with
+    fresh per-row scales — so prefill touches each page exactly once.
+
+Queries ride flattened as [Tq*H, r] rows (row // H recovers the token) so
+one grid axis covers the whole chunk; Tq is the chunk width padded to a
+stride multiple, and pad queries always keep their (unmasked) self logit, so
+their discarded outputs stay finite.
+
+Fused paged writes rely on the pool's *trash page*: paged caches allocate
+one physical page past the logical pool (core/attention.py) and every grid
+step outside a row's write range — and every row of an inactive sequence —
+targets it, so "skip this write" is expressed as a legal write that lands in
+garbage nobody reads unmasked.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+_QMAX = 127.0  # int8 symmetric range, matching runtime/compression.py
+
+
+def _seed_self_track(ql, qr, gc_ref, kr_ref, scale, s, H,
+                     m_ref, l_ref, acc_ref, ccs_ref):
+    """First-grid-step fusion: chunked gated prefix-sum over the chunk's own
+    (pre-gated) latents -> self-track states P / chunk-tail states C_hat,
+    then online-softmax seeding with the always-valid self logit."""
+    gc = gc_ref[0].astype(jnp.float32)               # [Tq, r] g_i * c_i
+    krt = kr_ref[0].astype(jnp.float32)              # [Tq, dr]
+    TqH, r = ql.shape
+    Tq = TqH // H
+    prefix = jnp.cumsum(gc.reshape(Tq // s, s, r), axis=1)
+    P = prefix.reshape(Tq, r)                        # state as of each query
+    ccs_ref[...] = prefix[:, s - 1]                  # chunk-tail states
+    Pr = jnp.broadcast_to(P[:, None, :], (Tq, H, r)).reshape(TqH, r)
+    krr = jnp.broadcast_to(krt[:, None, :],
+                           (Tq, H, krt.shape[-1])).reshape(TqH, -1)
+    ls = (jnp.sum(ql * Pr, -1) + jnp.sum(qr * krr, -1)) * scale
+    m_ref[...] = ls                                  # self logit seeds max
+    l_ref[...] = jnp.ones_like(l_ref)
+    acc_ref[...] = Pr                                # absorbed value == P
+
+
+def _chunk_block_update(ql, qr, kc, krc, off, base_slot, scale, s, H,
+                        m_ref, l_ref, acc_ref):
+    """One online-softmax step over a chunk-track key block (values are the
+    latent rows themselves in absorbed form)."""
+    logits = (ql @ kc.T + qr @ krc.T) * scale        # [TqH, bk]
+    rows = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 0) // H
+    cols = base_slot + jax.lax.broadcasted_iota(jnp.int32, logits.shape, 1)
+    logits = jnp.where(cols < (off + rows) // s, logits, NEG_INF)
+    m_prev = m_ref[...]
+    l_prev = l_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(logits, axis=-1))
+    p = jnp.exp(logits - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_prev * corr + jnp.sum(p, axis=-1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + p @ kc
+    m_ref[...] = m_new
+
+
+def _overlay_sel(base_slot, j0, block, t_loc):
+    """One-hot [block, t_loc] selector mapping local chunk j to the block
+    row holding absolute slot j0 + j (rows outside the chunk select none)."""
+    slot = base_slot + jax.lax.broadcasted_iota(jnp.int32, (block, t_loc), 0)
+    jloc = jax.lax.broadcasted_iota(jnp.int32, (block, t_loc), 1)
+    return (slot == j0 + jloc).astype(jnp.float32)
+
+
+def _prefill_kernel(off_ref, ql_ref, qr_ref, gc_ref, kr_ref, ckr_ref,
+                    vc_ref, vkr_ref, o_ref, cc_ref,
+                    m_ref, l_ref, acc_ref, ccs_ref,
+                    *, s: int, H: int, scale: float, block_k: int):
+    ki = pl.program_id(1)
+    nk = pl.num_programs(1)
+    off = off_ref[0]
+    ql = ql_ref[0].astype(jnp.float32)               # [Tq*H, r]
+    qr = qr_ref[0].astype(jnp.float32)               # [Tq*H, dr]
+    t_loc = ccs_ref.shape[0]
+
+    @pl.when(ki == 0)
+    def _seed():
+        _seed_self_track(ql, qr, gc_ref, kr_ref, scale, s, H,
+                         m_ref, l_ref, acc_ref, ccs_ref)
+        cc_ref[0] = ccs_ref[...]
+
+    # chunk track: dense cache block with the local finalized chunks
+    # overlaid at absolute slots j0 + j (cast through the cache dtype so
+    # the overlay equals what a later chunk reads back, token-for-token)
+    kc = vc_ref[0].astype(jnp.float32)               # [bk, r]
+    krc = vkr_ref[0].astype(jnp.float32)
+    sel = _overlay_sel(ki * block_k, off // s, block_k, t_loc)
+    ov = jnp.sum(sel, axis=1) > 0.5
+    cc_v = ccs_ref[...].astype(vc_ref.dtype).astype(jnp.float32)
+    ckr_v = ckr_ref[0].astype(vkr_ref.dtype).astype(jnp.float32)
+    kc = jnp.where(ov[:, None], sel @ cc_v, kc)
+    krc = jnp.where(ov[:, None], sel @ ckr_v, krc)
+    _chunk_block_update(ql, qr, kc, krc, off, ki * block_k, scale, s, H,
+                        m_ref, l_ref, acc_ref)
+
+    @pl.when(ki == nk - 1)
+    def _final():
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+def _prep_chunk(q_lat, q_rope, c, kr, g, lengths, s: int):
+    """Shared host-side prep: pad the chunk to a stride multiple, flatten
+    queries to [Tq*H, ·] rows, zero gates past each row's last real token
+    (so the in-kernel prefix-sum lands exactly on the lengths-clamped chunk
+    states), and gather the chunk-final RoPE keys."""
+    B, T, H, r = q_lat.shape
+    dr = q_rope.shape[-1]
+    Tq = T + ((-T) % s)
+    t_loc = Tq // s
+    last = lengths.astype(jnp.int32) - 1
+    gm = jnp.where(jnp.arange(T)[None, :] <= last[:, None],
+                   g.astype(jnp.float32), 0.0)
+    gc = gm[..., None] * c.astype(jnp.float32)
+    idxp = jnp.minimum(jnp.arange(t_loc)[None, :] * s + (s - 1),
+                       jnp.maximum(last, 0)[:, None])
+    ckr = jnp.take_along_axis(kr.astype(jnp.float32), idxp[:, :, None],
+                              axis=1)
+    pad = Tq - T
+    if pad:
+        q_lat = jnp.pad(q_lat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        q_rope = jnp.pad(q_rope, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        gc = jnp.pad(gc, ((0, 0), (0, pad), (0, 0)))
+        kr = jnp.pad(kr, ((0, 0), (0, pad), (0, 0)))
+    ql = q_lat.astype(jnp.float32).reshape(B, Tq * H, r)
+    qrf = q_rope.astype(jnp.float32).reshape(B, Tq * H, dr)
+    return ql, qrf, gc, kr.astype(jnp.float32), ckr, Tq, t_loc
+
+
+def mtla_prefill_pallas(q_lat, q_rope, c, kr, g, cache_c, cache_kr,
+                        offsets, lengths, s: int, scale: float, *,
+                        block_k: int = 128, interpret: bool = False):
+    """Fused continuation prefill over a dense latent cache.
+
+    q_lat [B,T,H,r] absorbed queries, q_rope [B,T,H,dr]; c [B,T,r] post-norm
+    chunk latents, kr [B,T,dr] RoPE'd keys, g [B,T] hyper-net gates;
+    cache_c [B,N,r] / cache_kr [B,N,dr] the dense chunk cache; offsets [B]
+    stride-aligned absolute chunk starts, lengths [B] real chunk lengths.
+
+    Returns (ctx_lat [B,T,H,r] fp32, cc [B,t,r] fp32 chunk-tail states,
+    ckr [B,t,dr] fp32 chunk-final RoPE keys) with t = ceil(T/s); the caller
+    scatters cc/ckr via core/mtla.py::dense_prefill_write_at.
+    """
+    B, T, H, r = q_lat.shape
+    dr = q_rope.shape[-1]
+    N = cache_c.shape[1]
+    ql, qrf, gc, krf, ckr, Tq, t_loc = _prep_chunk(
+        q_lat, q_rope, c, kr, g, lengths, s)
+    bk = min(block_k, N)
+    padn = (-N) % bk
+    vc, vkr = cache_c, cache_kr
+    if padn:
+        vc = jnp.pad(vc, ((0, 0), (0, padn), (0, 0)))
+        vkr = jnp.pad(vkr, ((0, 0), (0, padn), (0, 0)))
+    grid = (B, (N + padn) // bk)
+    kernel = functools.partial(_prefill_kernel, s=s, H=H, scale=scale,
+                               block_k=bk)
+    fixed = lambda b, k: (b, 0, 0)
+    ctx, cc = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, k: (b,)),
+            pl.BlockSpec((1, Tq * H, r), fixed),
+            pl.BlockSpec((1, Tq * H, dr), fixed),
+            pl.BlockSpec((1, Tq, r), fixed),
+            pl.BlockSpec((1, Tq, dr), fixed),
+            pl.BlockSpec((1, t_loc, dr), fixed),
+            pl.BlockSpec((1, bk, r), lambda b, k: (b, k, 0)),
+            pl.BlockSpec((1, bk, dr), lambda b, k: (b, k, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, Tq * H, r), fixed),
+            pl.BlockSpec((1, t_loc, r), fixed),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Tq * H, r), jnp.float32),
+            jax.ShapeDtypeStruct((B, t_loc, r), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((Tq * H,), jnp.float32),      # running max
+            pltpu.VMEM((Tq * H,), jnp.float32),      # running sum
+            pltpu.VMEM((Tq * H, r), jnp.float32),    # weighted latent accum
+            pltpu.VMEM((t_loc, r), jnp.float32),     # chunk-tail states
+        ],
+        interpret=interpret,
+    )(offsets.astype(jnp.int32), ql, qrf, gc, krf, ckr, vc, vkr)
+    return ctx.reshape(B, Tq, H, r)[:, :T], cc, ckr
+
+
+# ---------------------------------------------------------------------------
+# paged pool variant: gathered reads AND gathered in-place writes
+# ---------------------------------------------------------------------------
+
+def _quant_rows(rows):
+    """In-register twin of runtime/compression.py::symmetric_quantize
+    (bits=8, axis=-1): per-row scale + round/clip. Returns (q fp32, scale)."""
+    ax = jnp.maximum(jnp.max(jnp.abs(rows), axis=-1), 1e-12)
+    sc = ax / _QMAX
+    return jnp.clip(jnp.round(rows / sc[:, None]), -_QMAX, _QMAX), sc
+
+
+def _paged_prefill_kernel(pt_ref, meta_ref, ql_ref, qr_ref, gc_ref, kr_ref,
+                          ckr_ref, pc_ref, pkr_ref, *rest,
+                          s: int, H: int, scale: float, page: int,
+                          quantized: bool):
+    if quantized:
+        (sc_ref, skr_ref, o_ref, oc_ref, okr_ref, osc_ref, oskr_ref,
+         m_ref, l_ref, acc_ref, ccs_ref) = rest
+    else:
+        o_ref, oc_ref, okr_ref, m_ref, l_ref, acc_ref, ccs_ref = rest
+    b = pl.program_id(0)
+    ki = pl.program_id(1)
+    nk = pl.num_programs(1)
+    off = meta_ref[b, 0]
+    j0 = meta_ref[b, 1]
+    nlive = meta_ref[b, 2]
+    ql = ql_ref[0].astype(jnp.float32)               # [Tq*H, r]
+    qr = qr_ref[0].astype(jnp.float32)               # [Tq*H, dr]
+    t_loc = ccs_ref.shape[0]
+
+    @pl.when(ki == 0)
+    def _seed():
+        _seed_self_track(ql, qr, gc_ref, kr_ref, scale, s, H,
+                         m_ref, l_ref, acc_ref, ccs_ref)
+
+    # chunk track: the gathered physical page, dequantized in-register for
+    # int8 pools, with the local finalized chunks overlaid raw (fp32) — the
+    # same values the reference graph overlays into its dequantized view
+    raw_c = pc_ref[0]                                # [page, r] pool dtype
+    raw_kr = pkr_ref[0]
+    kc = raw_c.astype(jnp.float32)
+    krc = raw_kr.astype(jnp.float32)
+    if quantized:
+        kc = kc * sc_ref[0][:, None]
+        krc = krc * skr_ref[0][:, None]
+    sel = _overlay_sel(ki * page, j0, page, t_loc)
+    ov = jnp.sum(sel, axis=1) > 0.5
+    cc = ccs_ref[...]
+    ckr = ckr_ref[0].astype(jnp.float32)
+    if not quantized:
+        # fp pools: cast through the pool dtype so the overlay equals what
+        # a later chunk reads back from the written page
+        cc = cc.astype(pc_ref.dtype).astype(jnp.float32)
+        ckr = ckr.astype(pkr_ref.dtype).astype(jnp.float32)
+    kc = jnp.where(ov[:, None], sel @ cc, kc)
+    krc = jnp.where(ov[:, None], sel @ ckr, krc)
+    _chunk_block_update(ql, qr, kc, krc, off, ki * page, scale, s, H,
+                        m_ref, l_ref, acc_ref)
+
+    @pl.when(ki == nk - 1)
+    def _final():
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-30)[:, None]).astype(o_ref.dtype)
+
+    # fused pool write: the out blocks alias the pool and each grid step
+    # fully rewrites its target page — live chunk rows get the fresh state
+    # (requantized per-row for int8), everything else passes the fetched
+    # content through. Steps outside [ws, we] (and inactive rows) target
+    # the trash page, so no real page is ever half-written.
+    slot_row = ki * page + jax.lax.broadcasted_iota(
+        jnp.int32, (page, 1), 0)[:, 0]
+    wr = (slot_row >= j0) & (slot_row < j0 + nlive)
+    rows_c = sel @ ccs_ref[...]                      # [page, r] fp32
+    rows_kr = sel @ ckr_ref[0].astype(jnp.float32)
+    if quantized:
+        qc, scc = _quant_rows(rows_c)
+        qkr, sckr = _quant_rows(rows_kr)
+        oc_ref[0] = jnp.where(wr[:, None], qc.astype(oc_ref.dtype), raw_c)
+        okr_ref[0] = jnp.where(wr[:, None], qkr.astype(okr_ref.dtype),
+                               raw_kr)
+        osc_ref[0] = jnp.where(wr, scc, sc_ref[0])
+        oskr_ref[0] = jnp.where(wr, sckr, skr_ref[0])
+    else:
+        oc_ref[0] = jnp.where(wr[:, None], rows_c.astype(oc_ref.dtype),
+                              raw_c)
+        okr_ref[0] = jnp.where(wr[:, None], rows_kr.astype(okr_ref.dtype),
+                               raw_kr)
+
+
+def mtla_prefill_paged_pallas(q_lat, q_rope, c, kr, g, pool_c, pool_kr,
+                              page_table, offsets, lengths, active,
+                              s: int, scale: float, *, scale_c=None,
+                              scale_kr=None, interpret: bool = False):
+    """Fused continuation prefill straight over the paged latent pool.
+
+    Array layout as ``mtla_prefill_pallas`` plus the pool leaves of
+    core/attention.py::init_attn_cache(paged=...): pool_c [P,page,r] /
+    pool_kr [P,page,dr] with P = logical pool + 1 trash page, page_table
+    [B,n] int32 (entries >= P-1 unmapped), per-row fp32 scales for int8
+    pools, and ``active`` [B] bool masking rows this call prefills.
+
+    The page table and per-row write metadata are scalar-prefetch operands:
+    each (b, k) grid step DMAs physical page ``page_table[b, k]`` for the
+    attention sweep, and the aliased pool outputs write back through a
+    second gathered index map that targets the trash page outside the row's
+    write range — reads, merge, attention, quantization and the page write
+    all happen in one pass over the pool.
+
+    Returns (ctx_lat [B,T,H,r] fp32, pool_c', pool_kr', scale_c', scale_kr')
+    — the new pool leaves replace the cache's (scales None for fp pools).
+    """
+    B, T, H, r = q_lat.shape
+    dr = q_rope.shape[-1]
+    P, page, _ = pool_c.shape
+    n = page_table.shape[1]
+    quantized = scale_c is not None
+    ql, qrf, gc, krf, ckr, Tq, t_loc = _prep_chunk(
+        q_lat, q_rope, c, kr, g, lengths, s)
+
+    offsets = offsets.astype(jnp.int32)
+    lengths = lengths.astype(jnp.int32)
+    j0 = offsets // s
+    nlive = jnp.where(active, (lengths - 1) // s + 1, 0)
+    has = (nlive > 0) & (j0 // page < n)
+    ws = jnp.where(has, j0 // page, 1)
+    we = jnp.where(has, jnp.minimum((j0 + jnp.maximum(nlive, 1) - 1) // page,
+                                    n - 1), 0)
+    meta = jnp.stack([offsets, j0, nlive, ws, we], axis=1)   # [B, 5]
+
+    def _att_page(b, k, pt, meta):
+        return (jnp.minimum(pt[b, k], P - 1), 0, 0)
+
+    def _wr_page(b, k, pt, meta):
+        in_w = (k >= meta[b, 3]) & (k <= meta[b, 4])
+        return (jnp.where(in_w, jnp.minimum(pt[b, k], P - 1), P - 1), 0, 0)
+
+    fixed = lambda b, k, pt, meta: (b, 0, 0)
+    in_specs = [
+        pl.BlockSpec((1, Tq * H, r), fixed),
+        pl.BlockSpec((1, Tq * H, dr), fixed),
+        pl.BlockSpec((1, Tq, r), fixed),
+        pl.BlockSpec((1, Tq, dr), fixed),
+        pl.BlockSpec((1, t_loc, dr), fixed),
+        pl.BlockSpec((1, page, r), _att_page),
+        pl.BlockSpec((1, page, dr), _att_page),
+    ]
+    args = [ql, qrf, gc, krf, ckr, pool_c, pool_kr]
+    out_specs = [
+        pl.BlockSpec((1, Tq * H, r), fixed),
+        pl.BlockSpec((1, page, r), _wr_page),
+        pl.BlockSpec((1, page, dr), _wr_page),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((B, Tq * H, r), jnp.float32),
+        jax.ShapeDtypeStruct(pool_c.shape, pool_c.dtype),
+        jax.ShapeDtypeStruct(pool_kr.shape, pool_kr.dtype),
+    ]
+    # alias keys count the two scalar-prefetch operands first
+    aliases = {7: 1, 8: 2}
+    if quantized:
+        att_scale = lambda b, k, pt, meta: (jnp.minimum(pt[b, k], P - 1), 0)
+
+        def _wr_scale(b, k, pt, meta):
+            in_w = (k >= meta[b, 3]) & (k <= meta[b, 4])
+            return (jnp.where(in_w, jnp.minimum(pt[b, k], P - 1), P - 1), 0)
+
+        in_specs += [pl.BlockSpec((1, page), att_scale),
+                     pl.BlockSpec((1, page), att_scale)]
+        args += [scale_c, scale_kr]
+        out_specs += [pl.BlockSpec((1, page), _wr_scale),
+                      pl.BlockSpec((1, page), _wr_scale)]
+        out_shape += [jax.ShapeDtypeStruct(scale_c.shape, scale_c.dtype),
+                      jax.ShapeDtypeStruct(scale_kr.shape, scale_kr.dtype)]
+        aliases = {7: 1, 8: 2, 9: 3, 10: 4}
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, n),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        scratch_shapes=[
+            pltpu.VMEM((Tq * H,), jnp.float32),      # running max
+            pltpu.VMEM((Tq * H,), jnp.float32),      # running sum
+            pltpu.VMEM((Tq * H, r), jnp.float32),    # weighted latent accum
+            pltpu.VMEM((t_loc, r), jnp.float32),     # chunk-tail states
+        ],
+    )
+    kernel = functools.partial(_paged_prefill_kernel, s=s, H=H, scale=scale,
+                               page=page, quantized=quantized)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=out_shape,
+        input_output_aliases=aliases,
+        interpret=interpret,
+    )(page_table, meta, *args)
+    ctx = out[0].reshape(B, Tq, H, r)[:, :T]
+    if quantized:
+        return ctx, out[1], out[2], out[3], out[4]
+    return ctx, out[1], out[2], None, None

@@ -1,9 +1,12 @@
 """jit'd public wrappers for the Pallas kernels.
 
 On CPU (this container) the kernels execute with interpret=True so the exact
-kernel bodies are validated; on TPU they compile to Mosaic. ``use_pallas``
-in AttentionConfig routes the model through these instead of the pure-jnp
-paths (the TPU production configuration).
+kernel bodies are validated; on TPU they compile to Mosaic. Backend
+selection lives in core/dispatch.py (``auto`` | ``ref`` | ``pallas``): the
+model and serving layers never call these directly, and every wrapper here
+has a pure-jnp twin (core/mtla.py / kernels/ref.py) the dispatcher falls
+back to on ``ref``. See docs/kernels.md for the kernel inventory, grid
+layouts, and fallback rules.
 """
 from __future__ import annotations
 
@@ -15,6 +18,7 @@ import jax.numpy as jnp
 from .mtla_attn import mtla_attn_pallas
 from .mtla_decode import mtla_decode_paged_pallas, mtla_decode_pallas
 from .mtla_merge import mtla_merge_pallas
+from .mtla_prefill import mtla_prefill_paged_pallas, mtla_prefill_pallas
 
 
 def _interpret() -> bool:
@@ -23,8 +27,12 @@ def _interpret() -> bool:
 
 @functools.partial(jax.jit, static_argnames=("s", "block_t"))
 def mtla_merge(c, u, vpe, s: int, block_t: int = 512):
-    """Fused gate + temporal merge. c [B,T,r] (T padded to s by caller),
-    u [B,T,h], vpe [T,h] -> (P, C_hat)."""
+    """Fused hyper-gate + chunked temporal merge (training path).
+
+    c [B,T,r] latents (T padded to a multiple of s by the caller), u [B,T,h]
+    token-track projections, vpe [T,h] chunk-PE projections. Returns
+    (P [B,T,r], C_hat [B,t,r]) in c's dtype, t = T // s.
+    """
     return mtla_merge_pallas(c, u, vpe, s, block_t=block_t,
                              interpret=_interpret())
 
@@ -34,6 +42,14 @@ def mtla_merge(c, u, vpe, s: int, block_t: int = 512):
 def mtla_attn(q_nope, q_rope, k_chunk, v_chunk, kr_chunk,
               k_self, v_self, kr_self, s: int, scale: float,
               block_q: int = 256, block_k: int = 256):
+    """Fused compressed MTLA training attention (fresh positions 0..T-1).
+
+    Head-major layout: q_nope [B,H,T,dh], q_rope [B,H,T,dr]; finalized-chunk
+    track k_chunk/v_chunk [B,H,t,dh] + kr_chunk [B,t,dr]; self track
+    k_self/v_self [B,H,T,dh] + kr_self [B,T,dr]. Returns ctx [B,H,T,dh] in
+    q_nope's dtype. Callers with scattered positions must stay on the ref
+    backend (core/dispatch.py enforces this via the ``fresh`` flag).
+    """
     return mtla_attn_pallas(q_nope, q_rope, k_chunk, v_chunk, kr_chunk,
                             k_self, v_self, kr_self, s, scale,
                             block_q=block_q, block_k=block_k,
@@ -43,6 +59,12 @@ def mtla_attn(q_nope, q_rope, k_chunk, v_chunk, kr_chunk,
 @functools.partial(jax.jit, static_argnames=("scale", "block_k"))
 def mtla_decode(q_lat, q_rope, cache_c, cache_kr, j, scale: float,
                 block_k: int = 512):
+    """Fused absorbed decode attention over the dense latent cache.
+
+    q_lat [B,H,r] absorbed queries, q_rope [B,H,dr]; cache_c [B,t,r] /
+    cache_kr [B,t,dr] (any float dtype, read as fp32); j [B] last valid
+    slot per sequence. Returns ctx_lat [B,H,r] fp32.
+    """
     return mtla_decode_pallas(q_lat, q_rope, cache_c, cache_kr, j, scale,
                               block_k=block_k, interpret=_interpret())
 
@@ -50,9 +72,58 @@ def mtla_decode(q_lat, q_rope, cache_c, cache_kr, j, scale: float,
 @functools.partial(jax.jit, static_argnames=("scale",))
 def mtla_decode_paged(q_lat, q_rope, pool_c, pool_kr, page_table, j,
                       scale: float, scale_c=None, scale_kr=None):
-    """Decode attention over the paged latent pool (serving/cache.py
-    layout); scale_c/scale_kr enable the int8 per-row dequant path."""
+    """Fused decode attention over the paged latent pool (serving layout).
+
+    pool_c [P,page,r] / pool_kr [P,page,dr] shared physical pages,
+    page_table [B,n] int32 (entries >= P-1 unmapped), j [B] last valid
+    logical chunk slot. Passing per-row fp32 scales scale_c/scale_kr
+    [P,page] enables the int8 in-register dequant path. Returns ctx_lat
+    [B,H,r] fp32.
+    """
     return mtla_decode_paged_pallas(q_lat, q_rope, pool_c, pool_kr,
                                     page_table, j, scale, scale_c=scale_c,
                                     scale_kr=scale_kr,
                                     interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("s", "scale", "block_k"))
+def mtla_prefill(q_lat, q_rope, c, kr, g, cache_c, cache_kr,
+                 offsets, lengths, s: int, scale: float,
+                 block_k: int = 128):
+    """Fused chunked continuation prefill over the dense latent cache.
+
+    q_lat [B,T,H,r] absorbed chunk queries, q_rope [B,T,H,dr]; c [B,T,r]
+    post-norm latents, kr [B,T,dr] RoPE'd keys, g [B,T] hyper-net gates;
+    cache_c [B,N,r] / cache_kr [B,N,dr]; offsets [B] stride-aligned
+    absolute chunk starts, lengths [B] real chunk lengths (pad tokens
+    beyond them are masked out of the merge and the cache write). Returns
+    (ctx_lat [B,T,H,r] fp32, cc [B,t,r] fp32, ckr [B,t,dr] fp32) — the
+    caller scatters cc/ckr at absolute chunk slots via
+    core/mtla.py::dense_prefill_write_at.
+    """
+    return mtla_prefill_pallas(q_lat, q_rope, c, kr, g, cache_c, cache_kr,
+                               offsets, lengths, s, scale, block_k=block_k,
+                               interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("s", "scale"))
+def mtla_prefill_paged(q_lat, q_rope, c, kr, g, pool_c, pool_kr,
+                       page_table, offsets, lengths, active,
+                       s: int, scale: float, scale_c=None, scale_kr=None):
+    """Fused chunked continuation prefill straight over the paged pool.
+
+    Array layout as ``mtla_prefill`` plus the pool leaves (pool_c
+    [P,page,r], pool_kr [P,page,dr], page_table [B,n], optional per-row
+    int8 scales) and ``active`` [B] bool masking the rows this call
+    prefills. The finalized chunk rows are written into the pool inside
+    the kernel through a gathered, aliased out spec (no separate scatter
+    pass); inactive rows and out-of-range steps land on the pool's trash
+    page. Returns (ctx_lat [B,T,H,r] fp32, pool_c', pool_kr', scale_c',
+    scale_kr') — new pool leaves to splice back into the cache (scales
+    are None for fp pools).
+    """
+    return mtla_prefill_paged_pallas(q_lat, q_rope, c, kr, g, pool_c,
+                                     pool_kr, page_table, offsets, lengths,
+                                     active, s, scale, scale_c=scale_c,
+                                     scale_kr=scale_kr,
+                                     interpret=_interpret())

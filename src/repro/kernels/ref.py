@@ -57,6 +57,62 @@ def mtla_attn_ref(q_nope, q_rope, k_chunk, v_chunk, kr_chunk,
     return ctx
 
 
+def mtla_prefill_ref(q_lat, q_rope, c, kr, g, view_c, view_kr,
+                     offsets, lengths, s: int, scale: float):
+    """Absorbed-form continuation prefill (oracle for kernels/mtla_prefill.py).
+
+    q_lat [B,T,H,r] absorbed queries, q_rope [B,T,H,dr]; c [B,T,r] chunk
+    latents, kr [B,T,dr] RoPE'd keys, g [B,T] hyper-net gates; view_c
+    [B,N,r] / view_kr [B,N,dr] the dense per-slot cache view (paged pools
+    pre-materialized via core/mtla.py::paged_view); offsets [B]
+    stride-aligned absolute chunk starts, lengths [B] real chunk lengths.
+
+    Returns (ctx_lat [B,T,H,r] fp32, cc [B,t,r] fp32 chunk-tail states,
+    ckr [B,t,dr] fp32 chunk-final RoPE keys), t = ceil(T/s). Gates past
+    each row's last real token are zeroed before the merge, so cc equals
+    the lengths-clamped chunk states the cache write needs and pad tokens
+    never leak into the self track.
+    """
+    B, T, H, r = q_lat.shape
+    t = -(-T // s)
+    offsets = offsets.astype(jnp.int32)
+    last = lengths.astype(jnp.int32) - 1
+    gm = jnp.where(jnp.arange(T)[None, :] <= last[:, None],
+                   g.astype(jnp.float32), 0.0)
+    w = gm[..., None] * c.astype(jnp.float32)
+    w = jnp.pad(w, ((0, 0), (0, t * s - T), (0, 0)))
+    prefix = jnp.cumsum(w.reshape(B, t, s, r), axis=2)
+    P = prefix.reshape(B, t * s, r)[:, :T]           # [B,T,r] self track
+    cc = prefix[:, :, -1]                            # [B,t,r] chunk tails
+    idxp = jnp.minimum(jnp.arange(t)[None, :] * s + (s - 1),
+                       jnp.maximum(last, 0)[:, None])
+    ckr = jnp.take_along_axis(kr.astype(jnp.float32), idxp[:, :, None],
+                              axis=1)
+
+    N = view_c.shape[1]
+    bidx = jnp.arange(B)[:, None]
+    abs_j = offsets[:, None] // s + jnp.arange(t)[None, :]
+    chunk_c = view_c.at[bidx, abs_j].set(
+        cc.astype(view_c.dtype), mode="drop").astype(jnp.float32)
+    chunk_kr = view_kr.at[bidx, abs_j].set(
+        ckr.astype(view_kr.dtype), mode="drop").astype(jnp.float32)
+    positions = offsets[:, None] + jnp.arange(T)[None, :]
+    qlf = q_lat.astype(jnp.float32)
+    qrf = q_rope.astype(jnp.float32)
+    lc = jnp.einsum("bthr,bnr->bhtn", qlf, chunk_c)
+    lc = lc + jnp.einsum("bthp,bnp->bhtn", qrf, chunk_kr)
+    lc = lc * scale
+    allow = jnp.arange(N)[None, None, :] < (positions[:, :, None] // s)
+    lc = jnp.where(allow[:, None], lc, NEG_INF)
+    ls = (jnp.sum(qlf * P[:, :, None, :], -1)
+          + jnp.sum(qrf * kr.astype(jnp.float32)[:, :, None, :], -1)) * scale
+    logits = jnp.concatenate([lc, jnp.swapaxes(ls, 1, 2)[..., None]], -1)
+    p = jax.nn.softmax(logits, -1)
+    ctx = jnp.einsum("bhtn,bnr->bhtr", p[..., :N], chunk_c)
+    ctx = ctx + p[..., N:] * jnp.swapaxes(P[:, :, None, :], 1, 2)
+    return jnp.swapaxes(ctx, 1, 2), cc, ckr
+
+
 def mtla_decode_ref(q_lat, q_rope, cache_c, cache_kr, j, scale: float):
     """Absorbed decode attention over the latent cache.
 

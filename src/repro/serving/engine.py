@@ -521,7 +521,12 @@ class DecodeEngine:
         Slots whose cursor reaches the prompt end sample their first token
         from this call's logits and flip to DECODING; with a prefix cache,
         completed full pages publish as the cursor passes them, so
-        concurrent admissions share a long prompt mid-prefill."""
+        concurrent admissions share a long prompt mid-prefill.
+
+        With ``backend='pallas'`` the whole call runs through the fused
+        stride-aware continuation kernel (kernels/mtla_prefill.py): paged
+        pools are read and written inside the kernel, dense caches take
+        one scatter after it. See docs/kernels.md."""
         t0 = time.perf_counter()
         B = self.batch
         lmax = max(n for *_, n in chunks)

@@ -80,11 +80,15 @@ def test_chunked_matches_unchunked(kind, backend):
     assert eng.prefill_tokens == base.prefill_tokens
 
 
-@pytest.mark.parametrize("kind", ["mtla", "mla"])
-def test_chunked_matches_unchunked_paged(kind):
+@pytest.mark.parametrize("kind,backend", [
+    ("mtla", "ref"), ("mtla", "pallas"),
+    ("mla", "ref"), ("mla", "pallas")])
+def test_chunked_matches_unchunked_paged(kind, backend):
     """Chunked == unchunked on the paged pool, and pages drain at the end
-    exactly as in the unchunked engine."""
-    cfg = model(kind)
+    exactly as in the unchunked engine. backend='pallas' routes the chunk
+    rounds through the fused kernel, which reads AND writes the pool
+    in-kernel (kernels/mtla_prefill.py)."""
+    cfg = model(kind, backend)
     params = api.init_model(jax.random.PRNGKey(1), cfg)
     base = DecodeEngine(params, cfg, batch=2, max_len=64, dtype=jnp.float32,
                         burst=4, page_size=4)
@@ -97,10 +101,12 @@ def test_chunked_matches_unchunked_paged(kind):
     assert eng.pool.used_pages == 0
 
 
-def test_chunked_identity_under_prefix_cache():
+@pytest.mark.parametrize("backend", ["ref", "pallas"])
+def test_chunked_identity_under_prefix_cache(backend):
     """A prefix-cache hit is just a later chunk cursor: chunked + prefix ==
-    unchunked + prefix token-for-token, with identical hit accounting."""
-    cfg = model("mtla")
+    unchunked + prefix token-for-token, with identical hit accounting —
+    on both backends (a hit only changes the fused kernel's offsets)."""
+    cfg = model("mtla", backend)
     params = api.init_model(jax.random.PRNGKey(2), cfg)
     rng0 = np.random.default_rng(3)
     pre = rng0.integers(0, 97, size=(16,)).astype(np.int32)
@@ -197,11 +203,14 @@ def test_budget_prefix_identity_with_slot_reuse():
 # compile-count guard
 # ---------------------------------------------------------------------------
 
-def test_mixed_rounds_reuse_traces():
+@pytest.mark.parametrize("backend", ["ref", "pallas"])
+def test_mixed_rounds_reuse_traces(backend):
     """Mixed chunk+decode rounds reuse one prefill trace per bucketed chunk
     width and one burst trace: a long prompt spanning many rounds adds
-    prefill *calls*, never prefill *compiles*."""
-    cfg = model("mtla")
+    prefill *calls*, never prefill *compiles*. The fused prefill kernel is
+    shape-stable per bucket (its query pad is a static function of the
+    bucketed chunk width), so backend='pallas' holds the same guarantee."""
+    cfg = model("mtla", backend)
     params = api.init_model(jax.random.PRNGKey(6), cfg)
     rng = np.random.default_rng(7)
     reqs = [Request(rid=0, prompt=rng.integers(0, 97, size=(6,)
@@ -248,11 +257,15 @@ def test_windowed_nonring_cache_serves_chunked():
     assert eng.run(mk()) == want
 
 
-def test_chunk_tokens_rounds_up_to_stride():
+@pytest.mark.parametrize("backend", ["ref", "pallas"])
+def test_chunk_tokens_rounds_up_to_stride(backend):
     """chunk_tokens rounds up to a multiple of s, so every non-final chunk
     boundary is stride-aligned and a chunk never ends mid-stride (the
-    hyper-network merge state at a cut stride could not be resumed)."""
-    cfg = model("mtla", s=3)
+    hyper-network merge state at a cut stride could not be resumed). The
+    22-token prompt's final 4-token chunk ends mid-stride at s=3 — the
+    partial-tail case the fused kernel's lengths-clamped merge must get
+    right."""
+    cfg = model("mtla", backend, s=3)
     params = api.init_model(jax.random.PRNGKey(8), cfg)
     eng = DecodeEngine(params, cfg, batch=1, max_len=64, dtype=jnp.float32,
                        chunk_tokens=7)

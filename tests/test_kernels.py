@@ -112,3 +112,114 @@ def test_attn_kernel_matches_model_path():
         tr(args[5]), tr(args[6]), args[7], s, scale)
     np.testing.assert_allclose(np.asarray(out), np.asarray(tr(want)),
                                rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# stride-aware continuation prefill (kernels/mtla_prefill.py)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,T,H,r,dr,s,bk", [
+    (1, 6, 2, 16, 8, 1, 4), (3, 12, 4, 32, 8, 2, 4),
+    (2, 9, 4, 16, 8, 3, 8), (2, 10, 3, 16, 8, 5, 16),
+])
+def test_prefill_kernel_sweep(B, T, H, r, dr, s, bk):
+    """Fused continuation prefill vs the jnp oracle: per-row absolute
+    offsets, partial chunk tails (lengths not multiples of s), and cache
+    blocks smaller/larger than the chunk."""
+    from repro.kernels.mtla_prefill import mtla_prefill_pallas
+    N = 16
+    q_lat, q_rope = rnd(0, (B, T, H, r)), rnd(1, (B, T, H, dr))
+    c, kr = rnd(2, (B, T, r)), rnd(3, (B, T, dr))
+    g = jax.nn.sigmoid(rnd(4, (B, T)))
+    cache_c = rnd(5, (B, N, r)) * 0.1
+    cache_kr = rnd(6, (B, N, dr)) * 0.1
+    offsets = jnp.arange(B, dtype=jnp.int32) * 2 * s      # stride-aligned
+    lengths = jnp.maximum(T - jnp.arange(B), 1).astype(jnp.int32)
+    scale = 1.0 / math.sqrt(r)
+    ctx, cc, ckr = mtla_prefill_pallas(
+        q_lat, q_rope, c, kr, g, cache_c, cache_kr, offsets, lengths, s,
+        scale, block_k=bk, interpret=True)
+    wctx, wcc, wckr = ref.mtla_prefill_ref(
+        q_lat, q_rope, c, kr, g, cache_c, cache_kr, offsets, lengths, s,
+        scale)
+    for got, want in ((ctx, wctx), (cc, wcc), (ckr, wckr)):
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("quantized", [False, True])
+@pytest.mark.parametrize("s", [1, 2, 3])
+def test_prefill_paged_kernel(quantized, s):
+    """Paged fused prefill: attention matches the oracle over the dense
+    view, and the in-kernel pool writes (gathered, aliased out specs +
+    in-register int8 quant) equal the reference write helper exactly —
+    including untouched pages, partially written pages, the inactive
+    row, and int8 scales. Both paths run jitted: XLA canonicalizes the
+    quant's div-by-const to mul-by-reciprocal, so eager-vs-jit scale
+    comparisons would be 1 ulp off."""
+    import functools
+
+    from repro.core import mtla
+    from repro.kernels import ops as kops
+
+    B, T, H, r, dr, page, n = 3, 7, 2, 16, 8, 4, 4
+    P = B * n + 1                                   # last row = trash page
+    q_lat, q_rope = rnd(0, (B, T, H, r)), rnd(1, (B, T, H, dr))
+    c, kr = rnd(2, (B, T, r)), rnd(3, (B, T, dr))
+    g = jax.nn.sigmoid(rnd(4, (B, T)))
+    offsets = jnp.array([0, 2 * s, 4 * s], jnp.int32)
+    lengths = jnp.array([T, T - 1, T], jnp.int32)
+    active = jnp.array([True, True, False])
+    # rows 0/1 fully mapped; row 2 unmapped (sentinel == trash index P-1)
+    pt = np.full((B, n), P - 1, np.int32)
+    pt[0] = np.arange(n)
+    pt[1] = np.arange(n, 2 * n)
+    pt = jnp.asarray(pt)
+    scale = 1.0 / math.sqrt(r)
+    if quantized:
+        pool_c = jax.random.randint(jax.random.PRNGKey(7), (P, page, r),
+                                    -127, 128, jnp.int8)
+        pool_kr = jax.random.randint(jax.random.PRNGKey(8), (P, page, dr),
+                                     -127, 128, jnp.int8)
+        sc = jnp.abs(rnd(9, (P, page))) * 0.01 + 1e-4
+        skr = jnp.abs(rnd(10, (P, page))) * 0.01 + 1e-4
+    else:
+        pool_c, pool_kr = rnd(7, (P, page, r)) * 0.1, rnd(8, (P, page, dr)) * 0.1
+        sc = skr = None
+
+    cache = {"pool_c": pool_c, "pool_kr": pool_kr, "page_table": pt}
+    if quantized:
+        cache.update(scale_c=sc, scale_kr=skr)
+
+    @functools.partial(jax.jit, static_argnames=())
+    def oracle(cache):
+        view_c, view_kr = mtla.paged_view(cache)
+        ctx, cc, ckr = ref.mtla_prefill_ref(
+            q_lat, q_rope, c, kr, g, view_c, view_kr, offsets, lengths, s,
+            scale)
+        t = cc.shape[1]
+        live = ((jnp.arange(t)[None, :] <= ((lengths - 1) // s)[:, None])
+                & active[:, None])
+        return ctx, mtla.paged_prefill_write_at(cache, cc, ckr,
+                                                offsets // s, live)
+    wctx, wcache = oracle(cache)
+
+    got = kops.mtla_prefill_paged(q_lat, q_rope, c, kr, g, pool_c, pool_kr,
+                                  pt, offsets, lengths, active, s, scale,
+                                  sc, skr)
+    ctx, new_c, new_kr, new_sc, new_skr = got
+    # pad rows past lengths[b] attend to identical (stale-view) columns in
+    # both paths, so all T rows match, not just the real ones
+    np.testing.assert_allclose(np.asarray(ctx), np.asarray(wctx),
+                               rtol=2e-5, atol=2e-5)
+    np.testing.assert_array_equal(np.asarray(new_c),
+                                  np.asarray(wcache["pool_c"]))
+    np.testing.assert_array_equal(np.asarray(new_kr),
+                                  np.asarray(wcache["pool_kr"]))
+    if quantized:
+        np.testing.assert_array_equal(np.asarray(new_sc),
+                                      np.asarray(wcache["scale_c"]))
+        np.testing.assert_array_equal(np.asarray(new_skr),
+                                      np.asarray(wcache["scale_kr"]))
+    else:
+        assert new_sc is None and new_skr is None
