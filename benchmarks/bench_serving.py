@@ -51,8 +51,26 @@ tokens/s (which excludes prefill) would not move. ``prefill_toks`` is the
 prefill work actually done and ``vs_cold`` compares end-to-end tokens/s
 (emitted tokens over prefill + decode wall clock) against the identical
 engine with the prefix cache off — informational at this smoke scale,
-where host radix overhead and the tiny model make it hover near 1x."""
+where host radix overhead and the tiny model make it hover near 1x.
+
+The sharded section runs in a **subprocess** with 8 forced host devices
+(the parent bench process must keep its single-device view for every
+other row): a tp=1 and a tp=4 mesh engine serve the identical paged
+workload, and the rows report per-device pool bytes and two deterministic
+ratios the CI gate holds — ``per_device_vs_tp1`` (tp=4 per-device pool
+bytes over tp=1's; sharding the pool's physical rows 4 ways must keep it
+near 1/4, padding aside) and ``tokens_match`` (1 iff the tp=4 token
+streams and dispatch counts equal tp=1's — the bit-exactness and
+one-dispatch-per-round guarantees as a gated counter).
+``toks_per_s_8dev`` is informational: 8 fake devices on one CPU time-slice
+a different regime than the parent process, so it is not normalized into
+the throughput gate."""
 from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
 
 import jax
 import jax.numpy as jnp
@@ -86,6 +104,77 @@ PREFIX_PROMPT, PREFIX_SHARED, PREFIX_MAX_LEN = 40, 32, 96
 # stride-aware kernel (kernels/mtla_prefill.py, interpret-mode on CPU, so
 # vs_ref is informational off-TPU)
 PF_PROMPT, PF_CHUNK, PF_MAX_NEW = 48, 16, 1
+
+# sharded section: tp=1 vs tp=4 host-mesh engines on the paged cache
+# workload, run in a subprocess so the parent keeps one visible device
+SHARD_TP, SHARD_DEVICES = 4, 8
+_SHARD_SCRIPT = """
+import json
+import jax, jax.numpy as jnp
+from benchmarks.bench_serving import (CACHE_BURST, CACHE_MAX_LEN,
+                                      CACHE_REQUESTS, SHARD_TP, _requests,
+                                      _timed_run)
+from benchmarks.common import paper_model
+from repro.launch.mesh import serving_mesh
+from repro.models import api
+from repro.serving.engine import DecodeEngine
+
+cfg = paper_model("mtla", s=2, layers=2, d=64)
+params = api.init_model(jax.random.PRNGKey(0), cfg)
+res = {}
+for tp in (1, SHARD_TP):
+    eng = DecodeEngine(params, cfg, batch=4, max_len=CACHE_MAX_LEN,
+                       dtype=jnp.float32, burst=CACHE_BURST, page_size=8,
+                       mesh=serving_mesh(tp))
+    out = eng.run(_requests(cfg, CACHE_REQUESTS))    # warmup + tokens
+    rate = _timed_run(eng, cfg, CACHE_REQUESTS)
+    rep = eng.cache_report()
+    res[tp] = {"toks_per_s": rate,
+               "tokens": {int(k): list(map(int, v))
+                          for k, v in out.items()},
+               "pool_bytes_per_device": rep["pool_bytes_per_device"],
+               "page_bytes": rep["page_bytes"],
+               "pages_total": rep["pages_total"],
+               "prefill_calls": eng.prefill_calls,
+               "decode_calls": eng.decode_calls}
+print(json.dumps(res))
+"""
+
+
+def _sharded_rows():
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ,
+               XLA_FLAGS=f"--xla_force_host_platform_device_count="
+                         f"{SHARD_DEVICES}")
+    env["PYTHONPATH"] = os.path.join(root, "src") + os.pathsep + \
+        env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable, "-c", _SHARD_SCRIPT],
+                         capture_output=True, text=True, env=env,
+                         cwd=root, timeout=900)
+    if out.returncode != 0:
+        raise RuntimeError("sharded serving bench subprocess failed:\n"
+                           + out.stderr[-3000:])
+    data = json.loads(out.stdout.strip().splitlines()[-1])
+    d1, d4 = data["1"], data[str(SHARD_TP)]
+    match = int(d1["tokens"] == d4["tokens"]
+                and d1["prefill_calls"] == d4["prefill_calls"]
+                and d1["decode_calls"] == d4["decode_calls"])
+    ratio = d4["pool_bytes_per_device"] / max(d1["pool_bytes_per_device"],
+                                              1)
+    rows = []
+    for label, d, extra in (
+            ("tp1", d1, ""),
+            (f"tp{SHARD_TP}", d4,
+             f";per_device_vs_tp1={ratio:.3f}x;tokens_match={match}"
+             f";devices={SHARD_TP}")):
+        rows.append(
+            f"bench_serving/sharded/paper-mtla2-{label},"
+            f"{1e6 / d['toks_per_s']:.1f},"
+            f"toks_per_s_8dev={d['toks_per_s']:.1f};"
+            f"pool_bytes_per_device={d['pool_bytes_per_device']};"
+            f"pages_total={d['pages_total']}{extra}")
+    return rows
+
 
 # TTFT head-of-line section: one wave of 3 shorts + one long prompt
 # (rid 3) on 4 slots. All four admit in the same round, so unchunked TTFT
@@ -311,4 +400,6 @@ def run():
             f"prefill_toks={eng.prefill_tokens};"
             f"pages_cached={rep['pages_cached']};"
             f"pages_peak={rep['pages_peak']}")
+
+    rows.extend(_sharded_rows())
     return rows

@@ -26,6 +26,13 @@ same bench process on the same warmed graphs, so machine speed cancels
 like the memory ratios. A ratio creeping past baseline * ``--ttft-slack``
 means chunked prefill stopped cutting head-of-line blocking (e.g. chunks
 silently coalesced back into whole-prompt calls).
+
+The sharded serving rows (``bench_serving/sharded/*``) gate two more
+machine-independent quantities: ``per_device_vs_tp1`` (tp=4 per-device
+pool bytes over tp=1's — a shard-shape ratio that creeps toward 1.0 if a
+pool leaf silently falls back to replicated) under ``--mem-slack``, and
+``tokens_match`` (1 iff the tp=4 mesh engine's token streams and dispatch
+counts are identical to tp=1's) as a hard floor like the prefix counters.
 """
 from __future__ import annotations
 
@@ -82,7 +89,8 @@ def main() -> int:
     failures, checked = [], 0
     for name, bd in sorted(base.items()):
         gated = ("toks_per_s", "vs_dense_fp32", "hit_rate",
-                 "prefill_skipped", "ttft_vs_unchunked")
+                 "prefill_skipped", "ttft_vs_unchunked",
+                 "per_device_vs_tp1", "tokens_match")
         if name == args.reference or not any(k in bd for k in gated):
             continue
         cd = cur.get(name)
@@ -124,14 +132,34 @@ def main() -> int:
                     f"{name}: ttft_vs_unchunked {ratio:.3f}x > baseline "
                     f"{bd['ttft_vs_unchunked']:.3f}x * {args.ttft_slack} "
                     f"(chunked prefill stopped cutting HOL blocking)")
-        for det in ("hit_rate", "prefill_skipped"):
+        if "per_device_vs_tp1" in bd:
+            # per-device pool bytes of the tp=4 engine over tp=1's —
+            # a same-process shard-shape ratio, machine-independent like
+            # vs_dense_fp32: growth past baseline * mem-slack means the
+            # pool stopped sharding (e.g. a leaf fell back to replicated)
+            ratio = cd.get("per_device_vs_tp1", float("inf"))
+            shown = shown or f"  {ratio:.3f}x tp1 per-device " \
+                             f"(baseline {bd['per_device_vs_tp1']:.3f})"
+            if ratio > bd["per_device_vs_tp1"] * args.mem_slack:
+                status = "SHARD-REGRESSION"
+                failures.append(
+                    f"{name}: per_device_vs_tp1 {ratio:.3f}x > baseline "
+                    f"{bd['per_device_vs_tp1']:.3f}x * {args.mem_slack} "
+                    f"(the paged pool stopped sharding over the mesh)")
+        for det in ("hit_rate", "prefill_skipped", "tokens_match"):
             # deterministic counters: timing-free, so baseline is a floor
+            # (tokens_match=1 asserts tp=4 token streams and dispatch
+            # counts are identical to tp=1 — bit-exact tensor parallelism)
             if det in bd and cd.get(det, 0) < bd[det] - 1e-9:
-                status = "PREFIX-REGRESSION"
+                status = "PREFIX-REGRESSION" if det != "tokens_match" \
+                    else "SHARD-REGRESSION"
                 failures.append(
                     f"{name}: {det} {cd.get(det, 0)} < baseline {bd[det]} "
-                    f"(prefix reuse is deterministic; a drop means the "
-                    f"radix cache stopped hitting)")
+                    + ("(prefix reuse is deterministic; a drop means the "
+                       "radix cache stopped hitting)"
+                       if det != "tokens_match" else
+                       "(tp=4 serving must emit token-for-token what tp=1 "
+                       "emits, with equal dispatch counts)"))
         print(f"{status:>14}  {name}{shown}")
     print(f"checked {checked} rows, {len(failures)} failures "
           f"(normalized by {args.reference})")

@@ -287,24 +287,28 @@ def init_attn_cache(cfg: AttentionConfig, batch: int, max_len: int,
     kernel (kernels/mtla_prefill.py) expresses "skip this write" as a
     legal write to it, and the jnp paths' out-of-range drops / clip-reads
     keep their exact semantics (reads of unmapped pages were always
-    masked garbage)."""
+    masked garbage). With ``paged.shards > 1`` the rows axis is padded up
+    to a multiple of the tensor-parallel width (PagedCacheSpec.pool_rows)
+    so it shards evenly over the serving mesh's 'model' axis; the padding
+    rows are just more trash pages."""
     if cfg.kind in ("mla", "mtla"):
         s = cfg.s if cfg.kind == "mtla" else 1
         t = -(-max_len // s)
         if paged is not None:
             page = paged.page_size
             _, n, pool = paged.geometry(batch, max_len, s)
+            rows = paged.pool_rows(batch, max_len, s)
             cdt = CACHE_JNP_DTYPES[paged.cache_dtype]
             cache = {
-                "pool_c": jnp.zeros((pool + 1, page, cfg.kv_lora_rank), cdt),
-                "pool_kr": jnp.zeros((pool + 1, page, cfg.rope_head_dim),
+                "pool_c": jnp.zeros((rows, page, cfg.kv_lora_rank), cdt),
+                "pool_kr": jnp.zeros((rows, page, cfg.rope_head_dim),
                                      cdt),
                 "page_table": jnp.full((batch, n), pool, jnp.int32),
                 "pos": jnp.zeros((batch,), jnp.int32),
             }
             if paged.quantized:
-                cache["scale_c"] = jnp.zeros((pool + 1, page), jnp.float32)
-                cache["scale_kr"] = jnp.zeros((pool + 1, page), jnp.float32)
+                cache["scale_c"] = jnp.zeros((rows, page), jnp.float32)
+                cache["scale_kr"] = jnp.zeros((rows, page), jnp.float32)
             return cache
         return {
             "c": jnp.zeros((batch, t, cfg.kv_lora_rank), dtype),

@@ -34,6 +34,8 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
 
 from . import mtla
 from .nn import dense
@@ -42,6 +44,42 @@ from ..kernels import ops as kops
 from ..kernels import ref as kref
 
 BACKENDS = ("auto", "ref", "pallas")
+
+
+# ---------------------------------------------------------------------------
+# serving tensor parallelism: shard_map around the fused serving kernels
+# ---------------------------------------------------------------------------
+# GSPMD cannot partition a pallas_call, so under a tensor-parallel serving
+# mesh the decode/prefill dispatch sites below wrap the kernel in shard_map:
+# query heads split over the 'model' axis (each device runs the kernel on
+# H/tp heads) while the latent cache/pool operands ride in replicated — the
+# partitioner all-gathers the device-sharded pool rows at the shard_map
+# boundary, since every head attends over every latent. Pool *writes*
+# (continuation prefill) are head-independent, so each device computes an
+# identical full pool and the engine's pinned out_shardings re-shard the
+# rows axis afterwards (hence check_rep=False). The mesh is installed
+# per-engine through set_tp_mesh — trace-time state, the same pattern as
+# runtime/sharding.py's activation-mesh hook; the ref backend needs none of
+# this (plain jnp, GSPMD partitions it from the jit-level shardings alone).
+_TP_MESH: list = [None]
+
+
+def set_tp_mesh(mesh) -> None:
+    """Install (or clear, with None) the serving tensor-parallel mesh the
+    pallas dispatch sites consult at trace time."""
+    _TP_MESH[0] = mesh
+
+
+def _tp_mesh(heads: int):
+    """(mesh, tp) when a TP mesh is installed and ``heads`` divides over
+    its 'model' axis; (None, 1) otherwise (plain single-device dispatch)."""
+    mesh = _TP_MESH[0]
+    if mesh is None or "model" not in mesh.axis_names:
+        return None, 1
+    tp = int(mesh.shape["model"])
+    if tp <= 1 or heads % tp:
+        return None, 1
+    return mesh, tp
 
 
 def resolve(backend: Optional[str] = None, *, use_pallas: bool = False) -> str:
@@ -187,19 +225,51 @@ def mtla_prefill_continuation(q_lat, q_rope, c, kr, g, cache, offsets,
     helpers — always available, identical masking and write semantics.
     """
     paged = "pool_c" in cache
+    mesh, _ = _tp_mesh(q_lat.shape[2]) if backend == "pallas" else (None, 1)
+    hs4 = P(None, None, "model", None)      # [B,T,H,*]: heads over TP
+    r3, r2, r1 = P(None, None, None), P(None, None), P(None)
     if backend == "pallas":
         if paged:
-            ctx_lat, pool_c, pool_kr, sc, skr = kops.mtla_prefill_paged(
-                q_lat, q_rope, c, kr, g, cache["pool_c"], cache["pool_kr"],
-                cache["page_table"], offsets, lengths, active, s, scale,
-                cache.get("scale_c"), cache.get("scale_kr"))
+            quant = "scale_c" in cache
+            args = (q_lat, q_rope, c, kr, g, cache["pool_c"],
+                    cache["pool_kr"], cache["page_table"], offsets, lengths,
+                    active)
+            if mesh is None:
+                out = kops.mtla_prefill_paged(
+                    *args, s, scale, cache.get("scale_c"),
+                    cache.get("scale_kr"))
+                ctx_lat, pool_c, pool_kr, sc, skr = out
+            else:
+                specs = [hs4, hs4, r3, r3, r2, r3, r3, r2, r1, r1, r1]
+                if quant:
+                    args += (cache["scale_c"], cache["scale_kr"])
+                    specs += [r2, r2]
+
+                def run(*a):
+                    out = kops.mtla_prefill_paged(*a[:11], s, scale, *a[11:])
+                    return out[:3] + (out[3:] if quant else ())
+
+                outs = (hs4, r3, r3) + ((r2, r2) if quant else ())
+                out = shard_map(run, mesh=mesh, in_specs=tuple(specs),
+                                out_specs=outs, check_rep=False)(*args)
+                ctx_lat, pool_c, pool_kr = out[:3]
+                sc, skr = out[3:] if quant else (None, None)
             cache = dict(cache, pool_c=pool_c, pool_kr=pool_kr)
             if sc is not None:
                 cache = dict(cache, scale_c=sc, scale_kr=skr)
             return ctx_lat, cache
-        ctx_lat, cc, ckr = kops.mtla_prefill(
-            q_lat, q_rope, c, kr, g, cache["c"], cache["kr"],
-            offsets, lengths, s, scale)
+        if mesh is None:
+            ctx_lat, cc, ckr = kops.mtla_prefill(
+                q_lat, q_rope, c, kr, g, cache["c"], cache["kr"],
+                offsets, lengths, s, scale)
+        else:
+            ctx_lat, cc, ckr = shard_map(
+                lambda *a: kops.mtla_prefill(*a, s, scale),
+                mesh=mesh,
+                in_specs=(hs4, hs4, r3, r3, r2, r3, r3, r1, r1),
+                out_specs=(hs4, r3, r3), check_rep=False)(
+                    q_lat, q_rope, c, kr, g, cache["c"], cache["kr"],
+                    offsets, lengths)
     else:
         if paged:
             view_c, view_kr = mtla.paged_view(cache)
@@ -229,6 +299,16 @@ def mtla_decode_attention(q_lat, q_rope, cache_c, cache_kr, j, scale: float,
     j [B] last valid cache slot per sequence.
     """
     if backend == "pallas":
+        mesh, _ = _tp_mesh(q_lat.shape[1])
+        if mesh is not None:
+            hs = P(None, "model", None)
+            return shard_map(
+                lambda *a: kops.mtla_decode(*a, scale),
+                mesh=mesh,
+                in_specs=(hs, hs, P(None, None, None), P(None, None, None),
+                          P(None)),
+                out_specs=hs, check_rep=False)(
+                    q_lat, q_rope, cache_c, cache_kr, j)
         return kops.mtla_decode(q_lat, q_rope, cache_c, cache_kr, j, scale)
     return mtla.decode_attend_ref(q_lat, q_rope, cache_c, cache_kr, j, scale)
 
@@ -242,6 +322,20 @@ def mtla_decode_attention_paged(q_lat, q_rope, cache, j, scale: float, *,
     side streams physical pages through a scalar-prefetch page-table gather;
     the ref side materializes the dense per-slot view first."""
     if backend == "pallas":
+        mesh, _ = _tp_mesh(q_lat.shape[1])
+        if mesh is not None:
+            hs = P(None, "model", None)
+            r3, r2, r1 = P(None, None, None), P(None, None), P(None)
+            args = (q_lat, q_rope, cache["pool_c"], cache["pool_kr"],
+                    cache["page_table"], j)
+            specs = [hs, hs, r3, r3, r2, r1]
+            if "scale_c" in cache:
+                args += (cache["scale_c"], cache["scale_kr"])
+                specs += [r2, r2]
+            return shard_map(
+                lambda *a: kops.mtla_decode_paged(*a[:6], scale, *a[6:]),
+                mesh=mesh, in_specs=tuple(specs), out_specs=hs,
+                check_rep=False)(*args)
         return kops.mtla_decode_paged(
             q_lat, q_rope, cache["pool_c"], cache["pool_kr"],
             cache["page_table"], j, scale,

@@ -70,14 +70,26 @@ class PagedCacheSpec:
     ``pool_pages=0`` sizes the pool to the dense equivalent
     (batch * ceil(ceil(max_len/s) / page_size)); smaller pools trade peak
     memory for admission back-pressure (serving/cache.py::PagePool).
+
+    ``shards`` is the tensor-parallel width of the serving mesh the pool's
+    device arrays will shard over ('model' axis, runtime/sharding.py::
+    serving_shardings): the physical-rows axis is padded up to a multiple
+    of it (``pool_rows``) so the split is always even. Padding rows behave
+    as extra trash pages — the host allocator never hands them out, writes
+    through the unmapped sentinel still land on the original trash row,
+    and reads of any non-allocated row were always masked. ``shards=1``
+    (the default) reproduces the unpadded single-device layout exactly.
     """
     page_size: int = 8
     pool_pages: int = 0
     cache_dtype: str = "fp32"  # fp32 | bf16 | int8
+    shards: int = 1
 
     def __post_init__(self):
         if self.page_size < 1:
             raise ValueError(f"page_size must be >= 1, got {self.page_size}")
+        if self.shards < 1:
+            raise ValueError(f"shards must be >= 1, got {self.shards}")
         if self.cache_dtype not in CACHE_DTYPES:
             raise ValueError(
                 f"unknown cache_dtype {self.cache_dtype!r}; expected one of "
@@ -111,6 +123,15 @@ class PagedCacheSpec:
         t = -(-max_len // s)
         logical = -(-t // self.page_size)
         return t, logical, self.resolve_pool_pages(batch, logical)
+
+    def pool_rows(self, batch: int, max_len: int, s: int) -> int:
+        """Physical rows of the device pool arrays: the pool's pages plus
+        the trash page at index ``pool`` (the sentinel target), padded up
+        to a multiple of ``shards`` so a tensor-parallel mesh splits the
+        rows axis evenly. Per device that is ceil((pool+1)/tp) rows — at
+        most one page above pool/tp."""
+        rows = self.geometry(batch, max_len, s)[2] + 1
+        return -(-rows // self.shards) * self.shards
 
 
 @dataclass(frozen=True)

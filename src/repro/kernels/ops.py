@@ -7,6 +7,15 @@ model and serving layers never call these directly, and every wrapper here
 has a pure-jnp twin (core/mtla.py / kernels/ref.py) the dispatcher falls
 back to on ``ref``. See docs/kernels.md for the kernel inventory, grid
 layouts, and fallback rules.
+
+Under a tensor-parallel serving mesh the dispatcher additionally wraps the
+serving wrappers (``mtla_decode``, ``mtla_decode_paged``, ``mtla_prefill``,
+``mtla_prefill_paged``) in ``shard_map`` — GSPMD cannot partition a
+pallas_call — so here they are traced with *per-device* shapes: H is the
+local head count H/tp, while cache/pool operands arrive full-size
+(all-gathered at the shard_map boundary). Nothing in these wrappers may
+assume a global head count, and the jit decorators below simply inline
+under the shard_map trace.
 """
 from __future__ import annotations
 

@@ -1,4 +1,10 @@
-"""Production mesh builders.
+"""Mesh construction: the one place device meshes are validated and built.
+
+Every mesh in the repo — the production TPU shapes, the serving engine's
+tensor-parallel mesh, spec strings from CLI flags, and the forced-host-device
+meshes the distributed tests build — goes through ``build_mesh`` /
+``validate_mesh_shape`` here, so "asked for more devices than exist" fails
+with one clear message instead of a jax internals trace.
 
 Defined as FUNCTIONS (not module-level constants) so importing this module
 never touches jax device state — jax locks the device count on first init,
@@ -6,7 +12,8 @@ and only launch/dryrun.py is allowed to set the 512-device XLA flag.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+import math
+from typing import Optional, Sequence, Tuple
 
 import jax
 
@@ -26,10 +33,78 @@ HBM_BW = 819e9                  # bytes/s per chip
 ICI_BW = 50e9                   # bytes/s per link
 
 
+def validate_mesh_shape(shape: Sequence[int], axes: Sequence[str],
+                        *, devices: Optional[int] = None
+                        ) -> Tuple[Tuple[int, ...], Tuple[str, ...]]:
+    """Check a requested mesh shape against the visible device count.
+
+    Returns the normalized ``(shape, axes)`` tuples, or raises ValueError
+    with an actionable message — including the XLA flag that forces host
+    devices on CPU — when the product exceeds ``devices`` (default:
+    ``jax.device_count()``), when an axis size is < 1, or when shape and
+    axes disagree in length. The shared front door for every mesh builder
+    (production shapes, serving TP, CLI specs, test fixtures)."""
+    shape = tuple(int(s) for s in shape)
+    axes = tuple(str(a) for a in axes)
+    if len(shape) != len(axes):
+        raise ValueError(f"mesh shape {shape} has {len(shape)} dims but "
+                         f"{len(axes)} axis names {axes}")
+    if any(s < 1 for s in shape):
+        raise ValueError(f"mesh axis sizes must be >= 1, got "
+                         f"{dict(zip(axes, shape))}")
+    if len(set(axes)) != len(axes):
+        raise ValueError(f"duplicate mesh axis names in {axes}")
+    need = math.prod(shape)
+    have = jax.device_count() if devices is None else int(devices)
+    if need > have:
+        raise ValueError(
+            f"mesh {dict(zip(axes, shape))} needs {need} devices but only "
+            f"{have} visible; on CPU force host devices with "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={need}")
+    return shape, axes
+
+
+def build_mesh(shape: Sequence[int], axes: Sequence[str]):
+    """Validated ``jax.make_mesh``: every mesh construction routes here."""
+    shape, axes = validate_mesh_shape(shape, axes)
+    return jax.make_mesh(shape, axes)
+
+
+def serving_mesh(tp: int = 1):
+    """The serving engine's tensor-parallel mesh: one 'model' axis of
+    ``tp`` devices (attention heads + the latent page pool shard over it;
+    see docs/serving.md "Sharding"). Returns None for tp <= 1 — the engine
+    then runs the plain single-device path."""
+    if tp <= 1:
+        return None
+    return build_mesh((tp,), ("model",))
+
+
+def axis_size(mesh, name: str) -> int:
+    """Size of ``name`` in ``mesh`` (1 when absent or mesh is None) — the
+    shared axis-size probe for sharding rules and the serving engine."""
+    if mesh is None:
+        return 1
+    return int(mesh.shape[name]) if name in mesh.axis_names else 1
+
+
+def parse_mesh_spec(spec: str) -> Tuple[Tuple[int, ...], Tuple[str, ...]]:
+    """Parse an ``'axis:size,axis:size'`` CLI spec into (shape, axes)."""
+    axes, sizes = [], []
+    for part in spec.split(","):
+        name, _, size = part.partition(":")
+        if not size:
+            raise ValueError(f"bad mesh spec part {part!r}; expected "
+                             "'axis:size' entries, e.g. 'data:4,model:2'")
+        axes.append(name.strip())
+        sizes.append(int(size))
+    return tuple(sizes), tuple(axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes)
+    return build_mesh(shape, axes)
 
 
 def make_mesh(spec: Optional[str] = None):
@@ -38,9 +113,4 @@ def make_mesh(spec: Optional[str] = None):
         return make_production_mesh(multi_pod=False)
     if spec == "multi":
         return make_production_mesh(multi_pod=True)
-    axes, sizes = [], []
-    for part in spec.split(","):
-        name, size = part.split(":")
-        axes.append(name.strip())
-        sizes.append(int(size))
-    return jax.make_mesh(tuple(sizes), tuple(axes))
+    return build_mesh(*parse_mesh_spec(spec))

@@ -5,6 +5,13 @@ axes, with live occupancy).
 
     PYTHONPATH=src python -m repro.launch.serve --arch mtla_paper --smoke \
         --requests 8 --batch 4 --max-new 32 --burst 8 --backend auto
+
+``--tp N`` (or an explicit ``--mesh 'model:N'``) serves tensor-parallel:
+attention heads and the paged pool's physical pages shard over a 'model'
+mesh axis, emitted tokens stay identical to single-device, and the report
+gains a per-device vs global bytes line. On CPU, force host devices with
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (docs/serving.md,
+"Sharding").
 """
 from __future__ import annotations
 
@@ -18,6 +25,7 @@ from ..configs import ALL_IDS, get_config, smoke_config
 from ..core import dispatch
 from ..core.types import ServeConfig, mla_variant, mtla_variant
 from ..models import api
+from .mesh import build_mesh, parse_mesh_spec, serving_mesh
 from ..serving.engine import DecodeEngine, Request, cache_bytes_split
 from ..serving.sampling import SamplingParams
 
@@ -79,6 +87,16 @@ def main(argv=None):
                     help="give the last N requests priority 1 (with "
                          "--preemption they evict resident priority-0 "
                          "slots instead of queueing behind them)")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor-parallel width: shard attention heads and "
+                         "the paged pool's physical pages over a 'model' "
+                         "mesh axis (1 = single device; on CPU force "
+                         "devices with XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N)")
+    ap.add_argument("--mesh", default=None,
+                    help="explicit mesh spec 'axis:size,...' (e.g. "
+                         "'model:4'); overrides --tp — serving uses the "
+                         "'model' axis, other axes must have size 1")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="0 = greedy; > 0 samples with per-request seeds")
     ap.add_argument("--top-k", type=int, default=0)
@@ -97,6 +115,8 @@ def main(argv=None):
     else:
         cfg = get_config(args.arch, attn=args.attn, s=args.s)
 
+    mesh = (build_mesh(*parse_mesh_spec(args.mesh)) if args.mesh
+            else serving_mesh(args.tp))
     params = api.init_model(jax.random.PRNGKey(args.seed), cfg)
     eng = DecodeEngine(params, cfg, batch=args.batch, max_len=args.max_len,
                        dtype=jnp.float32, backend=args.backend,
@@ -106,7 +126,8 @@ def main(argv=None):
                        pool_pages=args.pool_pages,
                        cache_dtype=args.cache_dtype,
                        prefix_cache=args.prefix_cache,
-                       preemption=args.preemption)
+                       preemption=args.preemption,
+                       mesh=mesh)
     sp = SamplingParams(temperature=args.temperature, top_k=args.top_k,
                         top_p=args.top_p)
     rng = np.random.default_rng(args.seed)
@@ -131,8 +152,9 @@ def main(argv=None):
           else f"{resolved} (from {eng.cfg.backend})")
     chunk = (f" chunk={eng.chunk_tokens}" if eng.chunk_tokens else "") + \
         (f" budget={eng.round_budget}" if eng.round_budget else "")
+    tp = f" tp={eng.tp}" if eng.tp > 1 else ""
     print(f"arch={cfg.name} attn={cfg.attn.kind} s={cfg.attn.s} "
-          f"backend={be} burst={args.burst}{chunk} sampling={mode}")
+          f"backend={be} burst={args.burst}{chunk}{tp} sampling={mode}")
     ok = len(out) - len(eng.failed)
     print(f"{ok} requests served"
           + (f", {len(eng.failed)} rejected" if eng.failed else "")
@@ -162,6 +184,12 @@ def main(argv=None):
               f"{rep['pages_peak'] / max(rep['pages_total'], 1):.0%} peak "
               f"occupancy) / pool allocated {rep['allocated']:,} bytes; "
               f"{eng.deferrals} deferred admissions")
+        if eng.tp > 1:
+            print(f"sharded: {rep['allocated_per_device']:,} bytes/device "
+                  f"(pool {rep['pool_bytes_per_device']:,}) vs "
+                  f"{rep['allocated']:,} global over {rep['devices']} "
+                  f"devices — pages split over the mesh 'model' axis, "
+                  f"tables replicated")
         print(f"mapped split: private {rep['private']:,} / shared "
               f"{rep['shared']:,} / cached {rep['cached']:,} bytes "
               f"({rep['pages_private']}/{rep['pages_shared']}/"
@@ -184,6 +212,12 @@ def main(argv=None):
         print(f"kv-cache bytes: active {active:,} (peak {eng.peak_active}/"
               f"{args.batch} slots) / allocated {allocated:,} "
               f"({cfg.attn.kv_cache_per_token} elems/token/layer)")
+        if eng.tp > 1:
+            rep = eng.cache_report()
+            print(f"sharded: {rep['allocated_per_device']:,} bytes/device "
+                  f"vs {rep['allocated']:,} global over {rep['devices']} "
+                  f"devices (dense slot caches replicate; use --page-size "
+                  f"to shard the pool)")
     return out
 
 

@@ -20,13 +20,13 @@ import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+# mesh construction + axis probing live in launch/mesh.py (the one shared
+# mesh utility); the sharding rules here only consume meshes
+from ..launch.mesh import axis_size as _axis_size
+
 
 def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
     return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
-
-
-def _axis_size(mesh: Mesh, name: str) -> int:
-    return mesh.shape[name] if name in mesh.axis_names else 1
 
 
 def _fits(dim: int, size: int) -> bool:
@@ -164,6 +164,38 @@ def cache_shardings(caches, mesh: Mesh, *, stacked: bool = True,
         if name == "conv" and len(body) >= 3 and _fits(body[2], model):
             dims[2] = "model"
         return NamedSharding(mesh, P(*lead, *dims))
+
+    return jax.tree_util.tree_unflatten(
+        treedef, [mk(p, l) for p, l in flat])
+
+
+def serving_shardings(caches, mesh: Mesh):
+    """NamedSharding tree for the serving engine's cache pytree under a
+    tensor-parallel ('model') mesh.
+
+    The paged latent pool leaves (``pool_c``/``pool_kr`` and the int8 scale
+    rows) are layer-stacked ``[L, rows, page, ...]``; their physical-page
+    **rows** axis shards over 'model' — the latent cache has no head axis
+    (that is the MLA/MTLA absorption trick), so tensor parallelism splits
+    the *pages* instead: physical page p lives on device p // (rows/tp),
+    and per-device resident cache bytes drop by ~1/tp. Everything else
+    (page tables, positions, dense latent caches, SlotState) is replicated:
+    those leaves are tiny, host-mutated between rounds, and every device
+    needs the full page table to gather its local pages' logical slots.
+    The rows axis is padded to a multiple of tp at init
+    (core/types.py::PagedCacheSpec.pool_rows) so the split is always even."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(caches)
+    model = _axis_size(mesh, "model")
+    # local import: serving already imports this module at engine setup
+    from ..serving.cache import POOL_LEAVES
+
+    def mk(path, leaf):
+        name = str(getattr(path[-1], "key", path[-1]))
+        if name in POOL_LEAVES and leaf.ndim >= 2 \
+                and _fits(leaf.shape[1], model):
+            rest = [None] * (leaf.ndim - 2)
+            return NamedSharding(mesh, P(None, "model", *rest))
+        return NamedSharding(mesh, P())
 
     return jax.tree_util.tree_unflatten(
         treedef, [mk(p, l) for p, l in flat])

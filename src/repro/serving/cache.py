@@ -47,6 +47,7 @@ from __future__ import annotations
 
 from typing import Dict, List, Sequence, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -67,11 +68,21 @@ class PagePool:
         self.spec, self.batch, self.max_len, self.s = spec, batch, max_len, s
         self.page_size = spec.page_size
         # geometry shared with the device cache init (core/attention.py):
-        # the sentinel must equal the device pool size for writes through
+        # the sentinel must point at the trash row for writes through
         # unmapped entries to drop
         self.t_max, self.logical_pages, self.total_pages = \
             spec.geometry(batch, max_len, s)
         self.sentinel = self.total_pages               # unmapped marker
+        # shard-aware page IDs: under a tensor-parallel serving mesh the
+        # device pool's rows axis (padded to spec.pool_rows) splits evenly
+        # over 'model', so physical page p resides on device
+        # p // rows_per_shard. Page IDs stay global — the allocator, radix
+        # tree, and page table never change meaning with mesh width — but
+        # _alloc balances fresh allocations across shards so mapped pages
+        # (and decode-gather traffic) spread over the mesh.
+        self.shards = spec.shards
+        self.rows_per_shard = \
+            spec.pool_rows(batch, max_len, s) // spec.shards
         self.evictor = None         # serving/prefix.py::PrefixCache hook
         self.reset()
 
@@ -205,14 +216,33 @@ class PagePool:
             self.evicted_pages += 1
 
     # --- lazy mapping -------------------------------------------------------
+    def shard_of(self, page: int) -> int:
+        """Mesh device holding physical ``page`` (0 on a 1-wide mesh):
+        the pool's rows axis shards contiguously over 'model'."""
+        return page // self.rows_per_shard
+
     def _alloc(self) -> int:
         """Pop a free physical page, reclaiming idle tree pages (LRU,
         through the registered evictor) when the free list is dry. The
         reservation invariant (reserved_total + pinned <= total) guarantees
-        this succeeds for any allocation inside a reservation."""
+        this succeeds for any allocation inside a reservation. On a
+        tensor-parallel mesh (shards > 1) the pop prefers the shard with
+        the most free pages — LIFO within the shard — balancing mapped
+        pages across devices; physical placement never changes decoded
+        tokens (attention reads through the page table), so shards=1
+        keeps the exact historical LIFO order."""
         if not self.free and self.evictor is not None:
             self.evictor.evict(1)
         assert self.free, "page pool exhausted inside a reservation"
+        if self.shards > 1:
+            counts: Dict[int, int] = {}
+            for p in self.free:
+                sh = self.shard_of(p)
+                counts[sh] = counts.get(sh, 0) + 1
+            best = max(counts, key=lambda sh: (counts[sh], -sh))
+            for i in range(len(self.free) - 1, -1, -1):
+                if self.shard_of(self.free[i]) == best:
+                    return self.free.pop(i)
         return self.free.pop()
 
     def map_private(self, slot: int) -> int:
@@ -428,3 +458,38 @@ def paged_pool_bytes(caches) -> Tuple[int, int]:
 
     rec(caches)
     return per_page, overhead
+
+
+def _leaf_device_bytes(leaf) -> int:
+    """Bytes of ``leaf`` resident on one device: the shard shape under its
+    NamedSharding (replicated leaves count full size on every device)."""
+    sharding = getattr(leaf, "sharding", None)
+    if sharding is not None and hasattr(sharding, "shard_shape"):
+        shape = sharding.shard_shape(leaf.shape)
+    else:
+        shape = leaf.shape
+    return int(np.prod(shape, dtype=np.int64)) * leaf.dtype.itemsize
+
+
+def per_device_bytes(caches) -> int:
+    """Cache bytes resident on ONE mesh device. On a tensor-parallel
+    serving mesh the pool leaves shard their rows axis, so this is
+    ~overhead + pool/tp; on a single device it equals the global
+    allocation. The per-device half of DecodeEngine.cache_report."""
+    return sum(_leaf_device_bytes(leaf)
+               for leaf in jax.tree_util.tree_leaves(caches)
+               if hasattr(leaf, "dtype"))
+
+
+def per_device_pool_bytes(caches) -> int:
+    """One device's share of the pool leaves alone (pool_c/pool_kr +
+    int8 scales) — the quantity the ~1/tp memory claim is about."""
+    total = 0
+
+    def grab(k, v):
+        nonlocal total
+        total += _leaf_device_bytes(v)
+        return v
+
+    _map_pool_leaves(caches, grab)
+    return total

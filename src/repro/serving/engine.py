@@ -89,9 +89,13 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec
 
+from ..core import dispatch
 from ..core.types import ModelConfig, PagedCacheSpec
+from ..launch.mesh import axis_size
 from ..models import api
+from ..runtime import sharding as shardlib
 from . import cache as cache_mod
 from . import sampling
 from .cache import PagePool
@@ -177,7 +181,8 @@ class DecodeEngine:
                  burst: int = 8, chunk_tokens: int = 0,
                  round_budget: int = 0, page_size: int = 0,
                  pool_pages: int = 0, cache_dtype: str = "fp32",
-                 prefix_cache: bool = False, preemption: bool = False):
+                 prefix_cache: bool = False, preemption: bool = False,
+                 mesh=None):
         """``chunk_tokens`` caps the prompt tokens one slot prefills per
         round (0 = the whole remaining prompt in one chunk); it is rounded
         up to a multiple of MTLA's temporal stride so chunk boundaries
@@ -198,12 +203,29 @@ class DecodeEngine:
         requests through a radix tree over the pool (serving/prefix.py);
         ``preemption`` lets ``run`` evict lower-priority resident slots to
         the pool's swap area when admissions starve. Both require the
-        paged pool."""
+        paged pool.
+
+        ``mesh`` (a jax Mesh with a 'model' axis, e.g. from
+        launch/mesh.py::serving_mesh) makes the engine tensor-parallel:
+        params shard heads over 'model' (runtime/sharding.py rules), the
+        paged pool shards its physical-page rows, and the prefill/burst
+        graphs jit with pinned NamedSharding in/out constraints — every
+        round stays one dispatch and one host sync regardless of mesh
+        width, and emitted tokens are identical to mesh=None. The
+        allocator, prefix tree, and scheduler stay host-side with global
+        page IDs (see docs/serving.md "Sharding")."""
         if backend is not None:
             cfg = cfg.replace(backend=backend)
         self.params, self.cfg = params, cfg
         self.batch, self.max_len, self.eos = batch, max_len, eos
         self.dtype = dtype
+        self.mesh = mesh
+        self.tp = axis_size(mesh, "model")
+        if self.tp > 1 and cfg.attn.num_heads % self.tp:
+            raise ValueError(
+                f"tensor-parallel serving splits attention heads over the "
+                f"mesh 'model' axis: num_heads={cfg.attn.num_heads} is not "
+                f"divisible by tp={self.tp}")
         self.prefill_bucket = max(int(prefill_bucket), 1)
         self.burst = max(int(burst), 1)
         self.scheduler = Scheduler(batch, max_len)
@@ -230,7 +252,8 @@ class DecodeEngine:
                     "a shared page pool has none of")
             self.cache_spec = PagedCacheSpec(page_size=page_size,
                                              pool_pages=pool_pages,
-                                             cache_dtype=cache_dtype)
+                                             cache_dtype=cache_dtype,
+                                             shards=self.tp)
             self.pool = PagePool(self.cache_spec, batch, max_len,
                                  a.s if a.kind == "mtla" else 1)
         elif cache_dtype != "fp32":
@@ -245,16 +268,44 @@ class DecodeEngine:
         self.caches = api.init_caches(cfg, batch, max_len, dtype=dtype,
                                       src_len=max(cfg.frontend_len, 4),
                                       paged=self.cache_spec)
-        self.state = self._init_state()
 
         def _prefill_fn(p, b, c):
             self.prefill_traces += 1    # trace-time side effect: counts
             # compilations (one per chunk-width bucket), not executions
             return api.prefill(p, cfg, b, c, dtype=dtype)
 
-        self._prefill = jax.jit(_prefill_fn)
+        if self.mesh is None:
+            self._caches_sh = None
+            self._prefill = jax.jit(_prefill_fn)
+            self._burst = jax.jit(self._make_burst())
+        else:
+            # pin every jit boundary's shardings: params TP-sharded, the
+            # pool's rows axis over 'model', everything else replicated.
+            # Host-rebuilt inputs (page tables, SlotState rows) reshard on
+            # entry against in_shardings, and out_shardings keep the
+            # cache/state layouts stable across rounds (without the pins
+            # the compiler may pick a different output layout and the next
+            # round's input no longer matches — the same trap
+            # tests/test_distributed.py documents for the train step).
+            # GSPMD partitions each graph over the mesh, so a round is
+            # still exactly one prefill dispatch + one burst dispatch.
+            repl = NamedSharding(self.mesh, PartitionSpec())
+            params_sh = shardlib.params_shardings(self.params, self.mesh,
+                                                  fsdp=False)
+            self._caches_sh = shardlib.serving_shardings(self.caches,
+                                                         self.mesh)
+            self.params = jax.device_put(self.params, params_sh)
+            self._prefill = jax.jit(
+                _prefill_fn,
+                in_shardings=(params_sh, repl, self._caches_sh),
+                out_shardings=(repl, self._caches_sh))
+            self._burst = jax.jit(
+                self._make_burst(),
+                in_shardings=(params_sh, repl, self._caches_sh, repl),
+                out_shardings=(repl, self._caches_sh, repl, repl, repl))
+        self.caches = self._place_caches(self.caches)
+        self.state = self._init_state()
         self._sample = jax.jit(sampling.sample)
-        self._burst = jax.jit(self._make_burst())
         self._finished: List[Request] = []
         self.failed: List[Request] = []
         self.burst_traces = 0           # burst graph traces (compilations)
@@ -280,10 +331,11 @@ class DecodeEngine:
     def reset(self):
         """Drop all requests and re-init caches/state; compiled burst and
         prefill graphs are kept (used by benchmarks to exclude compile)."""
-        self.caches = api.init_caches(self.cfg, self.batch, self.max_len,
-                                      dtype=self.dtype,
-                                      src_len=max(self.cfg.frontend_len, 4),
-                                      paged=self.cache_spec)
+        self.caches = self._place_caches(
+            api.init_caches(self.cfg, self.batch, self.max_len,
+                            dtype=self.dtype,
+                            src_len=max(self.cfg.frontend_len, 4),
+                            paged=self.cache_spec))
         if self.pool is not None:
             self.pool.reset()
         if self.prefix is not None:
@@ -296,6 +348,24 @@ class DecodeEngine:
     @property
     def slots(self):
         return self.scheduler.slots
+
+    # --- mesh plumbing -----------------------------------------------------
+    def _place_caches(self, caches):
+        """Commit the cache pytree to its serving sharding (identity without
+        a mesh). Freshly initialized leaves are uncommitted single-device
+        arrays; placing them up front puts the pool's rows axis on its
+        shards before the first jitted call instead of leaving the initial
+        layout to the compiler."""
+        if self._caches_sh is None:
+            return caches
+        return jax.device_put(caches, self._caches_sh)
+
+    def _install_mesh(self):
+        """Point the dispatcher's tensor-parallel shard_map hook at this
+        engine's mesh before any call that may trace — the hook is read at
+        trace time only, so per-call installation keeps several engines
+        with different meshes correct in one process."""
+        dispatch.set_tp_mesh(self.mesh if self.tp > 1 else None)
 
     # --- device slot state -------------------------------------------------
     def _init_state(self):
@@ -528,6 +598,7 @@ class DecodeEngine:
         pools are read and written inside the kernel, dense caches take
         one scatter after it. See docs/kernels.md."""
         t0 = time.perf_counter()
+        self._install_mesh()
         B = self.batch
         lmax = max(n for *_, n in chunks)
         lpad = min(-(-lmax // self.prefill_bucket) * self.prefill_bucket,
@@ -575,6 +646,7 @@ class DecodeEngine:
         offset: recurrent ssm / hybrid, frontend prefixes, ring caches,
         encdec). Returns logits [V]."""
         cfg = self.cfg
+        self._install_mesh()
         slot = next(i for i, s in enumerate(self.scheduler.slots)
                     if s is req)
         single = api.init_caches(cfg, 1, self.max_len, dtype=self.dtype,
@@ -782,17 +854,31 @@ class DecodeEngine:
         refcount > 1 counting the tree itself — each counted once however
         many slots map it, which is the prefix-cache saving) and ``cached``
         (idle tree pages retained for future hits, evictable), plus the
-        host ``swap_bytes`` parked by preemption."""
+        host ``swap_bytes`` parked by preemption.
+
+        All byte figures above are **global** (summed over the mesh).
+        ``allocated_per_device`` / ``pool_bytes_per_device`` report what
+        one device actually holds (shard shapes): under tensor parallelism
+        the pool's rows axis is split ``devices`` ways, so per-device pool
+        bytes drop ~1/tp while replicated leaves (page tables, positions)
+        stay whole."""
         allocated = cache_bytes(self.caches)
+        per_device = cache_mod.per_device_bytes(self.caches)
         if self.pool is None:
             active, _ = cache_bytes_split(
                 self.caches, len(self.scheduler.occupied()), self.batch)
             peak, _ = cache_bytes_split(self.caches, self.peak_active,
                                         self.batch)
-            return {"allocated": allocated, "active": active, "peak": peak}
+            return {"allocated": allocated, "active": active, "peak": peak,
+                    "allocated_per_device": per_device,
+                    "devices": self.tp}
         per_page, overhead = cache_mod.paged_pool_bytes(self.caches)
         pool = self.pool
         return {"allocated": allocated,
+                "allocated_per_device": per_device,
+                "pool_bytes_per_device":
+                    cache_mod.per_device_pool_bytes(self.caches),
+                "devices": self.tp,
                 "active": pool.used_pages * per_page + overhead,
                 "peak": pool.peak_pages * per_page + overhead,
                 "page_bytes": per_page,
@@ -821,6 +907,7 @@ class DecodeEngine:
         if self.pool is not None:
             self._sync_pages(quota)
         t0 = time.perf_counter()
+        self._install_mesh()
         state, caches, out_tok, out_val, k = self._burst(
             self.params, self.state, self.caches,
             jnp.asarray(quota, jnp.int32))

@@ -43,6 +43,14 @@ request mid-queue no longer cuts the whole round. Deferred requests keep
 their queue position, so they claim freed pages first and FIFO completion
 is preserved among requests of comparable demand.
 
+The scheduler is **mesh-agnostic**: under tensor-parallel serving
+(``DecodeEngine(mesh=...)``) every decision here — admission, reservation
+arithmetic, chunk planning, victim selection — runs unchanged on *global*
+page IDs and token counts. Sharding is purely a device-layout concern
+(``runtime/sharding.py::serving_shardings`` splits the pool's physical
+rows; ``PagePool.shard_of`` maps a global page ID to its device), so the
+same plan drives a tp=1 and a tp=4 engine to identical token streams.
+
 ``select_victim`` is the preemption policy: when admission is starved and a
 resident request has strictly lower priority than the queue head, the
 engine may evict it mid-decode (pages snapshot to the pool's swap area and

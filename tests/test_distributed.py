@@ -25,6 +25,7 @@ _PJIT_TRAIN_TEMPLATE = """
     from repro.configs import smoke_config
     from repro.core.types import TrainConfig, mtla_variant
     from repro.data.synthetic import LMBatches
+    from repro.launch.mesh import build_mesh
     from repro.runtime import sharding as shd
     from repro.train.trainer import init_train_state, make_train_step
 
@@ -41,7 +42,7 @@ _PJIT_TRAIN_TEMPLATE = """
     for b in batches:
         s, m1 = js(s, {k: jnp.asarray(v) for k, v in b.items()})
     # mesh
-    mesh = jax.make_mesh((4, 2), ("data", "model"))
+    mesh = build_mesh((4, 2), ("data", "model"))
     shd.set_activation_mesh(mesh)
     st_sh = shd.params_shardings(state0, mesh, fsdp=__FSDP__)
     b_sh = shd.batch_shardings(batches[0], mesh)
@@ -85,6 +86,7 @@ def test_elastic_checkpoint_reshard_8_to_4():
         from repro.checkpoint.checkpoint import (save_checkpoint,
                                                  restore_checkpoint)
         from repro.data.synthetic import LMBatches
+        from repro.launch.mesh import build_mesh
         from repro.runtime import sharding as shd
         from repro.train.trainer import init_train_state, make_train_step
 
@@ -94,7 +96,7 @@ def test_elastic_checkpoint_reshard_8_to_4():
         it = LMBatches(batch=8, seq_len=16, vocab=cfg.vocab_size, seed=1)
         d = tempfile.mkdtemp()
 
-        mesh8 = jax.make_mesh((4, 2), ("data", "model"))
+        mesh8 = build_mesh((4, 2), ("data", "model"))
         st = init_train_state(jax.random.PRNGKey(0), cfg)
         sh8 = shd.params_shardings(st, mesh8)
         st = jax.device_put(st, sh8)
@@ -106,7 +108,9 @@ def test_elastic_checkpoint_reshard_8_to_4():
         save_checkpoint(d, 1, st, extra={"data": it.state.to_dict()})
         st_cont, m_cont = j8(st, {k: jnp.asarray(v) for k, v in b2.items()})
 
-        # "lose" half the devices -> 4-device mesh (2,2)
+        # "lose" half the devices -> 4-device mesh (2,2); built from an
+        # explicit device subset, which build_mesh (whole-platform meshes
+        # only) cannot express
         mesh4 = jax.sharding.Mesh(
             np.asarray(jax.devices()[:4]).reshape(2, 2), ("data", "model"))
         like = jax.tree_util.tree_map(
@@ -129,9 +133,10 @@ def test_int8_error_feedback_psum():
         import jax, jax.numpy as jnp, numpy as np, functools
         from jax.experimental.shard_map import shard_map
         from jax.sharding import PartitionSpec as P
+        from repro.launch.mesh import build_mesh
         from repro.runtime.compression import (compressed_psum,
                                                init_ef_state)
-        mesh = jax.make_mesh((8,), ("data",))
+        mesh = build_mesh((8,), ("data",))
         g_local = jax.random.normal(jax.random.PRNGKey(0), (8, 64))
 
         @functools.partial(
@@ -168,7 +173,8 @@ def test_cost_analysis_is_per_device():
     out = run_py("""
         import jax, jax.numpy as jnp
         from jax.sharding import NamedSharding, PartitionSpec as P
-        mesh = jax.make_mesh((8,), ("model",))
+        from repro.launch.mesh import build_mesh
+        mesh = build_mesh((8,), ("model",))
         ws = NamedSharding(mesh, P(None, "model"))
         f = lambda x, w: x @ w
         xa = jax.ShapeDtypeStruct((256, 256), jnp.float32)
@@ -192,8 +198,9 @@ def test_bf16_grad_reduce_numerics():
         import jax, jax.numpy as jnp, functools
         from jax.experimental.shard_map import shard_map
         from jax.sharding import PartitionSpec as P
+        from repro.launch.mesh import build_mesh
         from repro.runtime.compression import compressed_psum
-        mesh = jax.make_mesh((8,), ("data",))
+        mesh = build_mesh((8,), ("data",))
         g = jax.random.normal(jax.random.PRNGKey(1), (8, 128)) / 8
 
         @functools.partial(shard_map, mesh=mesh, in_specs=(P("data"),),
