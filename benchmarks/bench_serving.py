@@ -53,6 +53,20 @@ prefill work actually done and ``vs_cold`` compares end-to-end tokens/s
 engine with the prefix cache off — informational at this smoke scale,
 where host radix overhead and the tiny model make it hover near 1x.
 
+The goodput section replays the head-of-line shape as an **open-loop
+trace on a virtual clock** (benchmarks/loadgen.py): one long SLO-less
+prompt arrives first, tight-TTFT shorts right behind it, and the same
+seeded trace runs through the FIFO budget split and the SLO-aware split
+(EDF chunk ordering + prefill-first flip, serving/scheduler.py) in the
+same process. Everything reported — ``goodput`` (fraction of
+SLO-carrying requests meeting every target), the attainment counts, the
+virtual-time latency percentiles, and ``goodput_vs_fifo`` — derives from
+virtual-clock stamps, so the rows are bit-deterministic and the CI gate
+(benchmarks/compare.py) holds them as hard floors: the SLO-aware split
+must keep beating FIFO on this trace, and a goodput drop means the
+deadline steering stopped working, however fast the machine is. See
+docs/workloads.md for the workload model and SLO/goodput definitions.
+
 The sharded section runs in a **subprocess** with 8 forced host devices
 (the parent bench process must keep its single-device view for every
 other row): a tp=1 and a tp=4 mesh engine serve the identical paged
@@ -77,8 +91,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import api
-from repro.serving.engine import DecodeEngine, Request
+from repro.serving.engine import DecodeEngine, Request, SLO, latency_report
 
+from . import loadgen
 from .common import paper_model
 
 VARIANTS = (("mha", 2), ("mla", 2), ("mtla", 2))
@@ -183,6 +198,63 @@ def _sharded_rows():
 # prompt's remaining chunks between decode bursts
 HOL_LONG, HOL_SHORT, HOL_CHUNK = 96, 8, 16
 HOL_BATCH, HOL_MAX_NEW, HOL_MAX_LEN, HOL_N = 4, 16, 128, 4
+
+# goodput section: the HOL shape replayed open-loop on a virtual clock —
+# one long SLO-less prompt at t=0, tight-TTFT shorts right behind it,
+# served under a tight round budget so the FIFO split head-of-line-blocks
+# the shorts while the SLO-aware split answers them first. All quantities
+# derive from virtual-clock stamps: bit-deterministic, machine-independent
+GP_LONG, GP_SHORT, GP_SHORTS, GP_MAX_NEW = 48, 6, 6, 4
+GP_TTFT, GP_ITL = 8.0, 50.0
+GP_BATCH, GP_BUDGET, GP_CHUNK, GP_BURST, GP_MAX_LEN = 4, 14, 8, 4, 96
+
+
+def _gp_arrivals(cfg):
+    rng = np.random.default_rng(11)
+    long = Request(rid=0,
+                   prompt=rng.integers(0, cfg.vocab_size, size=(GP_LONG,)
+                                       ).astype(np.int32),
+                   max_new=GP_MAX_NEW)
+    shorts = [Request(rid=1 + i,
+                      prompt=rng.integers(0, cfg.vocab_size,
+                                          size=(GP_SHORT,)).astype(np.int32),
+                      max_new=GP_MAX_NEW,
+                      slo=SLO(ttft=GP_TTFT, itl=GP_ITL))
+              for i in range(GP_SHORTS)]
+    return [(0.0, long)] + [(0.2 + 0.1 * i, s)
+                            for i, s in enumerate(shorts)]
+
+
+def _goodput_rows():
+    cfg = paper_model("mtla", s=2, layers=2, d=64)
+    params = api.init_model(jax.random.PRNGKey(0), cfg)
+    res = {}
+    for label, aware in (("fifo", False), ("slo", True)):
+        vc = loadgen.VirtualClock()
+        eng = DecodeEngine(params, cfg, batch=GP_BATCH, max_len=GP_MAX_LEN,
+                           dtype=jnp.float32, burst=GP_BURST,
+                           chunk_tokens=GP_CHUNK, prefill_bucket=8,
+                           round_budget=GP_BUDGET, slo_aware=aware,
+                           clock=vc)
+        fin = loadgen.replay(eng, _gp_arrivals(cfg), vc)
+        assert len(fin) == 1 + GP_SHORTS
+        res[label] = (eng.slo_report(), latency_report(fin), vc.now)
+    rows = []
+    fifo_goodput = res["fifo"][0]["goodput"]
+    for label in ("fifo", "slo"):
+        rep, lat, t = res[label]
+        extra = ("" if label == "fifo" else
+                 f";goodput_vs_fifo="
+                 f"{rep['goodput'] / max(fifo_goodput, 1e-9):.3f}x")
+        rows.append(
+            f"bench_serving/goodput/paper-mtla2-{label},{t:.1f},"
+            f"goodput={rep['goodput']:.3f};"
+            f"slo_met={int(rep['slo_met'])};"
+            f"slo_requests={int(rep['slo_requests'])};"
+            f"ttft_p50_vt={lat['ttft_p50']:.2f};"
+            f"ttft_p99_vt={lat['ttft_p99']:.2f};"
+            f"drain_vt={t:.1f}{extra}")
+    return rows
 
 
 def _requests(cfg, n=BATCH, seed=0):
@@ -401,5 +473,6 @@ def run():
             f"pages_cached={rep['pages_cached']};"
             f"pages_peak={rep['pages_peak']}")
 
+    rows.extend(_goodput_rows())
     rows.extend(_sharded_rows())
     return rows

@@ -27,6 +27,17 @@ like the memory ratios. A ratio creeping past baseline * ``--ttft-slack``
 means chunked prefill stopped cutting head-of-line blocking (e.g. chunks
 silently coalesced back into whole-prompt calls).
 
+The goodput rows (``bench_serving/goodput/*``) replay a seeded
+head-of-line trace on a **virtual clock** (benchmarks/loadgen.py), so
+``goodput`` (fraction of SLO-carrying requests meeting every latency
+target) and ``goodput_vs_fifo`` (the SLO-aware budget split's goodput
+over the FIFO split's, same process, same trace) are bit-deterministic
+like the prefix counters — baseline is a hard floor. A ``goodput`` drop
+means the deadline steering (EDF chunk order / prefill-first flip,
+serving/scheduler.py) stopped answering SLO traffic in time;
+``goodput_vs_fifo`` falling below baseline means SLO awareness stopped
+paying for itself on the very trace it was built for.
+
 The sharded serving rows (``bench_serving/sharded/*``) gate two more
 machine-independent quantities: ``per_device_vs_tp1`` (tp=4 per-device
 pool bytes over tp=1's — a shard-shape ratio that creeps toward 1.0 if a
@@ -90,7 +101,8 @@ def main() -> int:
     for name, bd in sorted(base.items()):
         gated = ("toks_per_s", "vs_dense_fp32", "hit_rate",
                  "prefill_skipped", "ttft_vs_unchunked",
-                 "per_device_vs_tp1", "tokens_match")
+                 "per_device_vs_tp1", "tokens_match", "goodput",
+                 "goodput_vs_fifo")
         if name == args.reference or not any(k in bd for k in gated):
             continue
         cd = cur.get(name)
@@ -146,6 +158,24 @@ def main() -> int:
                     f"{name}: per_device_vs_tp1 {ratio:.3f}x > baseline "
                     f"{bd['per_device_vs_tp1']:.3f}x * {args.mem_slack} "
                     f"(the paged pool stopped sharding over the mesh)")
+        for det in ("goodput", "goodput_vs_fifo"):
+            # deterministic virtual-clock SLO attainment (the goodput
+            # trace replays on virtual time, so these are timing-free):
+            # baseline is a floor — goodput dropping means the SLO-aware
+            # split stopped answering deadline traffic in time, and
+            # goodput_vs_fifo dropping means it stopped beating FIFO on
+            # the gated head-of-line trace
+            if det in bd:
+                val = cd.get(det, 0)
+                shown = shown or (f"  {det} {val:.3f} "
+                                  f"(baseline {bd[det]:.3f})")
+                if val < bd[det] - 1e-9:
+                    status = "GOODPUT-REGRESSION"
+                    failures.append(
+                        f"{name}: {det} {val:.3f} < baseline "
+                        f"{bd[det]:.3f} (virtual-clock goodput is "
+                        f"deterministic; a drop means the SLO-aware "
+                        f"budget split regressed)")
         for det in ("hit_rate", "prefill_skipped", "tokens_match"):
             # deterministic counters: timing-free, so baseline is a floor
             # (tokens_match=1 asserts tp=4 token streams and dispatch

@@ -1,0 +1,230 @@
+"""Seeded open-loop traffic for the serving engine: workload synthesis,
+virtual time, and the replay loop that drives ``DecodeEngine`` at arrival
+times instead of all-at-once.
+
+Every closed-loop benchmark in this repo hands the engine a finished
+request list, so the engine never queues: arrival pressure — the regime
+the MTLA efficiency claim is about — is invisible. This module generates
+**open-loop** load (arrivals keep coming whether or not the engine keeps
+up, MLPerf-server style) and replays it deterministically:
+
+- ``WorkloadSpec`` + ``build``: a seeded workload model. Arrivals are
+  Poisson (exponential gaps at ``rate``) or an explicit trace
+  (``arrivals=[t0, t1, ...]``, replayed verbatim); prompt and output
+  lengths draw from weighted discrete distributions; ``prefix_groups``
+  carves the population into groups sharing a common ``prefix_len``-token
+  prompt prefix (the radix-cache population shape); ``slo`` attaches
+  TTFT/ITL targets to a seeded ``slo_frac`` fraction of requests. One
+  ``numpy`` generator seeded from ``spec.seed`` draws everything, so a
+  spec is its trace — same seed, same requests, same arrival times.
+
+- ``VirtualClock`` + ``CostModel`` + ``replay``: the replay loop submits
+  each request when the virtual clock passes its arrival time, runs one
+  engine ``step()`` per iteration, and advances the clock by a
+  deterministic cost model of the work that round actually did
+  (``round_cost`` fixed overhead + ``prefill_cost`` per prompt token
+  prefilled + ``decode_cost`` per device decode step). The engine stamps
+  every request lifecycle event through the same clock
+  (``DecodeEngine(clock=vclock)``), so TTFT/ITL/goodput come out
+  bit-identical run over run — which is what lets benchmarks/compare.py
+  gate goodput as a hard floor rather than a noisy latency. Queueing
+  delay is real: a request's ``t_submit`` is its **arrival** time, so
+  time spent waiting behind a backlog counts against its TTFT.
+
+The cost model is virtual time, not a performance claim — it prices
+rounds in abstract units so that *scheduling* differences (who got budget
+when) are the only thing the goodput numbers can see. Wall-clock
+throughput stays the closed-loop benchmarks' job. See docs/workloads.md
+for the full methodology and the reproduce-the-gated-rows walkthrough.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.serving.engine import DecodeEngine, Request
+from repro.serving.scheduler import SLO
+
+
+class VirtualClock:
+    """A monotonic clock the replay loop advances by hand.
+
+    Instances are callables returning the current virtual time, so one
+    plugs straight into ``DecodeEngine(clock=...)``.
+    """
+
+    def __init__(self, t0: float = 0.0):
+        """Start the clock at ``t0`` virtual seconds."""
+        self.now = float(t0)
+
+    def __call__(self) -> float:
+        """Current virtual time."""
+        return self.now
+
+    def advance(self, dt: float):
+        """Move time forward by ``dt`` (must be non-negative)."""
+        if dt < 0:
+            raise ValueError(f"virtual time cannot rewind (dt={dt})")
+        self.now += dt
+
+    def advance_to(self, t: float):
+        """Move time forward to ``t`` (no-op if ``t`` is in the past)."""
+        self.now = max(self.now, float(t))
+
+
+@dataclasses.dataclass(frozen=True)
+class CostModel:
+    """Virtual cost of one engine round, in clock units.
+
+    ``round_cost`` is the fixed per-round overhead (dispatch + host
+    sync); ``prefill_cost`` prices each prompt token actually prefilled
+    (prefix-cache hits are free — that is the saving); ``decode_cost``
+    prices each device decode step (a burst of k steps costs k, however
+    many slots decode in parallel). Defaults make one decode step ~ one
+    prefill token and a round's overhead ~ a short chunk, which is
+    enough to rank schedules; absolute units are meaningless.
+    """
+    round_cost: float = 1.0
+    prefill_cost: float = 0.1
+    decode_cost: float = 0.1
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadSpec:
+    """One seeded open-loop workload: arrivals, shapes, SLOs.
+
+    Attributes:
+        n: number of requests.
+        rate: mean Poisson arrivals per virtual time unit (ignored when
+            ``arrivals`` is given).
+        arrivals: explicit arrival times (trace replay); length must be
+            ``n`` and non-decreasing.
+        prompt_lens: candidate prompt lengths, drawn per request.
+        prompt_weights: draw weights for ``prompt_lens`` (uniform when
+            None).
+        max_new_lens: candidate output budgets, drawn per request.
+        max_new_weights: draw weights for ``max_new_lens``.
+        prefix_groups: number of shared-prefix populations (0 = fully
+            random prompts); each request joins a uniform random group.
+        prefix_len: shared tokens at the head of each group's prompts
+            (capped to the request's own prompt length).
+        slo: latency-target template attached to SLO-carrying requests.
+        slo_frac: fraction of requests carrying ``slo`` (seeded draw).
+        vocab: token id range for synthetic prompts.
+        seed: the single seed behind every draw above.
+    """
+    n: int = 32
+    rate: float = 1.0
+    arrivals: Optional[Sequence[float]] = None
+    prompt_lens: Sequence[int] = (8, 16, 32)
+    prompt_weights: Optional[Sequence[float]] = None
+    max_new_lens: Sequence[int] = (8, 16)
+    max_new_weights: Optional[Sequence[float]] = None
+    prefix_groups: int = 0
+    prefix_len: int = 0
+    slo: Optional[SLO] = None
+    slo_frac: float = 1.0
+    vocab: int = 256
+    seed: int = 0
+
+
+def build(spec: WorkloadSpec) -> List[Tuple[float, Request]]:
+    """Materialize a spec into ``[(arrival_time, Request), ...]``.
+
+    Deterministic: every draw comes from one ``default_rng(spec.seed)``
+    in a fixed order, so two builds of the same spec are identical down
+    to the token ids. Arrival times are non-decreasing; requests get
+    sequential ``rid`` in arrival order.
+    """
+    rng = np.random.default_rng(spec.seed)
+    if spec.arrivals is not None:
+        if len(spec.arrivals) != spec.n:
+            raise ValueError(f"trace length {len(spec.arrivals)} != "
+                             f"n={spec.n}")
+        times = [float(t) for t in spec.arrivals]
+        if any(b < a for a, b in zip(times, times[1:])):
+            raise ValueError("trace arrival times must be non-decreasing")
+    else:
+        gaps = rng.exponential(1.0 / max(spec.rate, 1e-9), size=spec.n)
+        times = np.cumsum(gaps).tolist()
+
+    def _weights(ws, k):
+        if ws is None:
+            return None
+        p = np.asarray(ws, np.float64)
+        return p / p.sum()
+
+    plens = rng.choice(np.asarray(spec.prompt_lens),
+                       size=spec.n,
+                       p=_weights(spec.prompt_weights, len(spec.prompt_lens)))
+    mnews = rng.choice(np.asarray(spec.max_new_lens),
+                       size=spec.n,
+                       p=_weights(spec.max_new_weights,
+                                  len(spec.max_new_lens)))
+    prefixes = []
+    groups = np.zeros(spec.n, np.int64)
+    if spec.prefix_groups > 0 and spec.prefix_len > 0:
+        prefixes = [rng.integers(0, spec.vocab, size=(spec.prefix_len,)
+                                 ).astype(np.int32)
+                    for _ in range(spec.prefix_groups)]
+        groups = rng.integers(0, spec.prefix_groups, size=spec.n)
+    has_slo = rng.random(spec.n) < spec.slo_frac
+
+    out: List[Tuple[float, Request]] = []
+    for i in range(spec.n):
+        plen = int(plens[i])
+        if prefixes:
+            head = prefixes[int(groups[i])][:plen]
+            tail = rng.integers(0, spec.vocab, size=(plen - len(head),)
+                                ).astype(np.int32)
+            prompt = np.concatenate([head, tail])
+        else:
+            prompt = rng.integers(0, spec.vocab, size=(plen,)
+                                  ).astype(np.int32)
+        slo = spec.slo if (spec.slo is not None and has_slo[i]) else None
+        out.append((times[i], Request(rid=i, prompt=prompt,
+                                      max_new=int(mnews[i]), slo=slo)))
+    return out
+
+
+def replay(eng: DecodeEngine, arrivals: Sequence[Tuple[float, Request]],
+           clock: VirtualClock, cost: CostModel = CostModel(),
+           max_rounds: int = 10_000) -> List[Request]:
+    """Drive the engine through an open-loop trace on virtual time.
+
+    Each iteration submits every request whose arrival time has passed
+    (stamping ``t_submit`` to the **arrival** time, so backlog wait
+    counts against TTFT), runs one ``eng.step()``, and advances the
+    clock by the round's modeled cost. When the engine drains before the
+    next arrival, the clock jumps to it — open-loop idle time is free.
+    The engine must have been built with ``clock=clock``; anything else
+    would stamp lifecycles off a different timeline than the arrivals.
+    Returns the finished requests in completion order.
+    """
+    if eng._clock is not clock:
+        raise ValueError("replay needs the engine to run on the replay "
+                         "clock: DecodeEngine(..., clock=vclock)")
+    queue = sorted(arrivals, key=lambda tr: tr[0])
+    finished: List[Request] = []
+    i, rounds = 0, 0
+    while i < len(queue) or eng.has_work():
+        while i < len(queue) and queue[i][0] <= clock.now:
+            t, req = queue[i]
+            req.t_submit = t
+            eng.submit([req])
+            i += 1
+        if not eng.has_work():
+            clock.advance_to(queue[i][0])
+            continue
+        p0, s0 = eng.prefill_tokens, eng.steps
+        finished.extend(eng.step())
+        clock.advance(cost.round_cost
+                      + cost.prefill_cost * (eng.prefill_tokens - p0)
+                      + cost.decode_cost * (eng.steps - s0))
+        rounds += 1
+        if rounds >= max_rounds:
+            raise RuntimeError(f"replay exceeded max_rounds={max_rounds} "
+                               f"with {len(queue) - i} arrivals pending")
+    return finished

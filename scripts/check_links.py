@@ -10,7 +10,9 @@ badge/image URLs are checked only when relative.
     python scripts/check_links.py [root]
 
 Exit code 0 when every relative link resolves, 1 otherwise (each broken
-link is printed as ``file:line: target``).
+link is printed as ``file:line: target``; a broken *anchor* into an
+existing file also lists the anchors that file actually has, so the fix
+is a copy-paste, not a second investigation).
 """
 from __future__ import annotations
 
@@ -60,26 +62,30 @@ def check(root: pathlib.Path):
             path_part, _, anchor = target.partition("#")
             if not path_part:                              # same-file anchor
                 if anchor and _anchor_of(anchor) not in _headings(md):
-                    broken.append((md, line, target))
+                    broken.append((md, line, target, md))
                 continue
             dest = (md.parent / path_part).resolve()
             if root.resolve() not in dest.parents and dest != root.resolve():
                 continue        # escapes the repo: a GitHub web path like
                 #                 the CI badge's ../../actions/... URL
             if not dest.exists():
-                broken.append((md, line, target))
+                broken.append((md, line, target, None))
                 continue
             if anchor and dest.suffix == ".md" \
                     and _anchor_of(anchor) not in _headings(dest):
-                broken.append((md, line, target))
+                broken.append((md, line, target, dest))
     return md_files, broken
 
 
 def main() -> int:
     root = pathlib.Path(sys.argv[1] if len(sys.argv) > 1 else ".")
     md_files, broken = check(root)
-    for md, line, target in broken:
+    for md, line, target, anchor_file in broken:
         print(f"{md}:{line}: broken link -> {target}", file=sys.stderr)
+        if anchor_file is not None:   # file exists, anchor doesn't: show
+            #                           what it has so the fix is one edit
+            have = ", ".join(sorted(_headings(anchor_file))) or "(none)"
+            print(f"  {anchor_file} anchors: {have}", file=sys.stderr)
     print(f"checked {len(md_files)} markdown files, "
           f"{len(broken)} broken links")
     return 1 if broken else 0

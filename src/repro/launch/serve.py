@@ -12,6 +12,16 @@ mesh axis, emitted tokens stay identical to single-device, and the report
 gains a per-device vs global bytes line. On CPU, force host devices with
 ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (docs/serving.md,
 "Sharding").
+
+``--open-loop`` replays the same request list as seeded Poisson traffic
+on a deterministic virtual clock (benchmarks/loadgen.py) instead of
+submitting it all at once: requests arrive at ``--rate`` per virtual
+time unit, queueing delay counts against TTFT, and the report's latency
+and goodput lines are in virtual units — bit-reproducible under a fixed
+seed. ``--ttft-slo`` / ``--itl-slo`` attach latency targets to every
+request and add a goodput (SLO-attainment) line; ``--fifo`` disables
+the SLO-aware budget steering for an A/B against the plain FIFO split
+(docs/workloads.md).
 """
 from __future__ import annotations
 
@@ -26,7 +36,8 @@ from ..core import dispatch
 from ..core.types import ServeConfig, mla_variant, mtla_variant
 from ..models import api
 from .mesh import build_mesh, parse_mesh_spec, serving_mesh
-from ..serving.engine import DecodeEngine, Request, cache_bytes_split
+from ..serving.engine import (DecodeEngine, Request, SLO, cache_bytes_split,
+                              latency_report)
 from ..serving.sampling import SamplingParams
 
 
@@ -97,6 +108,24 @@ def main(argv=None):
                     help="explicit mesh spec 'axis:size,...' (e.g. "
                          "'model:4'); overrides --tp — serving uses the "
                          "'model' axis, other axes must have size 1")
+    ap.add_argument("--ttft-slo", type=float, default=0.0,
+                    help="per-request time-to-first-token target (0 = "
+                         "none); virtual units with --open-loop, seconds "
+                         "otherwise — adds a goodput line to the report")
+    ap.add_argument("--itl-slo", type=float, default=0.0,
+                    help="per-request inter-token (host-sync gap) target "
+                         "(0 = none); same units as --ttft-slo")
+    ap.add_argument("--fifo", action="store_true",
+                    help="disable SLO-aware budget steering: plan_round "
+                         "keeps the FIFO split even when SLOs are attached "
+                         "(the goodput A/B baseline)")
+    ap.add_argument("--open-loop", action="store_true",
+                    help="submit requests at seeded Poisson arrival times "
+                         "on a deterministic virtual clock "
+                         "(benchmarks/loadgen.py) instead of all at once")
+    ap.add_argument("--rate", type=float, default=1.0,
+                    help="mean arrivals per virtual time unit under "
+                         "--open-loop")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="0 = greedy; > 0 samples with per-request seeds")
     ap.add_argument("--top-k", type=int, default=0)
@@ -117,6 +146,16 @@ def main(argv=None):
 
     mesh = (build_mesh(*parse_mesh_spec(args.mesh)) if args.mesh
             else serving_mesh(args.tp))
+    vclock = None
+    if args.open_loop:
+        try:
+            from benchmarks import loadgen
+        except ImportError as e:       # benchmarks/ rides on cwd, not src/
+            raise SystemExit(
+                "--open-loop needs benchmarks/loadgen.py importable — run "
+                "from the repo root: PYTHONPATH=src python -m "
+                "repro.launch.serve --open-loop ...") from e
+        vclock = loadgen.VirtualClock()
     params = api.init_model(jax.random.PRNGKey(args.seed), cfg)
     eng = DecodeEngine(params, cfg, batch=args.batch, max_len=args.max_len,
                        dtype=jnp.float32, backend=args.backend,
@@ -127,22 +166,31 @@ def main(argv=None):
                        cache_dtype=args.cache_dtype,
                        prefix_cache=args.prefix_cache,
                        preemption=args.preemption,
-                       mesh=mesh)
+                       mesh=mesh, slo_aware=not args.fifo, clock=vclock)
     sp = SamplingParams(temperature=args.temperature, top_k=args.top_k,
                         top_p=args.top_p)
     rng = np.random.default_rng(args.seed)
     shared = rng.integers(0, cfg.vocab_size,
                           size=(min(args.shared_prefix, args.prompt_len),))
+    slo = (SLO(ttft=args.ttft_slo or None, itl=args.itl_slo or None)
+           if (args.ttft_slo > 0 or args.itl_slo > 0) else None)
     reqs = [Request(rid=i,
                     prompt=np.concatenate([
                         shared,
                         rng.integers(0, cfg.vocab_size,
                                      size=(args.prompt_len - len(shared),))]),
                     max_new=args.max_new, sampling=sp,
-                    seed=args.seed + i,
+                    seed=args.seed + i, slo=slo,
                     priority=int(i >= args.requests - args.hipri_last))
             for i in range(args.requests)]
-    out = eng.run(reqs)
+    if args.open_loop:
+        gaps = rng.exponential(1.0 / max(args.rate, 1e-9),
+                               size=len(reqs))
+        arrivals = list(zip(np.cumsum(gaps).tolist(), reqs))
+        fin = loadgen.replay(eng, arrivals, vclock)
+        out = {r.rid: r.out for r in fin}
+    else:
+        out = eng.run(reqs)
     total_toks = sum(len(v) for v in out.values())
     mode = "greedy" if sp.greedy else (
         f"T={sp.temperature} top_k={sp.top_k} top_p={sp.top_p}")
@@ -166,15 +214,27 @@ def main(argv=None):
     print(f"decode:  {eng.decoded_tokens} toks in {eng.decode_time_s:.2f}s "
           f"({rate:.1f} tok/s incl. compile; {eng.decode_calls} bursts, "
           f"{eng.steps} device steps, 1 host sync per burst)")
-    ttft = [r.t_first - r.t_submit for r in reqs
-            if r.t_first is not None and r.t_submit is not None]
-    itl = [b - a for r in reqs for a, b in zip(r.tok_t, r.tok_t[1:])]
-    if ttft:
-        p = lambda xs, q: 1e3 * float(np.percentile(xs, q))
-        print(f"latency: ttft p50 {p(ttft, 50):.1f} / p95 {p(ttft, 95):.1f}"
-              f" ms" + (f"; inter-token p50 {p(itl, 50):.1f} / "
-                        f"p95 {p(itl, 95):.1f} ms (per host sync)"
-                        if itl else "") + " — incl. compile")
+    # open-loop stamps live on the virtual clock (deterministic units);
+    # closed-loop ones on the wall clock (ms, incl. compile)
+    scale, unit, tail = ((1.0, "vt", " — virtual units")
+                         if args.open_loop else (1e3, "ms",
+                                                 " — incl. compile"))
+    lat = latency_report(reqs, pcts=(50, 95))
+    if lat["n"]:
+        print(f"latency: ttft p50 {scale * lat['ttft_p50']:.1f} / "
+              f"p95 {scale * lat['ttft_p95']:.1f} {unit}; inter-token "
+              f"p50 {scale * lat['itl_p50']:.1f} / "
+              f"p95 {scale * lat['itl_p95']:.1f} {unit} "
+              f"(per host sync){tail}")
+    if args.open_loop:
+        print(f"open-loop: rate {args.rate:g}/vt, drained at virtual "
+              f"t={vclock.now:.1f} ({'fifo' if args.fifo else 'slo-aware'}"
+              f" split, seed {args.seed})")
+    if slo is not None:
+        rep = eng.slo_report()
+        print(f"goodput: {rep['goodput']:.2f} "
+              f"({int(rep['slo_met'])}/{int(rep['slo_requests'])} met "
+              f"ttft<={args.ttft_slo:g} itl<={args.itl_slo:g} {unit})")
     if eng.pool is not None:
         rep = eng.cache_report()
         pool = eng.pool

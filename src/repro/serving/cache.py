@@ -87,6 +87,8 @@ class PagePool:
         self.reset()
 
     def reset(self):
+        """Return every page to the free list and clear all bookkeeping
+        (tables, shared/tree refcounts, reservations, swap area, peaks)."""
         self.free: List[int] = list(range(self.total_pages))[::-1]
         self.table = np.full((self.batch, self.logical_pages),
                              self.sentinel, np.int32)
@@ -127,10 +129,13 @@ class PagePool:
 
     @property
     def tree_pages(self) -> int:
+        """All pages owned by the radix tree, pinned or idle."""
         return len(self.tree_refs)
 
     @property
     def idle_tree_pages(self) -> int:
+        """Tree pages no slot references — cached for future prefix hits
+        but reclaimable (LRU) the moment admission needs them."""
         return self.tree_pages - self.pinned_pages
 
     def availability(self) -> int:
@@ -144,12 +149,17 @@ class PagePool:
         return self.total_pages - self.reserved_total - self.pinned_pages
 
     def can_reserve(self, pages: int) -> bool:
+        """True iff a ``pages``-page reservation fits right now."""
         return pages <= self.availability()
 
     def can_ever_reserve(self, pages: int) -> bool:
+        """True iff the demand fits an *empty* pool — False means the
+        request must be rejected outright, not deferred."""
         return pages <= self.total_pages
 
     def reserve(self, slot: int, pages: int):
+        """Book ``pages`` worst-case pages for a slot at admission, making
+        its later lazy ``ensure_mapped`` top-ups infallible."""
         assert self.reserved[slot] == 0, f"slot {slot} already reserved"
         assert self.can_reserve(pages), "reservation over-commits the pool"
         self.reserved[slot] = pages
@@ -169,6 +179,7 @@ class PagePool:
             self.peak_pages = max(self.peak_pages, self.used_pages)
 
     def unshare(self, slot: int):
+        """Drop the slot's read-only tree mappings (refcount--)."""
         for p in self.shared[slot]:
             self.tree_refs[p] -= 1
         self.shared[slot] = []
@@ -179,6 +190,7 @@ class PagePool:
         self.tree_refs[page] += 1
 
     def unpin(self, page: int):
+        """Release a ``pin``'s temporary eviction protection."""
         self.tree_refs[page] -= 1
 
     def promote(self, slot: int) -> int:
@@ -302,6 +314,7 @@ class PagePool:
         self.swap_bytes_peak = max(self.swap_bytes_peak, self.swap_bytes)
 
     def swap_take(self, key) -> dict:
+        """Withdraw (and remove) a preempted request's parked snapshot."""
         entry = self.swap.pop(key)
         self.swap_bytes = sum(e["bytes"] for e in self.swap.values())
         return entry
@@ -309,6 +322,7 @@ class PagePool:
     # --- occupancy ----------------------------------------------------------
     @property
     def private_pages(self) -> int:
+        """Pages mapped writable by exactly one slot (no tree pages)."""
         return sum(len(m) for m in self.mapped)
 
     @property
@@ -319,6 +333,7 @@ class PagePool:
         return self.private_pages + self.tree_pages
 
     def occupancy(self) -> float:
+        """``used_pages`` as a fraction of the pool."""
         return self.used_pages / max(self.total_pages, 1)
 
 

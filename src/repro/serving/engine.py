@@ -79,6 +79,27 @@ The KV-cache memory accounting (``cache_bytes`` allocated,
 ``cache_bytes_split`` active vs allocated, ``cache_report`` mapped-page
 bytes in paged mode, split private vs shared) backs the paper-table
 benchmarks (GPU-memory columns of Tables 1-5).
+
+Requests may carry per-request latency targets (``Request.slo``, an
+``SLO`` with TTFT/ITL deadlines and a priority tier — serving/scheduler).
+The engine stamps every request's lifecycle (``t_submit`` at submit,
+``t_first`` at the first token, ``tok_t`` per host sync) through a
+pluggable **clock** (``DecodeEngine(clock=...)``, default wall
+``time.perf_counter``): an open-loop replay (benchmarks/loadgen.py)
+installs a deterministic virtual clock, making every deadline comparison,
+stamp, and therefore the goodput counters bit-reproducible. With
+``slo_aware=True`` (the default) the clock feeds ``Scheduler.plan_round``
+so the budget split steers by SLO headroom; SLO-less requests plan — and
+emit tokens — exactly as a FIFO engine. Attainment is accounted per
+request as it finishes (``ttft_ok`` / ``itl_ok``), rolled up into the
+``slo_requests`` / ``slo_met`` counters and the ``slo_report()`` goodput
+summary next to ``cache_report()``; ``latency_report()`` turns a served
+request list into TTFT/ITL percentiles (docs/workloads.md).
+
+The run loop is exposed at two grains: ``run(requests)`` serves a closed
+list to completion, while ``submit()`` + ``step()`` let a driver feed
+requests mid-flight and advance the loop one round at a time — the
+open-loop harness interleaves virtual arrivals with rounds this way.
 """
 from __future__ import annotations
 
@@ -101,11 +122,23 @@ from . import sampling
 from .cache import PagePool
 from .prefix import PrefixCache
 from .sampling import SamplingParams
-from .scheduler import Scheduler
+from .scheduler import SLO, Scheduler
+
+__all__ = ["DecodeEngine", "Request", "SLO", "cache_bytes",
+           "cache_bytes_split", "done_after_emit", "latency_report",
+           "splice_rows"]
 
 
 @dataclasses.dataclass
 class Request:
+    """One decode request and its host-side lifecycle record.
+
+    ``prompt`` tokens stream in through chunked prefill, then up to
+    ``max_new`` tokens are sampled into ``out``. Timing stamps
+    (``t_submit`` / ``t_first`` / ``tok_t``) come from the engine clock;
+    ``slo`` attaches optional latency targets whose attainment lands in
+    ``ttft_ok`` / ``itl_ok`` when the request finishes.
+    """
     rid: int
     prompt: np.ndarray                  # [Tp] int32
     max_new: int = 32
@@ -117,18 +150,48 @@ class Request:
     done: bool = False
     error: Optional[str] = None         # set when the request is rejected
     swapped: bool = False               # preempted; state in the swap area
-    t_submit: Optional[float] = None    # wall time run() first saw it
-    t_first: Optional[float] = None     # first-token wall time (TTFT base)
+    slo: Optional[SLO] = None           # latency targets; None = best-effort
+    t_submit: Optional[float] = None    # clock time submit() first saw it
+    t_first: Optional[float] = None     # first-token clock time (TTFT base)
     tok_t: List[float] = dataclasses.field(
         default_factory=list)           # host-sync arrival time per token
+    ttft_ok: Optional[bool] = None      # SLO attainment, set at finish
+    itl_ok: Optional[bool] = None       # (None = no such target / unfinished)
     _hit: Optional[object] = dataclasses.field(
         default=None, repr=False)       # PrefixHit from the last plan
 
 
 def cache_bytes(caches) -> int:
+    """Total bytes of every array leaf in a cache pytree."""
     return sum(a.size * a.dtype.itemsize
                for a in jax.tree_util.tree_leaves(caches)
                if hasattr(a, "dtype"))
+
+
+def latency_report(reqs: Sequence[Request],
+                   pcts: Sequence[int] = (50, 90, 99)) -> Dict[str, float]:
+    """TTFT / ITL percentiles over a served request list.
+
+    TTFT is ``t_first - t_submit`` per request that produced a token; ITL
+    samples are the consecutive ``tok_t`` gaps pooled across requests
+    (tokens harvested at the same host sync contribute zero-gap samples —
+    the sync cadence, not a per-token latency, is what the burst engine
+    can honestly measure; see docs/workloads.md). Returns
+    ``{"n": served, "ttft_p50": ..., "itl_p99": ...}`` with 0.0 for
+    percentiles that have no samples.
+    """
+    ttft = [r.t_first - r.t_submit for r in reqs
+            if r.t_first is not None and r.t_submit is not None]
+    itl: List[float] = []
+    for r in reqs:
+        if len(r.tok_t) >= 2:
+            itl.extend(np.diff(np.asarray(r.tok_t)).tolist())
+    out: Dict[str, float] = {"n": float(len(ttft))}
+    for name, xs in (("ttft", ttft), ("itl", itl)):
+        for p in pcts:
+            out[f"{name}_p{int(p)}"] = (float(np.percentile(xs, p))
+                                        if xs else 0.0)
+    return out
 
 
 def done_after_emit(tok, produced, length, max_new, eos, max_len):
@@ -182,7 +245,7 @@ class DecodeEngine:
                  round_budget: int = 0, page_size: int = 0,
                  pool_pages: int = 0, cache_dtype: str = "fp32",
                  prefix_cache: bool = False, preemption: bool = False,
-                 mesh=None):
+                 mesh=None, slo_aware: bool = True, clock=None):
         """``chunk_tokens`` caps the prompt tokens one slot prefills per
         round (0 = the whole remaining prompt in one chunk); it is rounded
         up to a multiple of MTLA's temporal stride so chunk boundaries
@@ -213,7 +276,18 @@ class DecodeEngine:
         round stays one dispatch and one host sync regardless of mesh
         width, and emitted tokens are identical to mesh=None. The
         allocator, prefix tree, and scheduler stay host-side with global
-        page IDs (see docs/serving.md "Sharding")."""
+        page IDs (see docs/serving.md "Sharding").
+
+        ``slo_aware`` feeds the engine clock into ``plan_round`` so the
+        budget split steers by per-request SLO headroom (EDF chunk order,
+        prefill-first flip — docs/serving.md "SLO-aware scheduling");
+        False pins the FIFO split regardless of attached SLOs. ``clock``
+        replaces ``time.perf_counter`` as the source of every request
+        lifecycle stamp and deadline comparison — the open-loop harness
+        passes a deterministic virtual clock (benchmarks/loadgen.py) so
+        goodput counters reproduce bit-exactly. Wall-time performance
+        counters (``prefill_time_s`` / ``decode_time_s``) always use the
+        real clock."""
         if backend is not None:
             cfg = cfg.replace(backend=backend)
         self.params, self.cfg = params, cfg
@@ -306,6 +380,9 @@ class DecodeEngine:
         self.caches = self._place_caches(self.caches)
         self.state = self._init_state()
         self._sample = jax.jit(sampling.sample)
+        self.slo_aware = bool(slo_aware)
+        self._clock = clock if clock is not None else time.perf_counter
+        self.pending: List[Request] = []
         self._finished: List[Request] = []
         self.failed: List[Request] = []
         self.burst_traces = 0           # burst graph traces (compilations)
@@ -327,6 +404,8 @@ class DecodeEngine:
         #                                  prefix cache instead of prefilled
         self.preemptions = 0            # slots evicted to the swap area
         self.resumes = 0                # swapped requests restored
+        self.slo_requests = 0           # finished requests carrying an SLO
+        self.slo_met = 0                # ... that met every attached target
 
     def reset(self):
         """Drop all requests and re-init caches/state; compiled burst and
@@ -342,12 +421,18 @@ class DecodeEngine:
             self.prefix.reset()
         self.state = self._init_state()
         self.scheduler.reset()
+        self.pending = []
         self._finished, self.failed = [], []
         self._reset_counters()
 
     @property
     def slots(self):
+        """Per-slot resident requests (None = free), scheduler view."""
         return self.scheduler.slots
+
+    def _sched_now(self) -> Optional[float]:
+        """Clock reading handed to plan_round; None pins the FIFO split."""
+        return self._clock() if self.slo_aware else None
 
     # --- mesh plumbing -----------------------------------------------------
     def _place_caches(self, caches):
@@ -483,6 +568,7 @@ class DecodeEngine:
         for req in plan.rejected:
             # scheduler.plan set req.error (oversized prompt / over-pool)
             req.done = True
+            self._account_finish(req)
             self.failed.append(req)
             self._finished.append(req)
         if plan.deferred:
@@ -569,7 +655,7 @@ class DecodeEngine:
         if any chunk ran."""
         chunks, _ = self.scheduler.plan_round(
             chunk_tokens=self.chunk_tokens, round_budget=0,
-            burst=self.burst, stride=self._stride)
+            burst=self.burst, stride=self._stride, now=self._sched_now())
         if chunks:
             self._prefill_chunks(chunks)
         return bool(chunks)
@@ -699,7 +785,7 @@ class DecodeEngine:
                                 self.state["temp"], self.state["top_k"],
                                 self.state["top_p"], self.state["greedy"])
         tok, rng = np.asarray(tok), np.asarray(rng)
-        now = time.perf_counter()
+        now = self._clock()
         st = {k: np.array(v) for k, v in self.state.items()}
         for slot, req in assignments:
             t = int(tok[slot])
@@ -717,6 +803,7 @@ class DecodeEngine:
                                     self.eos, self.max_len)):
                 st["done"][slot] = True
                 req.done = True
+                self._account_finish(req)
                 self._release_slot(slot)
                 self._finished.append(req)
         self.state = {k: jnp.asarray(v) for k, v in st.items()}
@@ -914,8 +1001,8 @@ class DecodeEngine:
         # the single host sync of the burst:
         out_tok, out_val = np.asarray(out_tok), np.asarray(out_val)
         done = np.asarray(state["done"])
-        now = time.perf_counter()
-        self.decode_time_s += now - t0
+        self.decode_time_s += time.perf_counter() - t0
+        now = self._clock()
         self.state, self.caches = state, caches
         self.decode_calls += 1
         self.steps += int(k)
@@ -927,8 +1014,116 @@ class DecodeEngine:
             self.decoded_tokens += len(new)
             if done[slot]:
                 req.done = True
+                self._account_finish(req)
                 self._release_slot(slot)
                 finished.append(req)
+        return finished
+
+    # --- SLO / goodput accounting -------------------------------------------
+    def _account_finish(self, req: Request):
+        """Score SLO attainment the moment a request leaves the engine.
+
+        TTFT attainment compares ``t_first - t_submit`` against the target;
+        ITL attainment requires every consecutive ``tok_t`` gap within the
+        target (a single host sync stamps its whole burst at once, so the
+        measurable gap is the sync cadence). A rejected request that
+        carried an SLO counts against goodput — dropping traffic is a
+        miss, not a pass. Requests without an SLO are not counted.
+        """
+        slo = req.slo
+        if slo is None or (slo.ttft is None and slo.itl is None):
+            return
+        self.slo_requests += 1
+        if req.error is not None or req.t_first is None:
+            req.ttft_ok = req.itl_ok = False
+            return
+        req.ttft_ok = (slo.ttft is None or req.t_submit is None
+                       or req.t_first - req.t_submit <= slo.ttft)
+        if slo.itl is None or len(req.tok_t) < 2:
+            req.itl_ok = True
+        else:
+            req.itl_ok = bool(
+                float(np.diff(np.asarray(req.tok_t)).max()) <= slo.itl)
+        if req.ttft_ok and req.itl_ok:
+            self.slo_met += 1
+
+    def slo_report(self) -> Dict[str, float]:
+        """Goodput rollup over finished SLO-carrying requests.
+
+        ``goodput`` is the fraction that met **every** attached target
+        (both TTFT and ITL when both are set); with no SLO traffic it
+        reports 1.0 — nothing asked, nothing missed. Deterministic under
+        a virtual clock, so benchmarks gate it as a hard floor
+        (docs/workloads.md).
+        """
+        n = self.slo_requests
+        return {"slo_requests": float(n), "slo_met": float(self.slo_met),
+                "goodput": (self.slo_met / n) if n else 1.0}
+
+    # --- the step loop ------------------------------------------------------
+    def submit(self, requests: Sequence[Request]):
+        """Queue requests for the step loop, stamping ``t_submit`` from the
+        engine clock (already-stamped requests — open-loop arrivals whose
+        queueing delay must count against TTFT, re-queued preemption
+        victims — keep their original stamp) and lifting each request's
+        preemption priority to at least its SLO tier."""
+        now = self._clock()
+        for req in requests:
+            if req.t_submit is None:
+                req.t_submit = now
+            if req.slo is not None:
+                req.priority = max(req.priority, req.slo.tier)
+        self.pending.extend(requests)
+
+    def has_work(self) -> bool:
+        """True while any request is queued or resident."""
+        return bool(self.pending or self.scheduler.any_active())
+
+    def _drain(self) -> List[Request]:
+        """Pop and return everything in the finished queue."""
+        out, self._finished = self._finished, []
+        return out
+
+    def step(self) -> List[Request]:
+        """One round of the token-budget step loop; returns the requests
+        that finished this round (including rejections, with ``req.error``
+        set). A round admits what fits from ``pending`` (with
+        ``preemption=True`` a starved queue head may first evict a
+        strictly-lower-priority resident, which re-queues just behind it),
+        plans the budget split, runs one chunked-prefill call over the
+        PREFILLING slots' next chunks, and runs one decode burst. Drivers
+        that feed arrivals mid-flight call ``submit`` between steps —
+        that is the open-loop harness's replay loop."""
+        finished: List[Request] = []
+        while True:
+            if self.pending and self.scheduler.free_slots():
+                plan = self._admit(self.pending)
+                taken = plan.taken()
+                if taken:
+                    tid = {id(r) for r in taken}
+                    self.pending = [r for r in self.pending
+                                    if id(r) not in tid]
+                finished.extend(self._drain())
+            if self.preemption and self.pending:
+                victim = self._maybe_preempt(self.pending[0])
+                if victim is not None:
+                    self.pending.insert(1, victim)
+                    continue        # retry admission before decoding on
+            break
+        # the budget split plans the chunk set and the burst bound together
+        had_decoding = bool(self.scheduler.decoding())
+        chunks, quota = self.scheduler.plan_round(
+            chunk_tokens=self.chunk_tokens,
+            round_budget=self.round_budget, burst=self.burst,
+            stride=self._stride, now=self._sched_now())
+        if chunks:
+            self._prefill_chunks(chunks)
+            finished.extend(self._drain())
+        if not had_decoding:
+            # slots that just finished their final chunk decode at the
+            # full quota — there was no decode phase in this budget
+            quota = self.scheduler.burst_quota(self.burst)
+        finished.extend(self._burst_step(quota))
         return finished
 
     def run(self, requests: List[Request], max_steps: int = 10_000
@@ -943,47 +1138,11 @@ class DecodeEngine:
         admission left starved may evict a strictly-lower-priority
         resident slot (mid-decode or mid-prefill) to the swap area; the
         victim re-queues just behind it and resumes bit-exact."""
-        pending = list(requests)
-        now = time.perf_counter()
-        for req in pending:
-            if req.t_submit is None:
-                req.t_submit = now      # re-queued victims keep the original
+        self.submit(requests)
         done: Dict[int, List[int]] = {}
-
-        def drain():
-            while self._finished:
-                req = self._finished.pop()
-                done[req.rid] = req.out
-
-        while (pending or self.scheduler.any_active()) \
-                and self.steps < max_steps:
-            if pending and self.scheduler.free_slots():
-                plan = self._admit(pending)
-                taken = plan.taken()
-                if taken:
-                    tid = {id(r) for r in taken}
-                    pending = [r for r in pending if id(r) not in tid]
-                drain()
-            if self.preemption and pending:
-                victim = self._maybe_preempt(pending[0])
-                if victim is not None:
-                    pending.insert(1, victim)
-                    continue        # retry admission before decoding on
-            # one round of the step loop: the budget split plans the
-            # chunk set and the burst bound together
-            had_decoding = bool(self.scheduler.decoding())
-            chunks, quota = self.scheduler.plan_round(
-                chunk_tokens=self.chunk_tokens,
-                round_budget=self.round_budget, burst=self.burst,
-                stride=self._stride)
-            if chunks:
-                self._prefill_chunks(chunks)
-                drain()
-            if not had_decoding:
-                # slots that just finished their final chunk decode at the
-                # full quota — there was no decode phase in this budget
-                quota = self.scheduler.burst_quota(self.burst)
-            for fin in self._burst_step(quota):
+        while self.has_work() and self.steps < max_steps:
+            for fin in self.step():
                 done[fin.rid] = fin.out
-        drain()
+        for fin in self._drain():
+            done[fin.rid] = fin.out
         return done

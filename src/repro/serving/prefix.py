@@ -69,6 +69,10 @@ class PrefixHit:
 
 
 class RadixNode:
+    """One tree-owned page: ``key`` is the page's token tuple (edge label
+    from ``parent``), ``page`` its physical pool ID, ``touch`` the LRU
+    clock of its last lookup/publish (leaf-first eviction order)."""
+
     __slots__ = ("key", "page", "parent", "children", "touch")
 
     def __init__(self, key: Optional[Tuple[int, ...]], page: int,
@@ -93,6 +97,7 @@ class PrefixCache:
         self.reset()
 
     def reset(self):
+        """Drop the whole tree and zero the hit/publish statistics."""
         self.root = RadixNode(None, -1, None, 0)
         self.clock = 0
         self.lookups = 0
@@ -102,6 +107,7 @@ class PrefixCache:
 
     @property
     def pages(self) -> int:
+        """Physical pages the tree currently owns."""
         return self.pool.tree_pages
 
     # --- lookup -------------------------------------------------------------

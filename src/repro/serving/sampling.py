@@ -43,6 +43,7 @@ class SamplingParams:
 
     @property
     def greedy(self) -> bool:
+        """True when these params reduce to argmax decoding."""
         return self.temperature <= 0.0
 
 

@@ -31,6 +31,22 @@ least 1, and the oldest PREFILLING slot always receives a chunk — so a
 tiny budget degrades to alternating single-chunk/single-step rounds
 instead of starving either phase.
 
+Requests may carry per-request latency targets (an ``SLO``: a TTFT
+deadline for the first token, an ITL bound between later tokens, and a
+priority tier). When ``plan_round`` is given the engine clock (``now``),
+the budget split becomes **SLO-aware**: PREFILLING slots are ordered
+earliest-TTFT-deadline-first instead of FIFO (SLO-less slots keep FIFO
+order *behind* every deadline), and when the nearest TTFT deadline is
+tighter than every decoding slot's next ITL deadline, the prompt chunks
+claim the budget *before* the decode burst (whose quota then shrinks to
+the remainder, still never below 1 — decode can lag but never starve).
+With no resident SLOs every deadline is infinite, so the plan — ordering,
+chunk widths, quota — is bit-identical to the FIFO policy; SLO awareness
+is strictly additive. Deadline arithmetic lives in ``ttft_deadline`` /
+``itl_deadline``; both read the engine-clock stamps on the request
+(``t_submit``, ``tok_t``), so under a virtual clock (benchmarks/loadgen)
+the whole policy is deterministic.
+
 With a page ``pool``, admission reserves each request's worst-case page
 demand; a prefix cache (serving/prefix.py) *discounts* the reservation by
 the pages a prompt's cached prefix already holds, and the hit's shared
@@ -56,6 +72,10 @@ resident request has strictly lower priority than the queue head, the
 engine may evict it mid-decode (pages snapshot to the pool's swap area and
 the request re-queues; serving/engine.py::DecodeEngine.preempt). Among
 equal-priority victims the most recently admitted loses the least progress.
+SLO priority **tiers** map straight onto this machinery: the engine lifts
+``req.priority`` to ``req.slo.tier`` at submit time, so a tier-1
+interactive request can evict a tier-0 batch request through the existing
+victim selection with no scheduler change.
 
 Early exit is two-level: the device burst loop (a ``lax.while_loop``) stops
 as soon as every slot is done mid-burst, and ``burst_quota`` caps the loop
@@ -67,6 +87,61 @@ from __future__ import annotations
 
 import dataclasses
 from typing import List, Optional, Sequence, Tuple
+
+INF = float("inf")
+
+
+@dataclasses.dataclass(frozen=True)
+class SLO:
+    """Per-request latency targets, in the engine clock's units.
+
+    The engine clock defaults to wall seconds (``time.perf_counter``); an
+    open-loop replay (benchmarks/loadgen.py) swaps in a deterministic
+    virtual clock, and these targets are then virtual-time budgets.
+
+    Attributes:
+        ttft: time-to-first-token budget measured from ``Request.t_submit``
+            (the arrival stamp), or None for no first-token deadline.
+        itl: inter-token-latency bound between consecutive emitted-token
+            stamps (host syncs quantize these to burst boundaries), or
+            None for no decode-cadence deadline.
+        tier: priority tier; the engine lifts ``Request.priority`` to at
+            least this, mapping SLO classes onto the existing
+            ``select_victim`` preemption machinery.
+    """
+    ttft: Optional[float] = None
+    itl: Optional[float] = None
+    tier: int = 0
+
+
+def ttft_deadline(req, default: float = INF) -> float:
+    """Absolute engine-clock deadline for ``req``'s first token.
+
+    ``default`` (infinity) when the request carries no TTFT SLO or has not
+    been stamped with an arrival time yet — infinite deadlines sort behind
+    every real one and never flip the budget split.
+    """
+    slo = getattr(req, "slo", None)
+    t0 = getattr(req, "t_submit", None)
+    if slo is None or slo.ttft is None or t0 is None:
+        return default
+    return t0 + slo.ttft
+
+
+def itl_deadline(req, default: float = INF) -> float:
+    """Absolute engine-clock deadline for ``req``'s *next* token.
+
+    Measured from the request's last emitted-token stamp (its arrival
+    stamp before any token); ``default`` when it carries no ITL SLO.
+    """
+    slo = getattr(req, "slo", None)
+    if slo is None or slo.itl is None:
+        return default
+    tok_t = getattr(req, "tok_t", None)
+    last = tok_t[-1] if tok_t else getattr(req, "t_submit", None)
+    if last is None:
+        return default
+    return last + slo.itl
 
 
 @dataclasses.dataclass
@@ -83,6 +158,7 @@ class AdmissionPlan:
     deferred: bool = False
 
     def taken(self) -> List[object]:
+        """Requests this plan removed from the queue (admitted + rejected)."""
         return [r for _, r in self.assignments] + list(self.rejected)
 
 
@@ -101,9 +177,11 @@ class Scheduler:
 
     # --- occupancy ---------------------------------------------------------
     def free_slots(self) -> List[int]:
+        """Indices of currently unassigned slots."""
         return [i for i, s in enumerate(self.slots) if s is None]
 
     def occupied(self) -> List[Tuple[int, object]]:
+        """(slot, request) pairs for every assigned slot."""
         return [(i, s) for i, s in enumerate(self.slots) if s is not None]
 
     def decoding(self) -> List[Tuple[int, object]]:
@@ -118,13 +196,16 @@ class Scheduler:
                       key=lambda sr: self._admitted_at[sr[0]])
 
     def any_active(self) -> bool:
+        """True while any slot holds a request (either phase)."""
         return any(s is not None for s in self.slots)
 
     def any_prefilling(self) -> bool:
+        """True while any occupied slot is still streaming its prompt."""
         return any(self.prefilling[i] for i, s in enumerate(self.slots)
                    if s is not None)
 
     def reset(self):
+        """Drop every slot assignment and phase back to the initial state."""
         self.slots = [None] * self.batch
         self.admit_seq = 0
         self._admitted_at = [0] * self.batch
@@ -140,9 +221,11 @@ class Scheduler:
         self.cursor[slot] = cursor
 
     def advance_prefill(self, slot: int, tokens: int):
+        """Move a PREFILLING slot's cursor past a just-written chunk."""
         self.cursor[slot] += tokens
 
     def finish_prefill(self, slot: int):
+        """Flip a slot PREFILLING -> DECODING (first token sampled)."""
         self.prefilling[slot] = False
 
     # --- admission ---------------------------------------------------------
@@ -216,6 +299,7 @@ class Scheduler:
         return AdmissionPlan(assignments, rejected, consumed, deferred)
 
     def commit(self, plan: AdmissionPlan):
+        """Install a plan's slot assignments (stamping admission order)."""
         for slot, req in plan.assignments:
             assert self.slots[slot] is None, f"slot {slot} already occupied"
             self.admit_seq += 1
@@ -223,6 +307,7 @@ class Scheduler:
             self._admitted_at[slot] = self.admit_seq
 
     def release(self, slot: int):
+        """Free a slot (request retired or preempted); returns the request."""
         req, self.slots[slot] = self.slots[slot], None
         self.prefilling[slot] = False
         self.cursor[slot] = 0
@@ -260,7 +345,8 @@ class Scheduler:
 
     # --- the per-round token budget -----------------------------------------
     def plan_round(self, *, chunk_tokens: int, round_budget: int,
-                   burst: int, stride: int = 1
+                   burst: int, stride: int = 1,
+                   now: Optional[float] = None
                    ) -> Tuple[List[Tuple[int, object, int, int]], int]:
         """Split one round's token budget between the decode burst and the
         PREFILLING slots' next prompt chunks.
@@ -276,17 +362,50 @@ class Scheduler:
         per decoding slot per step first (quota shrinks to fit, never
         below 1) and chunks spend the remainder — the budget bounds every
         chunk, including an uncapped (chunk_tokens=0) head's — but the
-        oldest PREFILLING slot always advances at least one stride per
-        round, so neither phase can starve the other."""
+        head PREFILLING slot always advances at least one stride per
+        round, so neither phase can starve the other.
+
+        ``now`` (the engine clock) enables the **SLO-aware** split:
+        PREFILLING slots order earliest-TTFT-deadline-first (SLO-less
+        slots keep their FIFO order behind every finite deadline, so a
+        workload with no SLOs plans bit-identically to ``now=None``), and
+        when the nearest TTFT deadline is strictly tighter than every
+        decoding slot's next ITL deadline the chunks claim the budget
+        *before* decode — the quota then shrinks to the remainder (never
+        below 1). Slots already past their deadline sort first of all
+        (most negative headroom = most urgent); the head soft floor and
+        the quota floor still hold, so late slots degrade gracefully
+        instead of starving anything.
+        """
         decoding = self.decoding()
         quota = self.burst_quota(burst)
-        budget = float("inf") if round_budget <= 0 else float(round_budget)
-        if decoding and budget < len(decoding) * quota:
-            quota = max(1, int(budget) // len(decoding))
-        if decoding:
+        budget = INF if round_budget <= 0 else float(round_budget)
+        order = self.prefilling_slots()
+        prefill_first = False
+        if now is not None and order:
+            deadline = {slot: ttft_deadline(req) for slot, req in order}
+            if any(d < INF for d in deadline.values()):
+                # stable sort keyed (deadline, admission seq): SLO-less
+                # slots (infinite deadline) keep FIFO order at the back
+                order.sort(key=lambda sr: (deadline[sr[0]],
+                                           self._admitted_at[sr[0]]))
+                if decoding:
+                    itl_head = min(itl_deadline(req)
+                                   for _, req in decoding)
+                    prefill_first = min(deadline.values()) < itl_head
+
+        def claim_decode():
+            nonlocal budget, quota
+            if not decoding:
+                return
+            if budget < len(decoding) * quota:
+                quota = max(1, int(max(budget, 0)) // len(decoding))
             budget -= len(decoding) * quota
+
+        if not prefill_first:
+            claim_decode()
         chunks: List[Tuple[int, object, int, int]] = []
-        for slot, req in self.prefilling_slots():
+        for slot, req in order:
             start = self.cursor[slot]
             remaining = len(req.prompt) - start
             cap = min(chunk_tokens, remaining) if chunk_tokens > 0 \
@@ -297,9 +416,11 @@ class Scheduler:
             if take <= 0:
                 if chunks:
                     continue        # out of budget: wait for a later round
-                # the FIFO head's soft floor: one stride of guaranteed
+                # the head slot's soft floor: one stride of guaranteed
                 # progress per round, however small the budget
                 take = min(stride, remaining)
             budget -= take
             chunks.append((slot, req, start, take))
+        if prefill_first:
+            claim_decode()
         return chunks, quota

@@ -1,0 +1,301 @@
+"""SLO-aware scheduling + open-loop goodput accounting
+(serving/scheduler.py::plan_round, serving/engine.py, benchmarks/loadgen.py).
+
+Pins the PR's contract:
+
+* EDF chunk ordering: PREFILLING slots with the nearest TTFT deadline get
+  chunk budget first; SLO-less slots keep FIFO order behind every finite
+  deadline;
+* prefill-first flip: when the nearest TTFT deadline is tighter than
+  every decoding slot's ITL deadline, chunks claim the round budget
+  before the decode burst (whose quota shrinks to the remainder, never
+  below 1);
+* no starvation: slots already past their deadlines still make progress
+  every round (head soft floor + quota floor survive the SLO path);
+* SLO-less traffic is bit-identical to the FIFO engine — same tokens,
+  same call counts — so SLO awareness is strictly additive;
+* goodput counters are deterministic: two replays of the same seeded
+  trace on virtual clocks produce identical slo_report() dicts and token
+  streams;
+* preempt/resume preserves the SLO clock: a victim keeps its original
+  t_submit stamp and is scored exactly once at finish;
+* the SLO-aware split beats (or ties) FIFO on the head-of-line trace the
+  benchmark gates.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from benchmarks import loadgen
+from repro.core.types import AttentionConfig, ModelConfig
+from repro.models import api
+from repro.serving.engine import DecodeEngine, Request, latency_report
+from repro.serving.scheduler import (SLO, Scheduler, itl_deadline,
+                                     ttft_deadline)
+
+
+def model(kind="mtla", backend="ref", s=2):
+    latent = kind in ("mla", "mtla")
+    return ModelConfig(
+        name="slo", family="dense", num_layers=2, d_model=64, d_ff=128,
+        vocab_size=97, backend=backend,
+        attn=AttentionConfig(kind=kind, num_heads=4, num_kv_heads=4,
+                             head_dim=16,
+                             kv_lora_rank=32 if latent else 0,
+                             rope_head_dim=8 if latent else 0,
+                             hyper_dim=8, s=s, q_chunk=0))
+
+
+def _req(rid, plen, max_new=8, slo=None, t_submit=None):
+    r = Request(rid=rid, prompt=np.arange(plen, dtype=np.int32) % 97,
+                max_new=max_new, slo=slo)
+    r.t_submit = t_submit
+    return r
+
+
+def _admit_prefilling(sched, reqs):
+    """Commit reqs into slots in FIFO order, all PREFILLING at cursor 0."""
+    plan = sched.plan(reqs)
+    assert len(plan.assignments) == len(reqs)
+    sched.commit(plan)
+    for slot, _ in plan.assignments:
+        sched.begin_prefill(slot)
+    return {r.rid: slot for slot, r in plan.assignments}
+
+
+# ---------------------------------------------------------------------------
+# deadline arithmetic
+# ---------------------------------------------------------------------------
+
+def test_deadline_helpers():
+    """TTFT deadlines anchor at t_submit; ITL deadlines at the last token
+    stamp (falling back to t_submit before any token); missing SLOs or
+    stamps give infinity."""
+    r = _req(0, 4, slo=SLO(ttft=5.0, itl=2.0), t_submit=10.0)
+    assert ttft_deadline(r) == 15.0
+    assert itl_deadline(r) == 12.0          # no tokens yet -> from submit
+    r.tok_t = [20.0, 21.5]
+    assert itl_deadline(r) == 23.5
+    assert ttft_deadline(_req(1, 4)) == float("inf")
+    assert ttft_deadline(_req(2, 4, slo=SLO(ttft=5.0))) == float("inf")
+    #      ^ SLO attached but never submitted: no anchor, no deadline
+    assert itl_deadline(_req(3, 4, slo=SLO(ttft=5.0), t_submit=0.0)) \
+        == float("inf")
+
+
+# ---------------------------------------------------------------------------
+# plan_round: EDF ordering + prefill-first flip
+# ---------------------------------------------------------------------------
+
+def test_edf_chunk_order():
+    """Finite TTFT deadlines reorder the chunk queue earliest-first;
+    SLO-less slots queue behind them in FIFO order."""
+    sched = Scheduler(batch=4, max_len=64)
+    r0 = _req(0, 32)                                    # no SLO
+    r1 = _req(1, 32, slo=SLO(ttft=9.0), t_submit=0.0)   # deadline 9
+    r2 = _req(2, 32, slo=SLO(ttft=4.0), t_submit=0.0)   # deadline 4
+    r3 = _req(3, 32)                                    # no SLO
+    slot = _admit_prefilling(sched, [r0, r1, r2, r3])
+    chunks, _ = sched.plan_round(chunk_tokens=8, round_budget=0,
+                                 burst=4, stride=2, now=1.0)
+    assert [c[1].rid for c in chunks] == [2, 1, 0, 3]
+    # FIFO without a clock, and with a clock but no SLOs in residence
+    chunks, _ = sched.plan_round(chunk_tokens=8, round_budget=0,
+                                 burst=4, stride=2)
+    assert [c[1].rid for c in chunks] == [0, 1, 2, 3]
+    assert slot[r2.rid] is not None
+
+
+def test_sloless_plan_bit_identical():
+    """With no SLOs in residence, a clocked plan equals the FIFO plan
+    exactly — ordering, widths, and quota."""
+    sched = Scheduler(batch=3, max_len=64)
+    _admit_prefilling(sched, [_req(i, 20 + 4 * i) for i in range(3)])
+    fifo = sched.plan_round(chunk_tokens=8, round_budget=12, burst=4,
+                            stride=2)
+    clocked = sched.plan_round(chunk_tokens=8, round_budget=12, burst=4,
+                               stride=2, now=123.0)
+    assert fifo == clocked
+
+
+def test_prefill_first_flip_shrinks_decode_quota():
+    """A TTFT deadline tighter than every decoding slot's ITL deadline
+    hands the budget to the chunks first; the decode quota drops to the
+    floor instead of claiming the round."""
+    def build(slo):
+        sched = Scheduler(batch=2, max_len=64)
+        dec = _req(0, 4, max_new=8, slo=SLO(itl=100.0), t_submit=0.0)
+        dec.tok_t = [0.0]
+        pre = _req(1, 32, slo=slo, t_submit=0.0)
+        plan = sched.plan([dec, pre])
+        sched.commit(plan)
+        sched.begin_prefill(plan.assignments[1][0])
+        return sched
+    # FIFO split: decode claims the whole budget, head chunk soft-floors
+    chunks, quota = build(SLO(ttft=1.0)).plan_round(
+        chunk_tokens=16, round_budget=8, burst=8, stride=2)
+    assert quota == 8 and chunks == [(1, chunks[0][1], 0, 2)]
+    # SLO-aware: TTFT deadline (1.0) < ITL deadline (100.0) -> chunks
+    # spend first, decode keeps the quota floor
+    chunks, quota = build(SLO(ttft=1.0)).plan_round(
+        chunk_tokens=16, round_budget=8, burst=8, stride=2, now=0.5)
+    assert chunks[0][3] == 8 and quota == 1
+    # loose TTFT deadline: decode keeps claiming first
+    chunks, quota = build(SLO(ttft=1000.0)).plan_round(
+        chunk_tokens=16, round_budget=8, burst=8, stride=2, now=0.5)
+    assert quota == 8 and chunks[0][3] == 2
+
+
+def test_all_past_deadline_no_starvation():
+    """Every slot past its TTFT deadline: most-negative-headroom sorts
+    first, and repeated tight-budget rounds still drive every prompt to
+    completion — the soft floor survives the SLO path."""
+    sched = Scheduler(batch=3, max_len=64)
+    reqs = [_req(i, 24, slo=SLO(ttft=float(3 - i)), t_submit=0.0)
+            for i in range(3)]          # deadlines 3, 2, 1 — all < now
+    _admit_prefilling(sched, reqs)
+    chunks, _ = sched.plan_round(chunk_tokens=8, round_budget=4,
+                                 burst=4, stride=2, now=50.0)
+    assert [c[1].rid for c in chunks][0] == 2       # most overdue first
+    rounds = 0
+    while sched.any_prefilling():
+        chunks, _ = sched.plan_round(chunk_tokens=8, round_budget=4,
+                                     burst=4, stride=2, now=50.0 + rounds)
+        assert chunks, "a tight budget must never plan an empty round"
+        for slot, req, start, n in chunks:
+            sched.advance_prefill(slot, n)
+            if start + n == len(req.prompt):
+                sched.finish_prefill(slot)
+        rounds += 1
+        assert rounds < 100
+    assert rounds >= 3 * 24 // 8        # budget really was the binding cap
+
+
+# ---------------------------------------------------------------------------
+# engine: SLO-less bit-identity, goodput determinism, preempt/resume
+# ---------------------------------------------------------------------------
+
+def _spec(seed, slo=None, slo_frac=1.0):
+    return loadgen.WorkloadSpec(n=8, rate=0.25, prompt_lens=(6, 10, 24),
+                                max_new_lens=(5, 8), slo=slo,
+                                slo_frac=slo_frac, vocab=97, seed=seed)
+
+
+def _replay(params, cfg, spec, slo_aware=True):
+    vc = loadgen.VirtualClock()
+    eng = DecodeEngine(params, cfg, batch=2, max_len=64, dtype=jnp.float32,
+                       burst=4, chunk_tokens=8, prefill_bucket=8,
+                       round_budget=12, page_size=4, slo_aware=slo_aware,
+                       clock=vc)
+    fin = loadgen.replay(eng, loadgen.build(spec), vc)
+    return eng, fin
+
+
+def test_sloless_engine_bit_identical_to_fifo():
+    """An SLO-aware engine serving SLO-less traffic emits the same tokens
+    through the same number of calls as the FIFO engine — on the same
+    open-loop trace."""
+    cfg = model("mtla")
+    params = api.init_model(jax.random.PRNGKey(0), cfg)
+    a, fa = _replay(params, cfg, _spec(seed=5), slo_aware=True)
+    b, fb = _replay(params, cfg, _spec(seed=5), slo_aware=False)
+    assert {r.rid: r.out for r in fa} == {r.rid: r.out for r in fb}
+    assert (a.prefill_calls, a.decode_calls, a.steps) == \
+           (b.prefill_calls, b.decode_calls, b.steps)
+    assert a.slo_report() == {"slo_requests": 0.0, "slo_met": 0.0,
+                              "goodput": 1.0}
+
+
+def test_goodput_deterministic_across_runs():
+    """Two replays of the same seeded trace agree on every stamp-derived
+    number: slo_report, token streams, and the latency percentiles."""
+    cfg = model("mtla")
+    params = api.init_model(jax.random.PRNGKey(0), cfg)
+    spec = _spec(seed=9, slo=SLO(ttft=12.0, itl=8.0), slo_frac=0.75)
+    a, fa = _replay(params, cfg, spec)
+    b, fb = _replay(params, cfg, spec)
+    assert a.slo_report() == b.slo_report()
+    assert a.slo_requests > 0           # the draw really attached SLOs
+    assert {r.rid: r.out for r in fa} == {r.rid: r.out for r in fb}
+    assert latency_report(fa) == latency_report(fb)
+    assert [(r.rid, r.ttft_ok, r.itl_ok) for r in fa] == \
+           [(r.rid, r.ttft_ok, r.itl_ok) for r in fb]
+
+
+def test_submit_lifts_priority_to_slo_tier():
+    """submit() maps SLO tiers onto the preemption machinery by lifting
+    req.priority — select_victim then works unchanged."""
+    cfg = model("mtla")
+    params = api.init_model(jax.random.PRNGKey(0), cfg)
+    eng = DecodeEngine(params, cfg, batch=2, max_len=64,
+                       dtype=jnp.float32, burst=4)
+    hi = _req(0, 4, slo=SLO(ttft=1.0, tier=2))
+    lo = _req(1, 4)
+    eng.submit([hi, lo])
+    assert hi.priority == 2 and lo.priority == 0
+    assert hi.t_submit is not None and hi.t_submit == lo.t_submit
+
+
+def test_preempt_resume_preserves_slo_clock():
+    """A preempted request keeps its original t_submit (the TTFT anchor),
+    its token stamps stay monotonic across the swap, and it is scored
+    exactly once when it finishes."""
+    cfg = model("mtla")
+    params = api.init_model(jax.random.PRNGKey(0), cfg)
+    vc = loadgen.VirtualClock()
+    eng = DecodeEngine(params, cfg, batch=1, max_len=64, dtype=jnp.float32,
+                       burst=4, page_size=4, preemption=True, clock=vc)
+    victim = _req(0, 6, max_new=12, slo=SLO(ttft=50.0, itl=50.0))
+    eng.submit([victim])
+    eng.step()                          # admit + first tokens
+    assert victim.t_first is not None and not victim.done
+    t0, ntok = victim.t_submit, len(victim.out)
+    vc.advance(5.0)
+    eng.pending.append(eng.preempt(0))  # evict mid-decode, re-queue
+    vc.advance(5.0)
+    while eng.has_work():
+        eng.step()
+    assert victim.done and eng.preemptions == 1 and eng.resumes == 1
+    assert victim.t_submit == t0        # SLO clock survived the swap
+    assert len(victim.out) == victim.max_new > ntok
+    assert all(b >= a for a, b in zip(victim.tok_t, victim.tok_t[1:]))
+    assert eng.slo_report()["slo_requests"] == 1.0
+
+
+def _hol_arrivals(slo):
+    """The gated head-of-line shape: one long SLO-less prompt arrives
+    first, tight-TTFT shorts right behind it (benchmarks/bench_serving.py
+    goodput section uses the same shape at a larger scale)."""
+    rng = np.random.default_rng(11)
+    long = Request(rid=0, prompt=rng.integers(0, 97, size=(48,)
+                                              ).astype(np.int32), max_new=4)
+    shorts = [Request(rid=1 + i,
+                      prompt=rng.integers(0, 97, size=(6,)).astype(np.int32),
+                      max_new=4, slo=slo)
+              for i in range(3)]
+    return [(0.0, long)] + [(0.2 + 0.1 * i, s)
+                            for i, s in enumerate(shorts)]
+
+
+def test_slo_aware_goodput_beats_fifo_on_hol_trace():
+    """On the head-of-line trace, EDF ordering answers the tight-TTFT
+    shorts before the long SLO-less prompt finishes streaming — goodput
+    must be at least FIFO's (and strictly better on this shape)."""
+    cfg = model("mtla")
+    params = api.init_model(jax.random.PRNGKey(0), cfg)
+    slo = SLO(ttft=4.0, itl=50.0)
+
+    def serve(slo_aware):
+        vc = loadgen.VirtualClock()
+        eng = DecodeEngine(params, cfg, batch=4, max_len=64,
+                           dtype=jnp.float32, burst=4, chunk_tokens=8,
+                           prefill_bucket=8, round_budget=10,
+                           slo_aware=slo_aware, clock=vc)
+        fin = loadgen.replay(eng, _hol_arrivals(slo), vc)
+        assert len(fin) == 4
+        return eng.slo_report()["goodput"]
+
+    fifo, slo_aware = serve(False), serve(True)
+    assert slo_aware >= fifo
+    assert slo_aware > fifo, (slo_aware, fifo)
