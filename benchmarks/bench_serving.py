@@ -67,6 +67,20 @@ must keep beating FIFO on this trace, and a goodput drop means the
 deadline steering stopped working, however fast the machine is. See
 docs/workloads.md for the workload model and SLO/goodput definitions.
 
+The conversion section migrates the smoke-scale GQA teacher into MLA and
+MTLA s=2 students at a *reduced* latent rank (convert/factorize.py) and
+serves the students through the paged + prefix-cache + chunked engine on
+both backends. Gated quantities (benchmarks/compare.py, DRIFT-REGRESSION):
+``logit_drift`` (teacher-forced max-abs logit delta) and ``ppl_delta``
+(absolute perplexity delta) are deterministic functions of the seeded
+teacher + SVD truncation, held below baseline * ``--drift-slack``;
+``cache_vs_teacher`` (converted paged peak bytes over the teacher's dense
+allocation — the economical-inference axis of the migration) is held like
+the memory ratios; ``backend_tokens_match`` (1 iff the ref and pallas
+engines emit identical token streams for the converted model) is a hard
+floor like ``tokens_match``. ``toks_per_s`` rides the normalized
+throughput gate like every other serving row.
+
 The sharded section runs in a **subprocess** with 8 forced host devices
 (the parent bench process must keep its single-device view for every
 other row): a tp=1 and a tp=4 mesh engine serve the identical paged
@@ -91,7 +105,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import api
-from repro.serving.engine import DecodeEngine, Request, SLO, latency_report
+from repro.serving.engine import (DecodeEngine, Request, SLO,
+                                  cache_bytes_split, latency_report)
 
 from . import loadgen
 from .common import paper_model
@@ -254,6 +269,63 @@ def _goodput_rows():
             f"ttft_p50_vt={lat['ttft_p50']:.2f};"
             f"ttft_p99_vt={lat['ttft_p99']:.2f};"
             f"drain_vt={t:.1f}{extra}")
+    return rows
+
+
+# conversion section: the gqa smoke teacher's stacked-KV spectrum is
+# min(d=64, KV*dh=16) = 16 wide; rank 8 truncates half of it so the drift
+# rows measure a *real* lossy migration, not the exact full-rank mode
+# (tests/test_convert.py pins that one)
+CV_RANK, CV_SEQ, CV_BATCHES = 8, 48, 2
+
+
+def _convert_rows():
+    from repro.convert.factorize import convert_checkpoint
+    from repro.convert.verify import drift_report
+
+    t_cfg = paper_model("gqa", s=2, layers=2, d=64)
+    t_params = api.init_model(jax.random.PRNGKey(0), t_cfg)
+    # teacher footprint: dense per-slot caches at the prefix-section
+    # geometry — the denominator of cache_vs_teacher
+    t_eng = DecodeEngine(t_params, t_cfg, batch=BATCH,
+                         max_len=PREFIX_MAX_LEN, dtype=jnp.float32,
+                         burst=CACHE_BURST)
+    t_eng.run(_prefix_requests(t_cfg, 2 * BATCH))
+    _, teacher_bytes = cache_bytes_split(t_eng.caches, t_eng.peak_active,
+                                         BATCH)
+
+    rows = []
+    for target, s in (("mla", 2), ("mtla", 2)):
+        s_params, s_cfg, rep = convert_checkpoint(
+            t_params, t_cfg, target=target, rank=CV_RANK, s=s)
+        dr = drift_report(t_params, t_cfg, s_params, s_cfg,
+                          batches=CV_BATCHES, seq_len=CV_SEQ, seed=0)
+        outs, rate, cache_rep = {}, 0.0, None
+        for backend in ("ref", "pallas"):
+            eng = DecodeEngine(s_params, s_cfg, batch=BATCH,
+                               max_len=PREFIX_MAX_LEN, dtype=jnp.float32,
+                               burst=CACHE_BURST, page_size=8,
+                               chunk_tokens=PF_CHUNK, prefix_cache=True,
+                               backend=backend)
+            out = eng.run(_prefix_requests(s_cfg, 2 * BATCH))   # warmup
+            outs[backend] = {int(k): list(map(int, v))
+                             for k, v in out.items()}
+            if backend == "ref":
+                rate = _timed_run(eng, s_cfg, 2 * BATCH, _prefix_requests)
+                cache_rep = eng.cache_report()
+        match = int(outs["ref"] == outs["pallas"])
+        ratio = cache_rep["peak"] / max(teacher_bytes, 1)
+        label = (f"gqa-to-{target}{s if target == 'mtla' else ''}"
+                 f"-r{CV_RANK}")
+        rows.append(
+            f"bench_serving/convert/{label},{1e6 / rate:.1f},"
+            f"toks_per_s={rate:.1f};"
+            f"logit_drift={dr['logit_drift']:.4e};"
+            f"ppl_delta={abs(dr['ppl_delta']):.4f};"
+            f"kl={dr['kl']:.4e};energy={rep.min_energy:.4f};"
+            f"cache_vs_teacher={ratio:.3f}x;"
+            f"backend_tokens_match={match};"
+            f"rank={rep.rank};full_rank={rep.full_rank}")
     return rows
 
 
@@ -473,6 +545,7 @@ def run():
             f"pages_cached={rep['pages_cached']};"
             f"pages_peak={rep['pages_peak']}")
 
+    rows.extend(_convert_rows())
     rows.extend(_goodput_rows())
     rows.extend(_sharded_rows())
     return rows

@@ -38,6 +38,19 @@ serving/scheduler.py) stopped answering SLO traffic in time;
 ``goodput_vs_fifo`` falling below baseline means SLO awareness stopped
 paying for itself on the very trace it was built for.
 
+The conversion rows (``bench_serving/convert/*``) gate the checkpoint
+migration's fidelity as **DRIFT-REGRESSION**: ``logit_drift`` (teacher-
+forced max-abs logit delta of the converted model) and ``ppl_delta``
+(absolute perplexity delta) are deterministic functions of the seeded
+teacher and the SVD truncation rank, so baseline * ``--drift-slack`` is a
+ceiling — growth means the factorization, the decoupled-rope carry-through,
+or the latent serving path regressed numerically. ``cache_vs_teacher``
+(converted-model paged peak bytes over the teacher's dense cache
+allocation) is gated under ``--mem-slack`` like the other byte ratios —
+creep toward 1.0 means the migration stopped paying its memory dividend —
+and ``backend_tokens_match`` (1 iff ref and pallas serve the converted
+model token-for-token) is a hard floor.
+
 The sharded serving rows (``bench_serving/sharded/*``) gate two more
 machine-independent quantities: ``per_device_vs_tp1`` (tp=4 per-device
 pool bytes over tp=1's — a shard-shape ratio that creeps toward 1.0 if a
@@ -72,6 +85,11 @@ def main() -> int:
     ap.add_argument("--mem-slack", type=float, default=1.10,
                     help="fail when a vs_dense_fp32 byte ratio grows by "
                          "more than this factor vs baseline")
+    ap.add_argument("--drift-slack", type=float, default=1.50,
+                    help="fail when a conversion row's logit_drift or "
+                         "ppl_delta grows by more than this factor vs "
+                         "baseline (deterministic teacher-forced drift of "
+                         "the converted checkpoint)")
     ap.add_argument("--ttft-slack", type=float, default=1.30,
                     help="fail when a ttft_vs_unchunked ratio grows by "
                          "more than this factor vs baseline (same-process "
@@ -102,7 +120,8 @@ def main() -> int:
         gated = ("toks_per_s", "vs_dense_fp32", "hit_rate",
                  "prefill_skipped", "ttft_vs_unchunked",
                  "per_device_vs_tp1", "tokens_match", "goodput",
-                 "goodput_vs_fifo")
+                 "goodput_vs_fifo", "logit_drift", "ppl_delta",
+                 "cache_vs_teacher", "backend_tokens_match")
         if name == args.reference or not any(k in bd for k in gated):
             continue
         cd = cur.get(name)
@@ -158,6 +177,46 @@ def main() -> int:
                     f"{name}: per_device_vs_tp1 {ratio:.3f}x > baseline "
                     f"{bd['per_device_vs_tp1']:.3f}x * {args.mem_slack} "
                     f"(the paged pool stopped sharding over the mesh)")
+        for det in ("logit_drift", "ppl_delta"):
+            # teacher-forced drift of the converted checkpoint: seeded
+            # teacher + deterministic SVD truncation, so baseline * slack
+            # is a ceiling — growth means the factorization, the rope
+            # carry-through, or the latent forward regressed numerically
+            if det in bd:
+                val = cd.get(det, float("inf"))
+                shown = shown or (f"  {det} {val:.3e} "
+                                  f"(baseline {bd[det]:.3e})")
+                if val > bd[det] * args.drift_slack:
+                    status = "DRIFT-REGRESSION"
+                    failures.append(
+                        f"{name}: {det} {val:.4e} > baseline "
+                        f"{bd[det]:.4e} * {args.drift_slack} (converted-"
+                        f"checkpoint drift is deterministic; growth means "
+                        f"the conversion math or the latent serving path "
+                        f"regressed)")
+        if "cache_vs_teacher" in bd:
+            # converted paged peak bytes over the teacher's dense cache —
+            # machine-independent like vs_dense_fp32; creep toward 1.0
+            # means the migration stopped paying its memory dividend
+            ratio = cd.get("cache_vs_teacher", float("inf"))
+            shown = shown or f"  {ratio:.3f}x teacher cache " \
+                             f"(baseline {bd['cache_vs_teacher']:.3f})"
+            if ratio > bd["cache_vs_teacher"] * args.mem_slack:
+                status = "MEM-REGRESSION"
+                failures.append(
+                    f"{name}: cache_vs_teacher {ratio:.3f}x > baseline "
+                    f"{bd['cache_vs_teacher']:.3f}x * {args.mem_slack} "
+                    f"(the converted model's paged cache stopped beating "
+                    f"the teacher's dense allocation)")
+        if "backend_tokens_match" in bd \
+                and cd.get("backend_tokens_match", 0) \
+                < bd["backend_tokens_match"] - 1e-9:
+            status = "DRIFT-REGRESSION"
+            failures.append(
+                f"{name}: backend_tokens_match "
+                f"{cd.get('backend_tokens_match', 0)} < baseline "
+                f"{bd['backend_tokens_match']} (ref and pallas must serve "
+                f"the converted checkpoint token-for-token)")
         for det in ("goodput", "goodput_vs_fifo"):
             # deterministic virtual-clock SLO attainment (the goodput
             # trace replays on virtual time, so these are timing-free):

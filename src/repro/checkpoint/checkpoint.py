@@ -132,6 +132,50 @@ def restore_checkpoint(ckpt_dir: str, step: int, like: Any, *,
     return jax.tree_util.tree_unflatten(treedef, out), manifest["extra"]
 
 
+def save_model_checkpoint(ckpt_dir: str, step: int, params, config_dict:
+                          Dict, *, extra: Optional[Dict] = None,
+                          keep: int = 3) -> str:
+    """Model checkpoint: params plus the ModelConfig (as a dict, see
+    core/types.config_to_dict) in the manifest — self-describing, so
+    ``load_model_checkpoint`` needs no ``like`` template. The conversion
+    CLI writes converted MLA/MTLA students this way."""
+    return save_checkpoint(ckpt_dir, step, {"params": params},
+                           extra={"model_config": config_dict,
+                                  **(extra or {})}, keep=keep)
+
+
+def load_model_checkpoint(ckpt_dir: str, step: Optional[int] = None):
+    """Load a model checkpoint written by ``save_model_checkpoint``.
+
+    Returns ``(params, extra)`` where ``extra["model_config"]`` rebuilds
+    the ModelConfig via core/types.config_from_dict. The nested params dict
+    is reconstructed from the manifest's "/"-joined key paths (no template
+    pytree needed), after the same integrity checks ``latest_step`` runs.
+    """
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no valid checkpoint under {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    if not _valid(path):
+        raise ValueError(f"checkpoint {path} failed integrity check")
+    with open(os.path.join(path, "manifest.msgpack"), "rb") as f:
+        manifest = msgpack.unpackb(f.read())
+    state: Dict[str, Any] = {}
+    with np.load(os.path.join(path, "payload.0.npz")) as z:
+        for k in manifest["keys"]:
+            parts = k.split("/")
+            d = state
+            for pt in parts[:-1]:
+                d = d.setdefault(pt, {})
+            d[parts[-1]] = jnp.asarray(z[k])
+    if "params" not in state:
+        raise ValueError(f"{path} is not a model checkpoint (no 'params' "
+                         "subtree; was it written by save_checkpoint with "
+                         "a different state layout?)")
+    return state["params"], manifest["extra"]
+
+
 class AsyncCheckpointer:
     """Background-thread writer: ``save`` snapshots to host immediately
     (blocking only on device->host copy), serialization/IO happen off the

@@ -1,0 +1,20 @@
+"""Checkpoint migration: GQA/MHA/MQA teachers -> MLA/MTLA students.
+
+The TransMLA-style pipeline (see docs/conversion.md):
+
+  factorize.py  joint SVD of the teacher's stacked K/V projections into
+                MLA's w_dkv/w_uk/w_uv at a chosen latent rank, RoPE handled
+                via the decoupled-rope split — exact at full rank
+  distill.py    short teacher-forced KL distillation that trains the MTLA
+                hyper-network gates to reach temporal stride s > 1
+  verify.py     teacher-forced logit max-abs-drift and perplexity-delta
+                bounds between teacher and converted model
+
+CLI entry point: ``python -m repro.launch.convert``.
+"""
+from .factorize import ConversionReport, convert_checkpoint
+from .distill import distill_gates
+from .verify import drift_report
+
+__all__ = ["ConversionReport", "convert_checkpoint", "distill_gates",
+           "drift_report"]

@@ -1,0 +1,102 @@
+"""Teacher-forced gate distillation: converted MLA -> MTLA at stride s > 1.
+
+The factorization hands over an MTLA student whose gates are pinned to 0.5
+(w_hc = 0), which is exact at s = 1 but plain-averages chunk latents at
+s > 1. This loop trains ONLY the hyper-network gate parameters
+(``w_hc``/``w_hp``) to minimize per-position KL(teacher || student) on
+synthetic teacher-forced batches — every factorized projection stays frozen,
+so the student's s = 1 equivalence class is preserved and only the temporal
+merge behavior moves. Reuses the repo's training machinery (optim/adamw,
+train/trainer dtype handling, data/synthetic batches).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.types import ModelConfig
+from ..data.synthetic import LMBatches
+from ..models import api
+from ..optim.adamw import adamw_update, init_adamw, warmup_cosine
+
+GATE_KEYS = ("w_hc", "w_hp")
+
+
+def _split_gates(params):
+    attn = params["layers"]["attn"]
+    gates = {k: attn[k] for k in GATE_KEYS}
+    return gates
+
+
+def _merge_gates(params, gates):
+    p = dict(params)
+    p["layers"] = dict(params["layers"])
+    p["layers"]["attn"] = {**params["layers"]["attn"], **gates}
+    return p
+
+
+def distill_gates(teacher_params, teacher_cfg: ModelConfig,
+                  student_params, student_cfg: ModelConfig, *,
+                  steps: int = 30, batch: int = 4, seq_len: int = 64,
+                  lr: float = 3e-3, seed: int = 0, dtype=jnp.float32
+                  ) -> Tuple[dict, Dict[str, List[float]]]:
+    """Returns (student params with trained gates, per-step metrics).
+
+    Metrics: ``kl`` (mean KL(teacher||student) per position) and ``drift``
+    (max abs logit delta) per step — kl[0] is the pre-training value the
+    CLI/tests compare against.
+    """
+    if student_cfg.attn.kind != "mtla":
+        raise ValueError("gate distillation only applies to mtla students, "
+                         f"got {student_cfg.attn.kind!r}")
+
+    @jax.jit
+    def teacher_logits(tokens):
+        hidden, _ = api.model_hidden(teacher_params, teacher_cfg,
+                                     {"tokens": tokens}, dtype=dtype)
+        return hidden.astype(jnp.float32) @ api.head_weights(
+            teacher_params, teacher_cfg).astype(jnp.float32)
+
+    frozen = student_params
+
+    def kl_loss(gates, tokens, t_logits):
+        p = _merge_gates(frozen, gates)
+        hidden, _ = api.model_hidden(p, student_cfg, {"tokens": tokens},
+                                     dtype=dtype)
+        s_logits = hidden.astype(jnp.float32) @ api.head_weights(
+            p, student_cfg).astype(jnp.float32)
+        lp_t = jax.nn.log_softmax(t_logits, axis=-1)
+        lp_s = jax.nn.log_softmax(s_logits, axis=-1)
+        kl = jnp.mean(jnp.sum(jnp.exp(lp_t) * (lp_t - lp_s), axis=-1))
+        drift = jnp.max(jnp.abs(t_logits - s_logits))
+        return kl, drift
+
+    grad_fn = jax.value_and_grad(kl_loss, has_aux=True)
+
+    @jax.jit
+    def step_fn(gates, opt_state, step, tokens, t_logits):
+        (kl, drift), grads = grad_fn(gates, tokens, t_logits)
+        cur_lr = warmup_cosine(step, peak_lr=lr,
+                               warmup=max(steps // 10, 1), total=steps)
+        # no weight decay: w_hc starts at 0 by construction and decay
+        # would fight the KL gradient pulling it off the origin
+        gates, opt_state, _ = adamw_update(gates, grads, opt_state,
+                                           lr=cur_lr, weight_decay=0.0)
+        return gates, opt_state, kl, drift
+
+    gates = _split_gates(student_params)
+    opt_state = init_adamw(gates)
+    it = LMBatches(batch=batch, seq_len=seq_len,
+                   vocab=teacher_cfg.vocab_size, seed=seed)
+    metrics: Dict[str, List[float]] = {"kl": [], "drift": []}
+    for i in range(steps):
+        b = next(it)
+        t_logits = teacher_logits(b["tokens"])
+        gates, opt_state, kl, drift = step_fn(
+            gates, opt_state, jnp.asarray(i, jnp.int32), b["tokens"],
+            t_logits)
+        metrics["kl"].append(float(kl))
+        metrics["drift"].append(float(drift))
+    return _merge_gates(student_params, gates), metrics

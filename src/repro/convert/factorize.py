@@ -1,0 +1,235 @@
+"""SVD factorization of GQA/MHA/MQA checkpoints into MLA/MTLA form.
+
+The teacher's per-layer KV projections ``wk``/``wv`` [d, KV, dh] are replaced
+by MLA's shared low-rank latent path: ``c = x @ w_dkv`` ([d, r]) with per-head
+up-projections ``w_uk``/``w_uv`` ([r, H, dh]). Two regimes:
+
+**No RoPE** — keys are position-independent linear maps, so both K and V
+absorb into the latent: SVD the stacked ``[wk | wv]`` matrix [d, 2*KV*dh],
+take ``w_dkv = U_r`` and split ``S_r V_r^T`` back into per-group K/V
+up-projections (heads in a group share their kv head's factor slice).
+
+**RoPE** — rotation is applied per *position*, after the projection, so roped
+keys cannot ride through the position-independent latent. They move wholesale
+onto MLA's decoupled rope track instead: ``w_kr`` becomes the teacher's full
+``wk`` flattened to [d, KV*dh] (``rope_head_dim = KV*dh``), rotated blockwise
+with the teacher's own per-head frequencies (``rope_block = dh``,
+core/rope.py::apply_rope_blockwise). Each teacher query head lands in its kv
+group's dh-block of the widened ``q_rope`` section, zeros elsewhere — zero
+blocks stay zero under rotation, so head h's rope dot-product sees exactly
+its own group's roped keys: teacher logits are reproduced term for term.
+Values (never roped) absorb through the SVD as above; ``w_uk = 0``.
+
+Either way the factorization is **exact** when the rank covers the stacked
+matrix's spectrum, and the per-layer captured-energy fraction
+(sum sigma_i^2, i<r / sum sigma_i^2) quantifies the truncation loss below it.
+The student skips the latent RMSNorm (``latent_norm="none"``): the norm is
+nonlinear per token and would break the algebraic equivalence.
+
+MTLA targets additionally get hyper-network gates initialized so that s=1
+MTLA is *bit-identical* to the converted MLA: ``w_hc = 0`` makes every gate
+sigmoid(0) = 0.5 independent of data, and ``w_uk``/``w_uv`` are pre-scaled
+by exactly 2 = 1/0.5 (both powers of two, so no rounding) to compensate.
+``w_hp`` starts small-random, not zero, so gate gradients flow through
+``w_hc`` from the first distillation step (at w_hc = w_hp = 0 the gate loss
+surface has a dead saddle).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.types import AttentionConfig, ModelConfig
+
+CONVERTIBLE_KINDS = ("mha", "mqa", "gqa")
+
+
+@dataclass(frozen=True)
+class ConversionReport:
+    """Per-conversion provenance, stored in the checkpoint manifest."""
+    teacher_kind: str
+    target: str               # mla | mtla
+    rank: int                 # latent rank r actually used
+    full_rank: int            # rank that captures the full KV spectrum
+    exact: bool               # rank covers the spectrum -> algebraic identity
+    use_rope: bool
+    rope_head_dim: int
+    energy: Tuple[float, ...]  # per-layer captured energy fraction in [0, 1]
+
+    @property
+    def min_energy(self) -> float:
+        return min(self.energy)
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def _validate_teacher(cfg: ModelConfig) -> None:
+    a = cfg.attn
+    if a.kind not in CONVERTIBLE_KINDS:
+        raise ValueError(
+            f"teacher kind {a.kind!r} is not convertible; expected one of "
+            f"{CONVERTIBLE_KINDS} (already-latent checkpoints need no "
+            f"conversion)")
+    if a.qk_norm:
+        raise ValueError(
+            "teacher uses qk_norm: per-head key normalization is nonlinear "
+            "and cannot be absorbed into the latent factorization")
+    if a.qkv_bias:
+        raise ValueError(
+            "teacher uses qkv_bias: MLA's latent path is bias-free; "
+            "fold biases out before converting")
+    if a.sliding_window:
+        raise ValueError(
+            "teacher uses sliding-window attention; the latent decode "
+            "paths are global-attention only")
+    if cfg.family != "dense" or cfg.global_attn_layers or cfg.encoder_layers:
+        raise ValueError(
+            f"conversion expects a homogeneous dense decoder-only stack "
+            f"(family={cfg.family!r}, global_attn_layers="
+            f"{cfg.global_attn_layers}, encoder_layers={cfg.encoder_layers})")
+    if cfg.frontend != "none":
+        raise ValueError(f"modality frontend {cfg.frontend!r} unsupported")
+
+
+def _full_rank(cfg: ModelConfig) -> int:
+    """Rank at which the SVD covers the whole stacked-KV spectrum."""
+    a = cfg.attn
+    width = a.num_kv_heads * a.head_dim * (1 if a.use_rope else 2)
+    return min(cfg.d_model, width)
+
+
+def _factorize_layer(wk: np.ndarray, wv: np.ndarray, r: int,
+                     use_rope: bool) -> Tuple[np.ndarray, np.ndarray,
+                                              np.ndarray, float]:
+    """One layer: (w_dkv [d,r], uk [r, KV*dh] or None-zeros, uv [r, KV*dh],
+    captured energy). Inputs are flat [d, KV*dh] float64."""
+    width = wv.shape[1]
+    stack = wv if use_rope else np.concatenate([wk, wv], axis=1)
+    u, sig, vt = np.linalg.svd(stack, full_matrices=False)
+    energy = sig ** 2
+    captured = float(energy[:r].sum() / max(energy.sum(), 1e-300))
+    w_dkv = u[:, :r]                                   # [d, r]
+    b = sig[:r, None] * vt[:r]                         # [r, width(s)]
+    if use_rope:
+        uk = np.zeros((r, width))
+        uv = b
+    else:
+        uk, uv = b[:, :width], b[:, width:]
+    return w_dkv, uk, uv, captured
+
+
+def _expand_groups(flat: np.ndarray, KV: int, H: int, dh: int) -> np.ndarray:
+    """[r, KV*dh] -> [r, H, dh]: heads in a group share their kv head's
+    slice (head h belongs to group h // (H // KV), matching
+    core/attention.py::_grouped_attention's reshape)."""
+    r = flat.shape[0]
+    return np.repeat(flat.reshape(r, KV, dh), H // KV, axis=1)
+
+
+def converted_config(cfg: ModelConfig, *, target: str = "mla", rank: int = 0,
+                     s: int = 2) -> ModelConfig:
+    """The student ModelConfig a conversion at ``rank`` produces."""
+    _validate_teacher(cfg)
+    if target not in ("mla", "mtla"):
+        raise ValueError(f"target must be 'mla' or 'mtla', got {target!r}")
+    a = cfg.attn
+    full = _full_rank(cfg)
+    r = rank or full
+    if not 1 <= r <= full:
+        raise ValueError(f"rank must be in [1, {full}] for this teacher, "
+                         f"got {r}")
+    # roped keys ride the decoupled rope track at the teacher's full KV
+    # width; without rope the track is a dead (all-zero) dh-wide stub so
+    # downstream shapes stay non-degenerate
+    dr = a.num_kv_heads * a.head_dim if a.use_rope else a.head_dim
+    attn = dataclasses.replace(
+        a, kind=target, kv_lora_rank=r, rope_head_dim=dr,
+        rope_block=a.head_dim if a.use_rope else 0,
+        latent_norm="none", s=s if target == "mtla" else a.s)
+    return cfg.replace(name=f"{cfg.name}-to-{target}-r{r}", attn=attn)
+
+
+def convert_checkpoint(params, cfg: ModelConfig, *, target: str = "mla",
+                       rank: int = 0, s: int = 2, seed: int = 0):
+    """Convert a teacher checkpoint to MLA/MTLA.
+
+    params: full model params (models/api.init_model layout) with
+    vmap-stacked layers. Returns ``(student_params, student_cfg, report)``;
+    only ``params["layers"]["attn"]`` is rebuilt, every other subtree is
+    shared by reference.
+    """
+    new_cfg = converted_config(cfg, target=target, rank=rank, s=s)
+    a, na = cfg.attn, new_cfg.attn
+    H, KV, dh = a.num_heads, a.num_kv_heads, a.head_dim
+    d, L = cfg.d_model, cfg.num_layers
+    r, dr = na.kv_lora_rank, na.rope_head_dim
+    full = _full_rank(cfg)
+
+    attn = params["layers"]["attn"]
+    wq = np.asarray(attn["wq"]["w"], np.float64)       # [L, d, H, dh]
+    wk = np.asarray(attn["wk"]["w"], np.float64).reshape(L, d, KV * dh)
+    wv = np.asarray(attn["wv"]["w"], np.float64).reshape(L, d, KV * dh)
+
+    # MTLA gate init: w_hc = 0 pins every gate to sigmoid(0) = 0.5 exactly,
+    # compensated by scaling the up-projections by 1/0.5 = 2 (both exact
+    # powers of two) -> s=1 MTLA is bit-identical to the converted MLA
+    up_scale = 2.0 if target == "mtla" else 1.0
+
+    w_dkv = np.zeros((L, d, r))
+    w_uk = np.zeros((L, r, H, dh))
+    w_uv = np.zeros((L, r, H, dh))
+    new_wq = np.zeros((L, d, H, dh + dr))
+    w_kr = np.zeros((L, d, dr))
+    energy: List[float] = []
+    group = np.arange(H) // (H // KV)
+    for layer in range(L):
+        dkv, uk, uv, cap = _factorize_layer(wk[layer], wv[layer], r,
+                                            a.use_rope)
+        energy.append(cap)
+        w_dkv[layer] = dkv
+        w_uk[layer] = _expand_groups(uk, KV, H, dh) * up_scale
+        w_uv[layer] = _expand_groups(uv, KV, H, dh) * up_scale
+        if a.use_rope:
+            # keys move wholesale onto the widened rope track; each query
+            # head lands in its kv group's dh-block (zeros elsewhere stay
+            # zero under the blockwise rotation)
+            w_kr[layer] = wk[layer]
+            for h in range(H):
+                lo = group[h] * dh
+                new_wq[layer, :, h, dh + lo:dh + lo + dh] = wq[layer, :, h]
+        else:
+            new_wq[layer, :, :, :dh] = wq[layer]
+
+    dt = np.asarray(attn["wq"]["w"]).dtype
+    new_attn = {
+        "wq": {"w": jnp.asarray(new_wq, dt)},
+        "w_dkv": {"w": jnp.asarray(w_dkv, dt)},
+        # latent_norm="none" skips this at runtime; kept (as ones) so
+        # init/sharding/checkpoint shapes match native latent models
+        "kv_norm": {"scale": jnp.ones((L, r), dt)},
+        "w_kr": {"w": jnp.asarray(w_kr, dt)},
+        "w_uk": {"w": jnp.asarray(w_uk, dt)},
+        "w_uv": {"w": jnp.asarray(w_uv, dt)},
+        "wo": attn["wo"],
+    }
+    if target == "mtla":
+        hyp = na.hyper_dim
+        new_attn["w_hc"] = {"w": jnp.zeros((L, r, hyp), dt)}
+        new_attn["w_hp"] = {"w": 0.02 * jax.random.normal(
+            jax.random.PRNGKey(seed), (L, r, hyp), dt)}
+
+    new_params = dict(params)
+    new_params["layers"] = dict(params["layers"])
+    new_params["layers"]["attn"] = new_attn
+
+    report = ConversionReport(
+        teacher_kind=a.kind, target=target, rank=r, full_rank=full,
+        exact=r >= full, use_rope=a.use_rope, rope_head_dim=dr,
+        energy=tuple(energy))
+    return new_params, new_cfg, report

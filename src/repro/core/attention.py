@@ -20,7 +20,7 @@ import jax.numpy as jnp
 
 from . import dispatch, masks, mtla
 from .nn import dense, dense_init, norm_apply, norm_init, rms_norm_nd
-from .rope import apply_rope, rope_cos_sin
+from .rope import apply_rope, apply_rope_blockwise, rope_cos_sin
 from .types import AttentionConfig
 
 NEG_INF = -1e30
@@ -155,12 +155,22 @@ def _latent_qcr(p, cfg: AttentionConfig, x, positions):
     q = dense(p["wq"], x)                       # [B,T,H,dh+dr]
     q_nope, q_rope = q[..., :dh], q[..., dh:]
     c = dense(p["w_dkv"], x)
-    c = norm_apply(p["kv_norm"], c, kind="rmsnorm")
+    if cfg.latent_norm != "none":
+        c = norm_apply(p["kv_norm"], c, kind="rmsnorm")
     kr = dense(p["w_kr"], x)                    # [B,T,dr] single shared head
     if cfg.use_rope:
-        cos, sin = rope_cos_sin(positions, dr, cfg.rope_theta)
-        q_rope = apply_rope(q_rope, cos[:, :, None, :], sin[:, :, None, :])
-        kr = apply_rope(kr, cos, sin)
+        blk = cfg.rope_block or dr
+        cos, sin = rope_cos_sin(positions, blk, cfg.rope_theta)
+        if blk == dr:
+            q_rope = apply_rope(q_rope, cos[:, :, None, :],
+                                sin[:, :, None, :])
+            kr = apply_rope(kr, cos, sin)
+        else:
+            # converted teacher: rotate each teacher-head-dim block of the
+            # widened kr track with the teacher's own frequencies
+            q_rope = apply_rope_blockwise(q_rope, cos[:, :, None, :],
+                                          sin[:, :, None, :], blk)
+            kr = apply_rope_blockwise(kr, cos, sin, blk)
     return q_nope, q_rope, c, kr
 
 

@@ -31,6 +31,22 @@ def apply_rope(x, cos, sin):
     return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
 
 
+def apply_rope_blockwise(x, cos, sin, block: int):
+    """Rotate each ``block``-wide slice of the last axis independently.
+
+    cos/sin carry ``block``-dim frequencies (rope_cos_sin(positions, block)).
+    Checkpoint migration widens the shared kr track to num_kv_heads
+    concatenated teacher-head keys; rotating per block with the teacher's
+    head_dim frequencies reproduces the teacher's per-head RoPE exactly
+    (convert/factorize.py). A zero block stays zero under rotation, so
+    block-placed query rope dims only see their own kv group's keys.
+    """
+    nb = x.shape[-1] // block
+    xb = x.reshape(x.shape[:-1] + (nb, block))
+    out = apply_rope(xb, cos[..., None, :], sin[..., None, :])
+    return out.reshape(x.shape)
+
+
 def sinusoidal_pe(positions, dim: int):
     """Classic transformer sinusoidal embedding (paper Eq. 13/15 `pe_j`).
 

@@ -31,6 +31,16 @@ class AttentionConfig:
     hyper_dim: int = 64       # hyper-network projection dim (paper App. D: 64)
     s: int = 2                # temporal compression ratio (paper default 2)
     mtla_train_impl: str = "compressed"  # "masked" = paper-faithful T x T path
+    # "none" skips the RMSNorm on the compressed latent c. Checkpoint
+    # migration (convert/factorize.py) needs the latent path to stay linear
+    # so the SVD factorization of a teacher's K/V projections is exact; the
+    # kv_norm param is kept (as ones) so shapes/sharding are unchanged.
+    latent_norm: str = "rmsnorm"  # rmsnorm | none
+    # RoPE frequency block for the shared kr track: 0 = one frequency ramp
+    # over the whole rope_head_dim (native MLA/MTLA). Converted teachers set
+    # rope_block = teacher head_dim so each dh-wide block of the widened kr
+    # track rotates with the teacher's own per-head frequencies.
+    rope_block: int = 0
     # --- execution ---
     q_chunk: int = 1024  # query-block size for chunked attention; 0 = one block
     softmax_dtype: str = "float32"  # "bfloat16" halves [T,T] HBM traffic
@@ -221,6 +231,24 @@ def mla_variant(cfg: ModelConfig) -> ModelConfig:
         kv_lora_rank=4 * a.head_dim,
         rope_head_dim=max(a.head_dim // 2, 16),
     )
+
+
+def config_to_dict(cfg: ModelConfig) -> dict:
+    """JSON/msgpack-safe dict form of a ModelConfig (checkpoint `extra`)."""
+    return dataclasses.asdict(cfg)
+
+
+def config_from_dict(d: dict) -> ModelConfig:
+    """Inverse of config_to_dict; rebuilds the nested frozen dataclasses."""
+    d = dict(d)
+    d["attn"] = AttentionConfig(**d["attn"])
+    if d.get("moe") is not None:
+        d["moe"] = MoEConfig(**d["moe"])
+    if d.get("ssm") is not None:
+        d["ssm"] = SSMConfig(**d["ssm"])
+    if d.get("global_attn_layers") is not None:
+        d["global_attn_layers"] = tuple(d["global_attn_layers"])
+    return ModelConfig(**d)
 
 
 @dataclass(frozen=True)

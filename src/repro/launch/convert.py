@@ -1,0 +1,201 @@
+"""Checkpoint migration driver: GQA/MHA/MQA teacher -> MLA/MTLA student.
+
+Reads a teacher checkpoint through the manifest layer (or synthesizes one
+under ``--smoke``), factorizes it (convert/factorize.py), optionally
+distills the MTLA gates to stride s > 1 (convert/distill.py), verifies
+teacher-forced drift bounds (convert/verify.py), and writes the converted
+checkpoint — which loads straight back into ``DecodeEngine``.
+
+    # tiny GQA teacher -> exact MLA, serve it paged+prefix+chunked
+    PYTHONPATH=src python -m repro.launch.convert --smoke --attn gqa \
+        --target mla --out /tmp/mla_ckpt --serve-smoke
+
+    # reduced rank -> MTLA s=2 with a short gate distillation
+    PYTHONPATH=src python -m repro.launch.convert --smoke --attn gqa \
+        --target mtla --rank 16 --s 2 --distill-steps 20 \
+        --out /tmp/mtla_ckpt --serve-smoke
+
+    # convert a real checkpoint written by save_model_checkpoint
+    PYTHONPATH=src python -m repro.launch.convert \
+        --teacher-ckpt /ckpts/teacher --target mtla --out /ckpts/student
+
+``--serve-smoke`` runs the converted model through the paged + prefix-cache
++ chunked-prefill engine on BOTH backends and fails unless the ref and
+pallas token streams are identical (docs/conversion.md).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..checkpoint.checkpoint import (load_model_checkpoint,
+                                     save_model_checkpoint)
+from ..configs import ALL_IDS, smoke_config
+from ..convert.distill import distill_gates
+from ..convert.factorize import convert_checkpoint
+from ..convert.verify import drift_report, format_report, teacher_config
+from ..core.types import config_from_dict, config_to_dict
+from ..models import api
+from ..serving.engine import DecodeEngine, Request
+from ..serving.sampling import SamplingParams
+
+
+def serve_tokens(params, cfg, *, backend: str, seed: int = 0,
+                 requests: int = 4, batch: int = 2, prompt_len: int = 32,
+                 shared_prefix: int = 16, max_new: int = 12,
+                 max_len: int = 128):
+    """Greedy tokens through the paged + prefix + chunked engine."""
+    eng = DecodeEngine(params, cfg, batch=batch, max_len=max_len,
+                       dtype=jnp.float32, backend=backend, burst=4,
+                       chunk_tokens=16, page_size=4, prefix_cache=True)
+    rng = np.random.default_rng(seed)
+    shared = rng.integers(0, cfg.vocab_size,
+                          size=(min(shared_prefix, prompt_len),))
+    reqs = [Request(rid=i,
+                    prompt=np.concatenate([
+                        shared,
+                        rng.integers(0, cfg.vocab_size,
+                                     size=(prompt_len - len(shared),))]),
+                    max_new=max_new, sampling=SamplingParams(), seed=seed)
+            for i in range(requests)]
+    return eng.run(reqs)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    src = ap.add_argument_group("teacher source")
+    src.add_argument("--teacher-ckpt", default=None,
+                     help="checkpoint dir written by save_model_checkpoint "
+                          "(manifest carries the ModelConfig)")
+    src.add_argument("--smoke", action="store_true",
+                     help="synthesize a tiny seeded teacher instead; it is "
+                          "round-tripped through <out>/teacher so the "
+                          "manifest path is exercised end to end")
+    src.add_argument("--arch", default="qwen2_7b", choices=ALL_IDS)
+    src.add_argument("--attn", default="gqa",
+                     choices=["mha", "mqa", "gqa"],
+                     help="teacher attention kind under --smoke")
+    cv = ap.add_argument_group("conversion")
+    cv.add_argument("--target", default="mla", choices=["mla", "mtla"])
+    cv.add_argument("--rank", type=int, default=0,
+                    help="latent rank r (0 = full KV spectrum -> exact)")
+    cv.add_argument("--s", type=int, default=2,
+                    help="MTLA temporal stride for --target mtla")
+    cv.add_argument("--distill-steps", type=int, default=0,
+                    help="teacher-forced KL steps training the MTLA gates "
+                         "(mtla targets only; 0 = factorize only)")
+    cv.add_argument("--distill-lr", type=float, default=3e-3)
+    ap.add_argument("--out", default=None,
+                    help="write the converted checkpoint + drift report "
+                         "here (save_model_checkpoint layout)")
+    ap.add_argument("--verify-batches", type=int, default=2)
+    ap.add_argument("--seq-len", type=int, default=64,
+                    help="verify/distill sequence length")
+    ap.add_argument("--max-drift", type=float, default=0.0,
+                    help="fail if teacher-forced max-abs logit drift "
+                         "exceeds this (0 = report only)")
+    ap.add_argument("--max-ppl-delta", type=float, default=0.0,
+                    help="fail if |ppl delta| exceeds this (0 = report "
+                         "only)")
+    ap.add_argument("--serve-smoke", action="store_true",
+                    help="serve the converted model paged+prefix+chunked "
+                         "on ref AND pallas; fail on any token mismatch")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    if not args.smoke and not args.teacher_ckpt:
+        ap.error("need --teacher-ckpt DIR or --smoke")
+
+    if args.teacher_ckpt:
+        t_params, extra = load_model_checkpoint(args.teacher_ckpt)
+        t_cfg = config_from_dict(extra["model_config"])
+        print(f"teacher: {t_cfg.name} ({t_cfg.attn.kind}) from "
+              f"{args.teacher_ckpt}")
+    else:
+        t_cfg = teacher_config(smoke_config(args.arch), args.attn)
+        t_params = api.init_model(jax.random.PRNGKey(args.seed), t_cfg)
+        if args.out:
+            tdir = f"{args.out}/teacher"
+            save_model_checkpoint(tdir, 0, t_params,
+                                  config_to_dict(t_cfg))
+            t_params, extra = load_model_checkpoint(tdir)
+            t_cfg = config_from_dict(extra["model_config"])
+            print(f"teacher: synthetic {t_cfg.name} ({t_cfg.attn.kind}), "
+                  f"round-tripped via {tdir}")
+        else:
+            print(f"teacher: synthetic {t_cfg.name} ({t_cfg.attn.kind})")
+
+    s_params, s_cfg, report = convert_checkpoint(
+        t_params, t_cfg, target=args.target, rank=args.rank, s=args.s,
+        seed=args.seed)
+    print(f"converted -> {s_cfg.name}: rank {report.rank}/"
+          f"{report.full_rank} (exact={report.exact}), rope_head_dim "
+          f"{report.rope_head_dim}, min layer energy "
+          f"{report.min_energy:.6f}")
+    print(f"kv cache/token/layer: {t_cfg.attn.kv_cache_per_token} -> "
+          f"{s_cfg.attn.kv_cache_per_token} elems "
+          f"({s_cfg.attn.kv_cache_per_token / t_cfg.attn.kv_cache_per_token:.2f}x)")
+
+    distill_metrics = None
+    if args.distill_steps:
+        if args.target != "mtla":
+            raise SystemExit("--distill-steps needs --target mtla")
+        s_params, distill_metrics = distill_gates(
+            t_params, t_cfg, s_params, s_cfg, steps=args.distill_steps,
+            seq_len=args.seq_len, lr=args.distill_lr, seed=args.seed)
+        print(f"distilled gates {args.distill_steps} steps: KL "
+              f"{distill_metrics['kl'][0]:.4e} -> "
+              f"{distill_metrics['kl'][-1]:.4e}")
+
+    rep = drift_report(t_params, t_cfg, s_params, s_cfg,
+                       batches=args.verify_batches, seq_len=args.seq_len,
+                       seed=args.seed)
+    print("verify: " + format_report(rep))
+    failed = []
+    if args.max_drift and rep["logit_drift"] > args.max_drift:
+        failed.append(f"logit drift {rep['logit_drift']:.3e} > "
+                      f"--max-drift {args.max_drift:g}")
+    if args.max_ppl_delta and abs(rep["ppl_delta"]) > args.max_ppl_delta:
+        failed.append(f"|ppl delta| {abs(rep['ppl_delta']):.4f} > "
+                      f"--max-ppl-delta {args.max_ppl_delta:g}")
+
+    if args.out:
+        path = save_model_checkpoint(
+            args.out, 0, s_params, config_to_dict(s_cfg),
+            extra={"conversion": report.to_dict(), "drift": rep,
+                   "distill_kl": (distill_metrics or {}).get("kl", [])})
+        print(f"wrote converted checkpoint: {path}")
+
+    if args.serve_smoke:
+        # reload through the manifest layer when we wrote one — the served
+        # params are exactly what a later engine boot would read
+        if args.out:
+            s_params, extra = load_model_checkpoint(args.out)
+            s_cfg = config_from_dict(extra["model_config"])
+        out_ref = serve_tokens(s_params, s_cfg, backend="ref",
+                               seed=args.seed)
+        out_pal = serve_tokens(s_params, s_cfg, backend="pallas",
+                               seed=args.seed)
+        mism = [rid for rid in out_ref if list(out_ref[rid])
+                != list(out_pal[rid])]
+        if mism:
+            failed.append(f"ref vs pallas token mismatch for rids {mism}")
+        else:
+            toks = sum(len(v) for v in out_ref.values())
+            print(f"serve smoke: {len(out_ref)} requests, {toks} tokens — "
+                  f"ref == pallas token-for-token (paged + prefix-cache + "
+                  f"chunked prefill)")
+
+    if failed:
+        for f in failed:
+            print(f"FAIL: {f}", file=sys.stderr)
+        raise SystemExit(1)
+    return rep
+
+
+if __name__ == "__main__":
+    main()

@@ -248,6 +248,31 @@ def _write(path, rec):
         json.dump(rec, f, indent=1, default=str)
 
 
+def list_configs(out=print):
+    """--list-configs: one line per registered architecture (no compiles)."""
+    from ..configs import ALL_IDS, get_config
+    for name in ALL_IDS:
+        cfg = get_config(name)
+        a = cfg.attn
+        shapes = ",".join(sh for sh in SHAPES
+                          if applicability(cfg, sh)[0]) or "-"
+        extras = []
+        if cfg.moe is not None:
+            extras.append(f"moe {cfg.moe.num_experts}x"
+                          f"{cfg.moe.num_experts_per_tok}")
+        if cfg.ssm is not None:
+            extras.append("ssm")
+        if cfg.encoder_layers:
+            extras.append(f"encdec {cfg.encoder_layers}enc")
+        if cfg.frontend != "none":
+            extras.append(cfg.frontend)
+        out(f"{name:<18} {cfg.family:<7} L={cfg.num_layers:<3} "
+            f"d={cfg.d_model:<5} ff={cfg.d_ff:<6} V={cfg.vocab_size:<7} "
+            f"attn={a.kind}/{a.num_heads}h/{a.num_kv_heads}kv/"
+            f"{a.head_dim}dh  shapes={shapes}"
+            + (f"  [{' '.join(extras)}]" if extras else ""))
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=ARCH_IDS + ["mtla_paper"])
@@ -269,8 +294,16 @@ def main():
     ap.add_argument("--tag", default="")
     ap.add_argument("--force", action="store_true")
     ap.add_argument("--all", action="store_true")
+    ap.add_argument("--list-configs", action="store_true",
+                    help="print every registered architecture (family, "
+                         "dims, attention layout, applicable dry-run "
+                         "shapes) and exit — no lowering or compiling")
     ap.add_argument("--out", default=OUT_DIR)
     args = ap.parse_args()
+
+    if args.list_configs:
+        list_configs()
+        return
 
     if args.all:
         cells = [(a, sh, m) for a in ARCH_IDS for sh in SHAPES

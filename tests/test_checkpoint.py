@@ -1,0 +1,131 @@
+"""Checkpoint layer: atomic save/restore round-trips, keep-N garbage
+collection, corrupt-manifest rejection by latest_step, the async writer's
+save/wait/close lifecycle (including error surfacing), and the
+self-describing model-checkpoint helpers the conversion CLI writes."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpoint import (AsyncCheckpointer, latest_step,
+                                         load_model_checkpoint,
+                                         restore_checkpoint,
+                                         save_checkpoint,
+                                         save_model_checkpoint)
+
+
+def state_at(step):
+    k = jax.random.PRNGKey(step)
+    return {"params": {"layer": {"w": jax.random.normal(k, (4, 8)),
+                                 "b": jnp.zeros((8,))}},
+            "opt": {"m": jnp.full((3,), float(step))}}
+
+
+def tree_equal(a, b):
+    la = jax.tree_util.tree_leaves(a)
+    lb = jax.tree_util.tree_leaves(b)
+    return len(la) == len(lb) and all(
+        np.array_equal(np.asarray(x), np.asarray(y))
+        for x, y in zip(la, lb))
+
+
+def test_save_restore_roundtrip(tmp_path):
+    d = str(tmp_path)
+    st = state_at(7)
+    path = save_checkpoint(d, 7, st, extra={"note": "hi"})
+    assert os.path.basename(path) == "step_00000007"
+    assert latest_step(d) == 7
+    restored, extra = restore_checkpoint(d, 7, st)
+    assert tree_equal(st, restored)
+    assert extra["note"] == "hi"
+
+
+def test_latest_step_picks_newest_valid(tmp_path):
+    d = str(tmp_path)
+    for s in (1, 3, 2):
+        save_checkpoint(d, s, state_at(s), keep=0)
+    assert latest_step(d) == 3
+    assert latest_step(str(tmp_path / "nope")) is None
+
+
+def test_gc_keep_policy(tmp_path):
+    d = str(tmp_path)
+    for s in range(5):
+        save_checkpoint(d, s, state_at(s), keep=2)
+    kept = sorted(x for x in os.listdir(d) if x.startswith("step_"))
+    assert kept == ["step_00000003", "step_00000004"]
+    # keep=0 disables collection entirely
+    for s in range(5, 8):
+        save_checkpoint(d, s, state_at(s), keep=0)
+    kept = sorted(x for x in os.listdir(d) if x.startswith("step_"))
+    assert len(kept) == 5
+
+
+def test_corrupt_manifest_skipped(tmp_path):
+    d = str(tmp_path)
+    save_checkpoint(d, 1, state_at(1))
+    save_checkpoint(d, 2, state_at(2))
+    # corrupt the newest payload: latest_step must fall back to step 1
+    with open(os.path.join(d, "step_00000002", "payload.0.npz"),
+              "r+b") as f:
+        f.seek(0)
+        f.write(b"\x00" * 16)
+    assert latest_step(d) == 1
+    # truncated manifest is equally rejected
+    save_checkpoint(d, 3, state_at(3))
+    with open(os.path.join(d, "step_00000003", "manifest.msgpack"),
+              "wb") as f:
+        f.write(b"garbage")
+    assert latest_step(d) == 1
+
+
+def test_restore_shape_mismatch_raises(tmp_path):
+    d = str(tmp_path)
+    save_checkpoint(d, 1, state_at(1))
+    bad = state_at(1)
+    bad["params"]["layer"]["w"] = jnp.zeros((5, 5))
+    with pytest.raises(ValueError, match="shape mismatch"):
+        restore_checkpoint(d, 1, bad)
+
+
+def test_async_checkpointer_save_wait_close(tmp_path):
+    d = str(tmp_path)
+    ck = AsyncCheckpointer(d, keep=2)
+    for s in range(4):
+        ck.save(s, state_at(s))
+    ck.wait()
+    assert latest_step(d) == 3
+    kept = sorted(x for x in os.listdir(d) if x.startswith("step_"))
+    assert kept == ["step_00000002", "step_00000003"]
+    restored, _ = restore_checkpoint(d, 3, state_at(3))
+    assert tree_equal(state_at(3), restored)
+    ck.close()
+    assert not ck._t.is_alive()
+
+
+def test_async_checkpointer_surfaces_errors(tmp_path):
+    # point the writer at a path occupied by a FILE: os.makedirs fails in
+    # the background thread and must surface on the next wait()
+    blocker = tmp_path / "blocked"
+    blocker.write_text("not a directory")
+    ck = AsyncCheckpointer(str(blocker))
+    ck.save(0, state_at(0))
+    with pytest.raises(OSError):
+        ck.wait()
+
+
+def test_model_checkpoint_roundtrip(tmp_path):
+    d = str(tmp_path)
+    params = state_at(4)["params"]
+    cfg_dict = {"name": "m", "num_layers": 2}
+    save_model_checkpoint(d, 0, params, cfg_dict, extra={"k": 1})
+    loaded, extra = load_model_checkpoint(d)
+    assert tree_equal(params, loaded)
+    assert extra["model_config"] == cfg_dict and extra["k"] == 1
+    # explicit step and missing-dir behavior
+    loaded2, _ = load_model_checkpoint(d, step=0)
+    assert tree_equal(params, loaded2)
+    with pytest.raises(FileNotFoundError):
+        load_model_checkpoint(str(tmp_path / "missing"))

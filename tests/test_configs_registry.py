@@ -1,0 +1,85 @@
+"""Config registry: every registered architecture must build a valid
+ModelConfig whose dry-run shapes resolve (configs/shapes.py), the attention
+variants and smoke reductions must stay constructible, and
+``launch/dryrun.py --list-configs`` must enumerate the registry without
+lowering anything."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.configs import ALL_IDS, ARCH_IDS, get_config, smoke_config
+from repro.configs.shapes import SHAPES, applicability, input_specs
+from repro.core.types import (ATTN_KINDS, AttentionConfig, ModelConfig,
+                              config_from_dict, config_to_dict)
+
+
+@pytest.mark.parametrize("name", ALL_IDS)
+def test_config_builds_and_is_valid(name):
+    cfg = get_config(name)
+    assert isinstance(cfg, ModelConfig)
+    a = cfg.attn
+    assert a.kind in ATTN_KINDS
+    assert cfg.num_layers > 0 and cfg.d_model > 0 and cfg.vocab_size > 0
+    assert a.num_heads > 0 and a.head_dim > 0
+    assert a.num_heads % a.num_kv_heads == 0
+    if a.kind in ("mla", "mtla"):
+        assert a.kv_lora_rank > 0 and a.rope_head_dim > 0
+    if cfg.family == "moe":
+        assert cfg.moe is not None and cfg.moe.num_experts > 0
+    if cfg.family == "ssm":
+        assert cfg.ssm is not None
+    # the registry's configs must survive the checkpoint-manifest dict
+    # round-trip (core/types.config_to_dict) unchanged
+    assert config_from_dict(config_to_dict(cfg)) == cfg
+
+
+@pytest.mark.parametrize("name", ALL_IDS)
+def test_config_shapes_resolve(name):
+    cfg = get_config(name)
+    applicable = 0
+    for shape_name in SHAPES:
+        ok, reason = applicability(cfg, shape_name)
+        assert isinstance(reason, str)
+        if not ok:
+            continue
+        applicable += 1
+        specs = input_specs(cfg, shape_name)
+        assert specs, f"{name}/{shape_name} produced no input specs"
+        for k, spec in specs.items():
+            assert all(d > 0 for d in spec.shape), \
+                f"{name}/{shape_name}/{k} has degenerate dims {spec.shape}"
+    assert applicable > 0, f"{name} applies to no dry-run shape"
+
+
+@pytest.mark.parametrize("name", ALL_IDS)
+def test_smoke_config_builds(name):
+    cfg = smoke_config(name)
+    assert cfg.num_layers == 2 and cfg.d_model == 64
+    assert cfg.attn.num_heads % cfg.attn.num_kv_heads == 0
+
+
+def test_attention_variants():
+    cfg = get_config("qwen2_7b", attn="mtla", s=4)
+    assert cfg.attn.kind == "mtla" and cfg.attn.s == 4
+    assert cfg.attn.kv_lora_rank == 4 * cfg.attn.head_dim
+    cfg = get_config("qwen2_7b", attn="mqa")
+    assert cfg.attn.num_kv_heads == 1
+    with pytest.raises(ValueError, match="attention-free"):
+        get_config("mamba2_780m", attn="mtla")
+
+
+def test_dryrun_list_configs():
+    env = dict(os.environ, PYTHONPATH="src", JAX_PLATFORMS="cpu")
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--list-configs"],
+        capture_output=True, text=True, env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    assert out.returncode == 0, out.stderr
+    lines = [ln for ln in out.stdout.strip().splitlines() if ln.strip()]
+    assert len(lines) == len(ALL_IDS)
+    for name in ALL_IDS:
+        assert any(ln.startswith(name) for ln in lines), \
+            f"{name} missing from --list-configs output"
+    assert len(ARCH_IDS) == 10

@@ -1,0 +1,250 @@
+"""Checkpoint migration (convert/): a GQA/MHA/MQA teacher factorized into
+MLA/MTLA must reproduce teacher-forced logits exactly at full rank (fp32
+tolerance), degrade monotonically with truncation energy below it, keep
+s=1 MTLA equivalent to MLA by construction, serve token-for-token identical
+between ref and pallas through the paged+prefix+chunked engine, and
+round-trip through the model-checkpoint layer into a DecodeEngine."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpoint import (load_model_checkpoint,
+                                         save_model_checkpoint)
+from repro.configs import smoke_config
+from repro.convert.distill import distill_gates
+from repro.convert.factorize import (ConversionReport, convert_checkpoint,
+                                     converted_config)
+from repro.convert.verify import drift_report, teacher_config
+from repro.core.types import config_from_dict, config_to_dict
+from repro.models import api
+from repro.serving.engine import DecodeEngine, Request
+from repro.serving.sampling import SamplingParams
+
+SEQ = 32
+
+
+def make_teacher(kind="gqa", use_rope=True, seed=0):
+    cfg = teacher_config(smoke_config("qwen2_7b"), kind)
+    if not use_rope:
+        cfg = cfg.with_attn(use_rope=False)
+    params = api.init_model(jax.random.PRNGKey(seed), cfg)
+    return params, cfg
+
+
+def logits_of(params, cfg, tokens):
+    hidden, _ = api.model_hidden(params, cfg, {"tokens": tokens},
+                                 dtype=jnp.float32)
+    return np.asarray(hidden.astype(jnp.float32)
+                      @ api.head_weights(params, cfg).astype(jnp.float32))
+
+
+def tokens_batch(cfg, batch=2, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.integers(0, cfg.vocab_size, size=(batch, SEQ)),
+                       jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# exactness at full rank
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ["gqa", "mqa", "mha"])
+def test_full_rank_exact_roped(kind):
+    params, cfg = make_teacher(kind)
+    sp, scfg, rep = convert_checkpoint(params, cfg, target="mla")
+    assert rep.exact and rep.rank == rep.full_rank
+    assert rep.min_energy == pytest.approx(1.0, abs=1e-9)
+    toks = tokens_batch(cfg)
+    drift = np.max(np.abs(logits_of(params, cfg, toks)
+                          - logits_of(sp, scfg, toks)))
+    assert drift < 2e-4, f"full-rank {kind} conversion not exact: {drift}"
+
+
+def test_full_rank_exact_norope():
+    # without rope both K and V absorb into the latent via the joint SVD
+    params, cfg = make_teacher("gqa", use_rope=False)
+    sp, scfg, rep = convert_checkpoint(params, cfg, target="mla")
+    assert rep.exact and not scfg.attn.use_rope
+    toks = tokens_batch(cfg)
+    drift = np.max(np.abs(logits_of(params, cfg, toks)
+                          - logits_of(sp, scfg, toks)))
+    assert drift < 2e-4
+
+
+def test_mtla_s1_equals_mla():
+    # w_hc = 0 pins gates to 0.5 and the 2x up-projection scaling cancels
+    # it exactly -> s=1 MTLA is the converted MLA (same values, fp noise)
+    params, cfg = make_teacher("gqa")
+    mla_p, mla_cfg, _ = convert_checkpoint(params, cfg, target="mla")
+    mt_p, mt_cfg, _ = convert_checkpoint(params, cfg, target="mtla", s=1)
+    toks = tokens_batch(cfg)
+    drift = np.max(np.abs(logits_of(mla_p, mla_cfg, toks)
+                          - logits_of(mt_p, mt_cfg, toks)))
+    assert drift < 1e-4, f"s=1 MTLA deviates from MLA by {drift}"
+
+
+def test_full_rank_greedy_tokens_match_teacher():
+    params, cfg = make_teacher("gqa")
+    sp, scfg, _ = convert_checkpoint(params, cfg, target="mla")
+    rng = np.random.default_rng(0)
+    reqs = lambda: [Request(rid=i,
+                            prompt=rng.integers(0, cfg.vocab_size,
+                                                size=(12,)),
+                            max_new=8, sampling=SamplingParams(), seed=i)
+                    for i in range(3)]
+    rng = np.random.default_rng(0)
+    t_out = DecodeEngine(params, cfg, batch=2, max_len=64,
+                         dtype=jnp.float32, backend="ref").run(reqs())
+    rng = np.random.default_rng(0)
+    s_out = DecodeEngine(sp, scfg, batch=2, max_len=64,
+                         dtype=jnp.float32, backend="ref").run(reqs())
+    assert {k: list(v) for k, v in t_out.items()} \
+        == {k: list(v) for k, v in s_out.items()}
+
+
+# ---------------------------------------------------------------------------
+# truncation behavior
+# ---------------------------------------------------------------------------
+
+def test_energy_and_drift_monotone_in_rank():
+    params, cfg = make_teacher("gqa")
+    toks = tokens_batch(cfg)
+    t_logits = logits_of(params, cfg, toks)
+    drifts, energies = [], []
+    for r in (8, 16, 32):
+        sp, scfg, rep = convert_checkpoint(params, cfg, target="mla",
+                                           rank=r)
+        drifts.append(np.max(np.abs(t_logits - logits_of(sp, scfg, toks))))
+        energies.append(rep.min_energy)
+    assert energies == sorted(energies)
+    assert drifts[0] >= drifts[1] >= drifts[2]
+    assert energies[-1] == pytest.approx(1.0, abs=1e-9)
+    assert drifts[-1] < 2e-4
+
+
+def test_report_shape_and_config():
+    params, cfg = make_teacher("gqa")
+    _, scfg, rep = convert_checkpoint(params, cfg, target="mtla", rank=16,
+                                      s=2)
+    assert isinstance(rep, ConversionReport)
+    assert len(rep.energy) == cfg.num_layers
+    assert all(0.0 < e <= 1.0 + 1e-9 for e in rep.energy)
+    a = scfg.attn
+    assert (a.kind, a.kv_lora_rank, a.s) == ("mtla", 16, 2)
+    assert a.latent_norm == "none"
+    # roped teacher: keys ride the widened rope track, blockwise-rotated
+    # with the teacher's own head_dim frequencies
+    assert a.rope_head_dim == cfg.attn.num_kv_heads * cfg.attn.head_dim
+    assert a.rope_block == cfg.attn.head_dim
+    # dict round-trip used by the checkpoint manifest
+    assert config_from_dict(config_to_dict(scfg)) == scfg
+
+
+def test_rejects_unsupported_teachers():
+    params, cfg = make_teacher("gqa")
+    with pytest.raises(ValueError, match="qk_norm"):
+        converted_config(cfg.with_attn(qk_norm=True))
+    with pytest.raises(ValueError, match="bias"):
+        converted_config(cfg.with_attn(qkv_bias=True))
+    with pytest.raises(ValueError, match="sliding"):
+        converted_config(cfg.with_attn(sliding_window=128))
+    with pytest.raises(ValueError, match="not convertible"):
+        converted_config(cfg.with_attn(kind="mla", kv_lora_rank=32,
+                                       rope_head_dim=16))
+    with pytest.raises(ValueError, match="rank"):
+        converted_config(cfg, rank=10_000)
+    with pytest.raises(ValueError, match="target"):
+        converted_config(cfg, target="gqa")
+
+
+# ---------------------------------------------------------------------------
+# distillation
+# ---------------------------------------------------------------------------
+
+def test_distill_reduces_kl():
+    # full rank isolates the gates: the only teacher drift is the s=2
+    # temporal merge, exactly what distillation trains. Held-out batches
+    # (different seed from the training stream) gate the improvement.
+    params, cfg = make_teacher("gqa")
+    sp, scfg, _ = convert_checkpoint(params, cfg, target="mtla", s=2)
+    pre = drift_report(params, cfg, sp, scfg, batches=2, seq_len=SEQ,
+                       seed=123)
+    sp2, metrics = distill_gates(params, cfg, sp, scfg, steps=15,
+                                 seq_len=SEQ, lr=1e-2, seed=0)
+    post = drift_report(params, cfg, sp2, scfg, batches=2, seq_len=SEQ,
+                        seed=123)
+    assert post["kl"] < pre["kl"]
+    assert len(metrics["kl"]) == len(metrics["drift"]) == 15
+    # only the gate parameters moved
+    for k in ("wq", "w_dkv", "w_uk", "w_uv", "wo"):
+        np.testing.assert_array_equal(
+            sp["layers"]["attn"][k]["w"], sp2["layers"]["attn"][k]["w"])
+    assert np.any(np.asarray(sp2["layers"]["attn"]["w_hc"]["w"]))
+
+
+def test_distill_rejects_mla():
+    params, cfg = make_teacher("gqa")
+    sp, scfg, _ = convert_checkpoint(params, cfg, target="mla")
+    with pytest.raises(ValueError, match="mtla"):
+        distill_gates(params, cfg, sp, scfg, steps=1)
+
+
+# ---------------------------------------------------------------------------
+# serving the converted model
+# ---------------------------------------------------------------------------
+
+def _serve(params, cfg, backend, seed=0):
+    eng = DecodeEngine(params, cfg, batch=2, max_len=96, dtype=jnp.float32,
+                       backend=backend, burst=4, chunk_tokens=16,
+                       page_size=4, prefix_cache=True)
+    rng = np.random.default_rng(seed)
+    shared = rng.integers(0, cfg.vocab_size, size=(16,))
+    reqs = [Request(rid=i,
+                    prompt=np.concatenate(
+                        [shared, rng.integers(0, cfg.vocab_size,
+                                              size=(12,))]),
+                    max_new=10, sampling=SamplingParams(), seed=seed)
+            for i in range(4)]
+    out = eng.run(reqs)
+    return out, eng
+
+
+@pytest.mark.parametrize("target,rank,s", [("mla", 16, 2),
+                                           ("mtla", 16, 2)])
+def test_converted_serves_ref_pallas_identical(target, rank, s):
+    params, cfg = make_teacher("gqa")
+    sp, scfg, _ = convert_checkpoint(params, cfg, target=target, rank=rank,
+                                     s=s)
+    out_ref, eng = _serve(sp, scfg, "ref")
+    out_pal, _ = _serve(sp, scfg, "pallas")
+    assert {k: list(v) for k, v in out_ref.items()} \
+        == {k: list(v) for k, v in out_pal.items()}
+    # the prefix cache actually engaged on the shared prefix
+    assert eng.prefix is not None and eng.prefix.hits > 0
+
+
+def test_checkpoint_roundtrip_serves(tmp_path):
+    params, cfg = make_teacher("gqa")
+    sp, scfg, rep = convert_checkpoint(params, cfg, target="mtla", rank=16,
+                                       s=2)
+    save_model_checkpoint(str(tmp_path), 0, sp, config_to_dict(scfg),
+                          extra={"conversion": rep.to_dict()})
+    lp, extra = load_model_checkpoint(str(tmp_path))
+    lcfg = config_from_dict(extra["model_config"])
+    assert lcfg == scfg
+    assert extra["conversion"]["rank"] == 16
+    out_a, _ = _serve(sp, scfg, "ref")
+    out_b, _ = _serve(lp, lcfg, "ref")
+    assert {k: list(v) for k, v in out_a.items()} \
+        == {k: list(v) for k, v in out_b.items()}
+
+
+def test_drift_report_keys_and_exactness():
+    params, cfg = make_teacher("gqa")
+    sp, scfg, _ = convert_checkpoint(params, cfg, target="mla")
+    rep = drift_report(params, cfg, sp, scfg, batches=1, seq_len=SEQ)
+    assert set(rep) == {"logit_drift", "kl", "ppl_teacher", "ppl_student",
+                        "ppl_delta"}
+    assert rep["logit_drift"] < 2e-4
+    assert abs(rep["ppl_delta"]) < 1e-2
