@@ -6,10 +6,21 @@ beyond-paper win measured analytically (exact op counts).
 The dispatch rows time the model-facing backend entry points
 (core/dispatch.py) on whatever backend ``auto`` resolves to — on TPU they
 measure the fused kernels against the same harness as the ref rows, so every
-later perf PR has a fused baseline in the same CSV."""
+later perf PR has a fused baseline in the same CSV.
+
+The train-grad rows time ``jax.grad`` through the pallas training path with
+the fused flash-style backward (kernels/mtla_attn_bwd.py) vs the closed-form
+reference backward (``REPRO_REF_BWD=1``), and attach two machine-independent
+gates: ``bwd_peak_bytes`` — the largest single buffer in the grad jaxpr, a
+deterministic proof that the backward never materializes the [T, t] score
+matrix — and ``dead_tile_frac``, the fraction of (qi, ki) grid tiles the
+stride-aware mask kills and ``pl.when`` skips (deterministic in the grid
+geometry). Run ``python -m benchmarks.bench_kernels --sweep-blocks`` for the
+block_q/block_k tuning sweep recorded in docs/kernels.md."""
 from __future__ import annotations
 
 import math
+import os
 import time
 
 import jax
@@ -28,6 +39,117 @@ def _time(fn, *args, n=5):
     return (time.perf_counter() - t0) / n * 1e6
 
 
+def _max_buffer_bytes(fn, *args) -> int:
+    """Largest single intermediate buffer (bytes) in fn's jaxpr, walking
+    nested call/custom-vjp/pallas sub-jaxprs. Machine-independent: depends
+    only on the traced program, so it gates as a hard ceiling — a fused
+    backward that silently re-materialized the [T, t] score matrix would
+    show up here as a t/dh-fold jump."""
+    best = 0
+
+    def visit(jaxpr):
+        nonlocal best
+        for eqn in jaxpr.eqns:
+            for v in eqn.outvars:
+                aval = getattr(v, "aval", None)
+                shape = getattr(aval, "shape", None)
+                dtype = getattr(aval, "dtype", None)
+                if shape is not None and dtype is not None:
+                    n = 1
+                    for d in shape:
+                        n *= int(d)
+                    best = max(best, n * jnp.dtype(dtype).itemsize)
+            for val in eqn.params.values():
+                descend(val)
+
+    def descend(val):
+        if hasattr(val, "eqns"):                       # Jaxpr
+            visit(val)
+        elif hasattr(val, "jaxpr") and hasattr(val.jaxpr, "eqns"):
+            visit(val.jaxpr)                           # ClosedJaxpr
+        elif isinstance(val, (tuple, list)):
+            for v in val:
+                descend(v)
+
+    visit(jax.make_jaxpr(fn)(*args).jaxpr)
+    return best
+
+
+def _attn_args(B, H, T, dh, dr, s, key=jax.random.PRNGKey):
+    t = T // s
+    return [jax.random.normal(key(i), sh) for i, sh in enumerate([
+        (B, H, T, dh), (B, H, T, dr), (B, H, t, dh), (B, H, t, dh),
+        (B, t, dr), (B, H, T, dh), (B, H, T, dh), (B, T, dr)])]
+
+
+def _dead_tile_frac(T, t, s, bq, bk):
+    """Fraction of (qi, ki) chunk tiles the stride-aware mask fully kills
+    (kernels/mtla_attn.py::_dead_tile) — deterministic in the geometry."""
+    from repro.kernels.mtla_attn import _dead_tile
+    nq, nk = -(-T // bq), -(-t // bk)
+    dead = sum(bool(_dead_tile(qi, ki, s, bq, bk))
+               for qi in range(nq) for ki in range(nk))
+    return dead / (nq * nk), nq, nk
+
+
+def _train_grad_rows():
+    """Fused-bwd vs ref-bwd grad timing through the pallas dispatch path,
+    plus the deterministic bwd_peak_bytes buffer gate."""
+    rows = []
+    B, H, T, dh, dr, s = 2, 4, 256, 64, 32, 2
+    args = _attn_args(B, H, T, dh, dr, s)
+    scale = 1.0 / math.sqrt(dh + dr)
+    tr = lambda a: jnp.swapaxes(a, 1, 2)
+    margs = [tr(args[0]), tr(args[1]), tr(args[2]), tr(args[3]), args[4],
+             tr(args[5]), tr(args[6]), args[7]]
+
+    def make_loss():
+        # fresh closure per env setting: the REPRO_REF_BWD flag is read at
+        # trace time, so each jit must trace anew
+        def loss(*a):
+            out = dispatch.mtla_train_attention(*a, s, scale,
+                                                backend="pallas")
+            return jnp.sum(out * out)
+        return jax.jit(jax.grad(loss, argnums=tuple(range(8))))
+
+    prev = os.environ.pop("REPRO_REF_BWD", None)
+    try:
+        fused = make_loss()
+        us_fused = _time(fused, *margs)
+        peak = _max_buffer_bytes(fused, *margs)
+        os.environ["REPRO_REF_BWD"] = "1"
+        us_ref = _time(make_loss(), *margs)
+    finally:
+        os.environ.pop("REPRO_REF_BWD", None)
+        if prev is not None:
+            os.environ["REPRO_REF_BWD"] = prev
+    toks = B * T
+    tps_fused = toks / (us_fused / 1e6)
+    tps_ref = toks / (us_ref / 1e6)
+    rows.append(
+        f"bench_kernels/train_grad_fused,{us_fused:.1f},"
+        f"train_step_toks_per_s={tps_fused:.0f};"
+        f"bwd_peak_bytes={peak};"
+        f"fused_vs_ref_bwd={tps_fused / tps_ref:.2f}x")
+    rows.append(
+        f"bench_kernels/train_grad_refbwd,{us_ref:.1f},"
+        f"train_step_toks_per_s={tps_ref:.0f}")
+    # analytic backward activation reduction (machine-independent, like the
+    # compressed_vs_masked rows): the ref backward materializes the
+    # [B,H,T,t+1] fp32 probability matrix; the fused backward's residual is
+    # (out, lse) = [B,H,T,dh] + [B,H,T] — ratio (t+1)/(dh+1), growing
+    # linearly in T. Interpret-mode wall clock on CPU cannot show this win
+    # (the grid loop is a Python interpreter); on TPU it is the term that
+    # makes fused_vs_ref_bwd >= 1.
+    for T_ in (4096, 32768):
+        for s_ in (2, 4):
+            t_ = T_ // s_
+            rows.append(
+                f"bench_kernels/bwd_activation_T{T_}_s{s_},0.0,"
+                f"bwd_activation_reduction={(t_ + 1) / (dh + 1):.1f}x")
+    return rows
+
+
 def run():
     rows = []
     B, H, T, dh, dr, s = 2, 4, 256, 64, 32, 2
@@ -40,9 +162,7 @@ def run():
     us = _time(jax.jit(lambda *a: ref.merge_ref(*a, s=s)), c, u, vpe)
     rows.append(f"bench_kernels/merge_ref_jit,{us:.1f},B{B}xT{T}xr{r}")
 
-    args = [jax.random.normal(key(i), sh) for i, sh in enumerate([
-        (B, H, T, dh), (B, H, T, dr), (B, H, t, dh), (B, H, t, dh),
-        (B, t, dr), (B, H, T, dh), (B, H, T, dh), (B, T, dr)])]
+    args = _attn_args(B, H, T, dh, dr, s)
     scale = 1.0 / math.sqrt(dh)
     us = _time(jax.jit(lambda *a: ref.mtla_attn_ref(*a, s=s, scale=scale)),
                *args)
@@ -89,4 +209,56 @@ def run():
             rows.append(
                 f"bench_kernels/compressed_vs_masked_T{T_}_s{s_},0.0,"
                 f"train_attn_flop_reduction={ratio:.2f}x")
+
+    # forward tile skipping: at a long-context grid the stride-aware mask
+    # kills a deterministic fraction of (qi, ki) tiles, which pl.when now
+    # skips entirely (both matmuls). dead_tile_frac is geometry-only and
+    # gated as a floor — a drop means the skip guard stopped firing.
+    Bk, Hk, Tk, sk = 1, 2, 2048, 2
+    bq = bk = 256
+    frac, nq, nk = _dead_tile_frac(Tk, Tk // sk, sk, bq, bk)
+    kargs = _attn_args(Bk, Hk, Tk, dh, dr, sk)
+    from repro.kernels import ops as kops
+    us = _time(lambda *a: kops.mtla_attn(*a, s=sk, scale=scale), *kargs)
+    rows.append(f"bench_kernels/attn_fwd_tileskip,{us:.1f},"
+                f"dead_tile_frac={frac:.3f};grid={nq}x{nk}")
+
+    rows.extend(_train_grad_rows())
     return rows
+
+
+def sweep_blocks():
+    """block_q/block_k tuning sweep (satellite): fwd + bwd wall time per
+    block pair on a long-context shape. Interpret-mode timings on CPU rank
+    grid/overhead trade-offs only; re-run on TPU before changing the
+    checked-in defaults (kernels/mtla_attn.py: 256/256). Results recorded
+    in docs/kernels.md."""
+    from repro.kernels import ops as kops
+    B, H, T, dh, dr, s = 1, 2, 1024, 64, 32, 2
+    args = _attn_args(B, H, T, dh, dr, s)
+    scale = 1.0 / math.sqrt(dh + dr)
+    do = jax.random.normal(jax.random.PRNGKey(99), args[0].shape)
+    print("block_q,block_k,fwd_us,bwd_us")
+    for bq in (128, 256, 512):
+        for bk in (128, 256, 512):
+            fwd = _time(lambda *a: kops.mtla_attn_fwd(
+                *a, s=s, scale=scale, block_q=bq, block_k=bk), *args)
+            out, lse = kops.mtla_attn_fwd(*args, s=s, scale=scale,
+                                          block_q=bq, block_k=bk)
+            bwd = _time(lambda *a: kops.mtla_attn_bwd(
+                *a, s=s, scale=scale, block_q=bq, block_k=bk),
+                *args, out, lse, do)
+            print(f"{bq},{bk},{fwd:.1f},{bwd:.1f}")
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sweep-blocks", action="store_true",
+                    help="block_q/block_k tuning sweep (fwd + bwd)")
+    a = ap.parse_args()
+    if a.sweep_blocks:
+        sweep_blocks()
+    else:
+        for row in run():
+            print(row)

@@ -51,6 +51,19 @@ creep toward 1.0 means the migration stopped paying its memory dividend —
 and ``backend_tokens_match`` (1 iff ref and pallas serve the converted
 model token-for-token) is a hard floor.
 
+The train-grad rows (``bench_kernels/train_grad_*``) gate the fused
+flash-style backward. ``train_step_toks_per_s`` is normalized by the
+reference row exactly like ``toks_per_s``. ``bwd_peak_bytes`` — the
+largest single buffer in the grad jaxpr — is fully deterministic (a
+property of the traced program, not the machine), so baseline *
+``--mem-slack`` is a ceiling: growth means the backward started
+materializing score-matrix-sized buffers again. ``fused_vs_ref_bwd``
+(fused-bwd throughput over ref-bwd, same process, same harness) cancels
+machine speed like the TTFT ratios and is floored at baseline /
+``--ttft-slack``. ``dead_tile_frac`` (fraction of grid tiles the
+stride-aware mask kills and ``pl.when`` skips) is geometry-only and
+gated as a hard floor like the prefix counters.
+
 The sharded serving rows (``bench_serving/sharded/*``) gate two more
 machine-independent quantities: ``per_device_vs_tp1`` (tp=4 per-device
 pool bytes over tp=1's — a shard-shape ratio that creeps toward 1.0 if a
@@ -121,7 +134,9 @@ def main() -> int:
                  "prefill_skipped", "ttft_vs_unchunked",
                  "per_device_vs_tp1", "tokens_match", "goodput",
                  "goodput_vs_fifo", "logit_drift", "ppl_delta",
-                 "cache_vs_teacher", "backend_tokens_match")
+                 "cache_vs_teacher", "backend_tokens_match",
+                 "train_step_toks_per_s", "bwd_peak_bytes",
+                 "fused_vs_ref_bwd", "dead_tile_frac")
         if name == args.reference or not any(k in bd for k in gated):
             continue
         cd = cur.get(name)
@@ -145,6 +160,61 @@ def main() -> int:
                     f"{name}: {cur_rel:.2f}x reference < floor {floor:.2f}x "
                     f"(baseline {base_rel:.2f}x, max-regression "
                     f"{args.max_regression}x)")
+        if "train_step_toks_per_s" in bd:
+            # normalized like toks_per_s: machine speed cancels against the
+            # same file's reference row, so a floor catches the fused
+            # backward regressing algorithmically (e.g. falling back to the
+            # ref bwd, or a kernel losing its streaming structure)
+            val = cd.get("train_step_toks_per_s")
+            if val is None:
+                failures.append(f"{name}: train_step_toks_per_s missing "
+                                f"from current results")
+                continue
+            cur_rel = val / cur_ref
+            base_rel = bd["train_step_toks_per_s"] / base_ref
+            floor = base_rel / args.max_regression
+            shown = f"  {cur_rel:.3f}x ref (baseline {base_rel:.3f})"
+            if cur_rel < floor:
+                status = "REGRESSION"
+                failures.append(
+                    f"{name}: train_step_toks_per_s {cur_rel:.3f}x "
+                    f"reference < floor {floor:.3f}x (baseline "
+                    f"{base_rel:.3f}x)")
+        if "bwd_peak_bytes" in bd:
+            # largest single buffer in the grad jaxpr: deterministic in the
+            # traced program, so baseline * mem-slack is a hard ceiling —
+            # growth means the backward started materializing the [T, t]
+            # score matrix (or another score-sized buffer) again
+            val = cd.get("bwd_peak_bytes", float("inf"))
+            shown = shown or (f"  bwd peak {val / 1e6:.2f} MB "
+                              f"(baseline {bd['bwd_peak_bytes'] / 1e6:.2f})")
+            if val > bd["bwd_peak_bytes"] * args.mem_slack:
+                status = "MEM-REGRESSION"
+                failures.append(
+                    f"{name}: bwd_peak_bytes {val:.0f} > baseline "
+                    f"{bd['bwd_peak_bytes']:.0f} * {args.mem_slack} (the "
+                    f"fused backward's grad jaxpr grew a score-matrix-"
+                    f"sized buffer; the flash residual contract is O(T))")
+        if "fused_vs_ref_bwd" in bd:
+            # fused-bwd over ref-bwd throughput, measured back to back in
+            # the same process: machine speed cancels, so baseline /
+            # ttft-slack is a floor
+            val = cd.get("fused_vs_ref_bwd", 0.0)
+            if val < bd["fused_vs_ref_bwd"] / args.ttft_slack:
+                status = "REGRESSION"
+                failures.append(
+                    f"{name}: fused_vs_ref_bwd {val:.3f}x < baseline "
+                    f"{bd['fused_vs_ref_bwd']:.3f}x / {args.ttft_slack} "
+                    f"(the fused backward stopped paying for itself vs "
+                    f"the reference backward)")
+        if "dead_tile_frac" in bd \
+                and cd.get("dead_tile_frac", 0) < bd["dead_tile_frac"] - 1e-9:
+            status = "REGRESSION"
+            failures.append(
+                f"{name}: dead_tile_frac {cd.get('dead_tile_frac', 0)} < "
+                f"baseline {bd['dead_tile_frac']} (geometry-deterministic "
+                f"tile skipping; a drop means the pl.when dead-tile guard "
+                f"stopped firing)")
         if "vs_dense_fp32" in bd and "vs_dense_fp32" in cd \
                 and cd["vs_dense_fp32"] > bd["vs_dense_fp32"] * args.mem_slack:
             status = "MEM-REGRESSION"

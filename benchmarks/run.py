@@ -5,8 +5,9 @@ ratios are the meaningful columns; TPU projections live in EXPERIMENTS.md
 
     PYTHONPATH=src python -m benchmarks.run [--only SUBSTR] [--out FILE.json]
 
-``--only`` filters modules by name substring (CI runs ``--only
-bench_kernels`` as a fast smoke of the benchmark entry points). ``--out``
+``--only`` filters modules by comma-separated name substrings (CI runs
+``--only bench_serving,bench_kernels`` so the kernel-gate rows land in the
+same JSON the serving reference row normalizes). ``--out``
 additionally writes the rows as structured JSON — the CI bench job uploads
 it as a workflow artifact and gates on tokens/s regressions vs the
 checked-in ``benchmarks/baseline_ci.json`` (see benchmarks/compare.py).
@@ -45,8 +46,9 @@ def parse_row(row: str) -> dict:
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
-                    help="run only modules whose name contains this "
-                         "substring (e.g. 'bench_kernels')")
+                    help="run only modules whose name contains one of "
+                         "these comma-separated substrings (e.g. "
+                         "'bench_kernels' or 'bench_serving,bench_kernels')")
     ap.add_argument("--out", default="",
                     help="also write rows as JSON (e.g. BENCH_ci.json) for "
                          "the CI artifact + regression compare")
@@ -56,7 +58,8 @@ def main() -> None:
     mods = [bench_st, bench_summarisation, bench_asr, bench_slu,
             bench_related, bench_kernels, bench_serving]
     if args.only:
-        mods = [m for m in mods if args.only in m.__name__]
+        pats = [p for p in args.only.split(",") if p]
+        mods = [m for m in mods if any(p in m.__name__ for p in pats)]
         if not mods:
             raise SystemExit(f"no benchmark module matches {args.only!r}")
     print("name,us_per_call,derived")

@@ -15,9 +15,15 @@ carries the knob through models and serving; the attention entry points in
 ``core/attention.py`` accept it per call.
 
 The pallas training-path ops carry a ``jax.custom_vjp`` whose backward pass
-re-derives gradients through the reference implementation, so
-``backend="pallas"`` composes with ``jax.grad`` / training (fused forward,
-reference backward — the standard recompute trade).
+runs the fused flash-style kernels (kernels/mtla_attn_bwd.py,
+kernels/mtla_merge.py): the forward saves O(T) residuals (context + per-row
+logsumexp) and the backward rebuilds probabilities tile by tile, so
+``backend="pallas"`` composes with ``jax.grad`` / training fused end to
+end — no [T, t] logits materialize in either direction. Setting
+``REPRO_REF_BWD=1`` swaps the backward rules to the closed-form reference
+backward (kernels/ref.py::mtla_attn_bwd_ref / merge_bwd_ref) for
+bisection; the debug path consumes the same residuals — it does not
+re-run the forward — but does materialize the [T, t] probability matrix.
 
 Constraint: the fused *training* kernels assume *fresh* sequences (positions
 ``0..T-1``, the layout used by training and whole-prompt prefill). Callers
@@ -30,6 +36,7 @@ serving step loop runs fused end-to-end. See docs/kernels.md.
 from __future__ import annotations
 
 import functools
+import os
 from typing import Optional
 
 import jax
@@ -44,6 +51,12 @@ from ..kernels import ops as kops
 from ..kernels import ref as kref
 
 BACKENDS = ("auto", "ref", "pallas")
+
+
+def _ref_bwd_debug() -> bool:
+    """True when REPRO_REF_BWD selects the reference backward for the
+    custom_vjp rules below (bisection aid). Read at trace time."""
+    return os.environ.get("REPRO_REF_BWD", "0") not in ("", "0")
 
 
 # ---------------------------------------------------------------------------
@@ -103,13 +116,8 @@ def resolve(backend: Optional[str] = None, *, use_pallas: bool = False) -> str:
 
 
 # ---------------------------------------------------------------------------
-# fused temporal merge (training): pallas forward, reference backward
+# fused temporal merge (training): pallas forward AND backward
 # ---------------------------------------------------------------------------
-
-def _merge_ref_puv(c, u, vpe, s: int):
-    P, C_hat, _ = kref.merge_ref(c, u, vpe, s)
-    return P, C_hat
-
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
 def _merge_fused(c, u, vpe, s: int):
@@ -117,14 +125,17 @@ def _merge_fused(c, u, vpe, s: int):
 
 
 def _merge_fused_fwd(c, u, vpe, s: int):
+    # the gate is recomputed in the backward from the tiny hyper tracks, so
+    # the primals themselves are the whole residual set
     return _merge_fused(c, u, vpe, s), (c, u, vpe)
 
 
 def _merge_fused_bwd(s: int, res, g):
     c, u, vpe = res
-    _, vjp = jax.vjp(lambda c_, u_, v_: _merge_ref_puv(c_, u_, v_, s),
-                     c, u, vpe)
-    return vjp(g)
+    dP, dC = g
+    if _ref_bwd_debug():
+        return kref.merge_bwd_ref(c, u, vpe, dP, dC, s)
+    return kops.mtla_merge_bwd(c, u, vpe, dP, dC, s)
 
 
 _merge_fused.defvjp(_merge_fused_fwd, _merge_fused_bwd)
@@ -153,7 +164,7 @@ def mtla_train_merge(p, c, chunk_idx, s: int, *, backend: str):
 
 
 # ---------------------------------------------------------------------------
-# fused compressed training attention: pallas forward, reference backward
+# fused compressed training attention: pallas forward AND backward
 # ---------------------------------------------------------------------------
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(8, 9))
@@ -163,14 +174,19 @@ def _attn_fused(qn, qr, kc, vc, krc, ks, vs, krs, s: int, scale: float):
 
 
 def _attn_fused_fwd(qn, qr, kc, vc, krc, ks, vs, krs, s, scale):
-    out = _attn_fused(qn, qr, kc, vc, krc, ks, vs, krs, s, scale)
-    return out, (qn, qr, kc, vc, krc, ks, vs, krs)
+    # residual contract: the eight primals plus (out, lse) — O(T) extra,
+    # never the [T, t] score matrix (see kernels/mtla_attn_bwd.py)
+    out, lse = kops.mtla_attn_fwd(qn, qr, kc, vc, krc, ks, vs, krs,
+                                  s=s, scale=scale)
+    return out, (qn, qr, kc, vc, krc, ks, vs, krs, out, lse)
 
 
 def _attn_fused_bwd(s, scale, res, g):
-    _, vjp = jax.vjp(
-        lambda *a: kref.mtla_attn_ref(*a, s=s, scale=scale), *res)
-    return vjp(g)
+    *primals, out, lse = res
+    if _ref_bwd_debug():
+        return kref.mtla_attn_bwd_ref(*primals, out, lse, g,
+                                      s=s, scale=scale)
+    return kops.mtla_attn_bwd(*primals, out, lse, g, s=s, scale=scale)
 
 
 _attn_fused.defvjp(_attn_fused_fwd, _attn_fused_bwd)

@@ -11,6 +11,15 @@ scheme never materializes (s-fold FLOP + bandwidth reduction).
 
 Grid: (B, H, T/block_q, t/block_k), innermost axis streams chunk blocks.
 Tiles: q/k/v blocks are (block, 128)-aligned for the MXU when dh=128.
+Chunk tiles that the stride-aware mask kills entirely — every column of
+block ki is >= the largest row//s in query block qi — are skipped with
+``pl.when`` (both matmuls, not just the mask), an s-fold sparsity the
+dense mask cannot exploit.
+
+Alongside the context the kernel emits the per-row logsumexp (LSE) of the
+two-track logits; the flash-style backward (kernels/mtla_attn_bwd.py)
+rebuilds the probabilities from it instead of storing the [T, t] score
+matrix.
 """
 from __future__ import annotations
 
@@ -24,8 +33,15 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
+def _dead_tile(qi, ki, s: int, block_q: int, block_k: int):
+    """True when the stride-aware mask ``col < row // s`` masks every
+    (row, col) pair of query block qi x chunk block ki: the largest
+    admissible column over the block is ((qi+1)*bq - 1) // s - 1."""
+    return ki * block_k >= ((qi + 1) * block_q - 1) // s
+
+
 def _attn_kernel(qn_ref, qr_ref, ks_ref, vs_ref, krs_ref,
-                 kc_ref, vc_ref, krc_ref, o_ref,
+                 kc_ref, vc_ref, krc_ref, o_ref, lse_ref,
                  m_ref, l_ref, acc_ref, *,
                  scale: float, s: int, block_q: int, block_k: int):
     ki = pl.program_id(3)
@@ -46,35 +62,44 @@ def _attn_kernel(qn_ref, qr_ref, ks_ref, vs_ref, krs_ref,
         l_ref[...] = jnp.ones_like(ls)
         acc_ref[...] = vs
 
-    kc = kc_ref[0, 0].astype(jnp.float32)     # [bk, dh]
-    vc = vc_ref[0, 0].astype(jnp.float32)
-    krc = krc_ref[0].astype(jnp.float32)      # [bk, dr]
+    @pl.when(jnp.logical_not(_dead_tile(qi, ki, s, block_q, block_k)))
+    def _stream():
+        kc = kc_ref[0, 0].astype(jnp.float32)     # [bk, dh]
+        vc = vc_ref[0, 0].astype(jnp.float32)
+        krc = krc_ref[0].astype(jnp.float32)      # [bk, dr]
 
-    logits = (qn @ kc.T + qr @ krc.T) * scale            # [bq, bk]
-    row = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, logits.shape, 0)
-    col = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, logits.shape, 1)
-    logits = jnp.where(col < row // s, logits, NEG_INF)
+        logits = (qn @ kc.T + qr @ krc.T) * scale            # [bq, bk]
+        row = qi * block_q + jax.lax.broadcasted_iota(
+            jnp.int32, logits.shape, 0)
+        col = ki * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, logits.shape, 1)
+        logits = jnp.where(col < row // s, logits, NEG_INF)
 
-    m_prev = m_ref[...]
-    m_new = jnp.maximum(m_prev, jnp.max(logits, axis=-1))
-    p = jnp.exp(logits - m_new[:, None])
-    corr = jnp.exp(m_prev - m_new)
-    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1)
-    acc_ref[...] = acc_ref[...] * corr[:, None] + p @ vc
-    m_ref[...] = m_new
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(logits, axis=-1))
+        p = jnp.exp(logits - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + p @ vc
+        m_ref[...] = m_new
 
     @pl.when(ki == nk - 1)
     def _final():
-        o_ref[0, 0] = (acc_ref[...] /
-                       jnp.maximum(l_ref[...], 1e-30)[:, None]
-                       ).astype(o_ref.dtype)
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+        # the self track seeds l with exp(ls - m) >= exp(m - m), so the
+        # attained max keeps l >= something strictly positive; the clamp
+        # only guards pathological all -inf rows that cannot occur here
+        lse_ref[0, 0] = m_ref[...] + jnp.log(l)
 
 
 def mtla_attn_pallas(q_nope, q_rope, k_chunk, v_chunk, kr_chunk,
                      k_self, v_self, kr_self, s: int, scale: float, *,
                      block_q: int = 256, block_k: int = 256,
-                     interpret: bool = False):
-    """Shapes as in kernels/ref.py::mtla_attn_ref. Returns ctx [B,H,T,dh].
+                     return_lse: bool = False, interpret: bool = False):
+    """Shapes as in kernels/ref.py::mtla_attn_ref. Returns ctx [B,H,T,dh],
+    plus the per-row logsumexp lse [B,H,T] fp32 when ``return_lse`` (the
+    backward kernel's residual — see kernels/mtla_attn_bwd.py).
 
     T is padded to block_q and t to block_k internally; the chunk mask
     (col < row//s with row < T) automatically excludes padded chunk slots.
@@ -100,7 +125,7 @@ def mtla_attn_pallas(q_nope, q_rope, k_chunk, v_chunk, kr_chunk,
     grid = (B, H, Tp // bq, tp // bk)
     kernel = functools.partial(_attn_kernel, scale=scale, s=s,
                                block_q=bq, block_k=bk)
-    out = pl.pallas_call(
+    out, lse = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
@@ -113,9 +138,14 @@ def mtla_attn_pallas(q_nope, q_rope, k_chunk, v_chunk, kr_chunk,
             pl.BlockSpec((1, 1, bk, dh), lambda b, h, i, k: (b, h, k, 0)),
             pl.BlockSpec((1, bk, dr), lambda b, h, i, k: (b, k, 0)),
         ],
-        out_specs=pl.BlockSpec((1, 1, bq, dh),
-                               lambda b, h, i, k: (b, h, i, 0)),
-        out_shape=jax.ShapeDtypeStruct((B, H, Tp, dh), q_nope.dtype),
+        out_specs=[
+            pl.BlockSpec((1, 1, bq, dh), lambda b, h, i, k: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bq), lambda b, h, i, k: (b, h, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, Tp, dh), q_nope.dtype),
+            jax.ShapeDtypeStruct((B, H, Tp), jnp.float32),
+        ],
         scratch_shapes=[
             pltpu.VMEM((bq,), jnp.float32),
             pltpu.VMEM((bq,), jnp.float32),
@@ -123,4 +153,6 @@ def mtla_attn_pallas(q_nope, q_rope, k_chunk, v_chunk, kr_chunk,
         ],
         interpret=interpret,
     )(q_nope, q_rope, k_self, v_self, kr_self, k_chunk, v_chunk, kr_chunk)
+    if return_lse:
+        return out[:, :, :T], lse[:, :, :T]
     return out[:, :, :T]

@@ -1,0 +1,269 @@
+"""Pallas TPU kernels: flash-style backward for fused MTLA training attention.
+
+The reference backward (``jax.vjp`` through ``kernels/ref.py``) materializes
+the full ``[T, t+1]`` masked probability matrix per layer — O(T·t) training
+memory — and re-runs the forward. These kernels instead rebuild each query
+row's probabilities from two O(T) residuals saved by the forward
+(``kernels/mtla_attn.py``): the per-row logsumexp ``lse`` and the forward
+output ``out`` (which yields ``delta = rowsum(dO * O)``, the softmax-Jacobian
+correction term). Nothing of shape [T, t] is ever stored.
+
+Two kernels, oriented opposite ways so every gradient is a pure
+accumulation over the streamed axis:
+
+* ``_dkv_kernel`` — grid ``(B, H, t/block_k, T/block_q)``: each chunk block
+  holds dK/dV/dKr accumulators in VMEM scratch while *query* blocks stream
+  past (innermost axis).
+* ``_dq_kernel`` — grid ``(B, H, T/block_q, t/block_k)``: each query block
+  holds dQn/dQr accumulators while *chunk* blocks stream. The self track —
+  each query's own partial-chunk state, whose softmax weight is
+  ``exp(ls - lse)`` — contributes at the first chunk step, which also emits
+  the self-track gradients (dk_self/dv_self/dkr_self) outright since they
+  are query-local.
+
+Both kernels skip tiles the stride-aware mask ``col < row // s`` kills
+entirely (the same ``pl.when`` dead-tile rule as the forward): for
+``s``-fold temporal compression roughly half the tiles of the lower
+triangle are dead on top of the causal half, so the backward inherits the
+forward's s-fold sparsity.
+
+The decoupled-RoPE keys are shared across heads (``kr_chunk [B,t,dr]``,
+``kr_self [B,T,dr]``), so their gradients need a sum over H; the kernels
+emit per-head partials ``[B,H,...,dr]`` and the wrapper reduces — keeping
+every kernel output a pure per-(b,h) block write.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .mtla_attn import _dead_tile
+
+NEG_INF = -1e30
+
+
+def _tile_probs(qn, qr, kc, krc, lse, qi, ki, s, block_q, block_k, scale):
+    """Rebuild the tile's probabilities p = exp(logits - lse) under the
+    stride-aware mask; masked entries are exactly zero."""
+    logits = (qn @ kc.T + qr @ krc.T) * scale                # [bq, bk]
+    row = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, logits.shape, 0)
+    col = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, logits.shape, 1)
+    return jnp.where(col < row // s,
+                     jnp.exp(logits - lse[:, None]), 0.0)
+
+
+def _dkv_kernel(qn_ref, qr_ref, do_ref, lse_ref, dl_ref,
+                kc_ref, vc_ref, krc_ref,
+                dkc_ref, dvc_ref, dkrc_ref,
+                dkc_acc, dvc_acc, dkrc_acc, *,
+                scale: float, s: int, block_q: int, block_k: int):
+    qi = pl.program_id(3)
+    nq = pl.num_programs(3)
+    ki = pl.program_id(2)
+
+    @pl.when(qi == 0)
+    def _init():
+        dkc_acc[...] = jnp.zeros_like(dkc_acc)
+        dvc_acc[...] = jnp.zeros_like(dvc_acc)
+        dkrc_acc[...] = jnp.zeros_like(dkrc_acc)
+
+    @pl.when(jnp.logical_not(_dead_tile(qi, ki, s, block_q, block_k)))
+    def _stream():
+        qn = qn_ref[0, 0].astype(jnp.float32)     # [bq, dh]
+        qr = qr_ref[0, 0].astype(jnp.float32)     # [bq, dr]
+        do = do_ref[0, 0].astype(jnp.float32)     # [bq, dh]
+        lse = lse_ref[0, 0]                       # [bq] fp32
+        delta = dl_ref[0, 0]                      # [bq] fp32
+        kc = kc_ref[0, 0].astype(jnp.float32)     # [bk, dh]
+        vc = vc_ref[0, 0].astype(jnp.float32)
+        krc = krc_ref[0].astype(jnp.float32)      # [bk, dr]
+        p = _tile_probs(qn, qr, kc, krc, lse, qi, ki, s, block_q, block_k,
+                        scale)
+        dp = do @ vc.T                                       # [bq, bk]
+        ds = p * (dp - delta[:, None]) * scale
+        dkc_acc[...] += ds.T @ qn
+        dkrc_acc[...] += ds.T @ qr
+        dvc_acc[...] += p.T @ do
+
+    @pl.when(qi == nq - 1)
+    def _final():
+        dkc_ref[0, 0] = dkc_acc[...]
+        dvc_ref[0, 0] = dvc_acc[...]
+        dkrc_ref[0, 0] = dkrc_acc[...]
+
+
+def _dq_kernel(qn_ref, qr_ref, do_ref, lse_ref, dl_ref,
+               ks_ref, vs_ref, krs_ref,
+               kc_ref, vc_ref, krc_ref,
+               dqn_ref, dqr_ref, dks_ref, dvs_ref, dkrs_ref,
+               dqn_acc, dqr_acc, *,
+               scale: float, s: int, block_q: int, block_k: int):
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+    qi = pl.program_id(2)
+
+    qn = qn_ref[0, 0].astype(jnp.float32)         # [bq, dh]
+    qr = qr_ref[0, 0].astype(jnp.float32)         # [bq, dr]
+    do = do_ref[0, 0].astype(jnp.float32)         # [bq, dh]
+    lse = lse_ref[0, 0]                           # [bq]
+    delta = dl_ref[0, 0]                          # [bq]
+
+    @pl.when(ki == 0)
+    def _self():
+        # self-track seed: the query's own partial-chunk state is a single
+        # always-admitted key whose probability is exp(ls - lse); its score
+        # gradient dls feeds both the query grads (seeding the accumulators)
+        # and the query-local self-track grads, written here once
+        ks = ks_ref[0, 0].astype(jnp.float32)
+        vs = vs_ref[0, 0].astype(jnp.float32)
+        krs = krs_ref[0].astype(jnp.float32)
+        ls = (jnp.sum(qn * ks, axis=-1)
+              + jnp.sum(qr * krs, axis=-1)) * scale          # [bq]
+        ps = jnp.exp(ls - lse)
+        dls = ps * (jnp.sum(do * vs, axis=-1) - delta) * scale
+        dqn_acc[...] = dls[:, None] * ks
+        dqr_acc[...] = dls[:, None] * krs
+        dks_ref[0, 0] = dls[:, None] * qn
+        dvs_ref[0, 0] = ps[:, None] * do
+        dkrs_ref[0, 0] = dls[:, None] * qr
+
+    @pl.when(jnp.logical_not(_dead_tile(qi, ki, s, block_q, block_k)))
+    def _stream():
+        kc = kc_ref[0, 0].astype(jnp.float32)     # [bk, dh]
+        vc = vc_ref[0, 0].astype(jnp.float32)
+        krc = krc_ref[0].astype(jnp.float32)      # [bk, dr]
+        p = _tile_probs(qn, qr, kc, krc, lse, qi, ki, s, block_q, block_k,
+                        scale)
+        dp = do @ vc.T
+        ds = p * (dp - delta[:, None]) * scale
+        dqn_acc[...] += ds @ kc
+        dqr_acc[...] += ds @ krc
+
+    @pl.when(ki == nk - 1)
+    def _final():
+        dqn_ref[0, 0] = dqn_acc[...]
+        dqr_ref[0, 0] = dqr_acc[...]
+
+
+def mtla_attn_bwd_pallas(q_nope, q_rope, k_chunk, v_chunk, kr_chunk,
+                         k_self, v_self, kr_self, out, lse, do,
+                         s: int, scale: float, *,
+                         block_q: int = 256, block_k: int = 256,
+                         interpret: bool = False):
+    """Backward of ``mtla_attn_pallas`` from its saved residuals.
+
+    Primal shapes as in kernels/ref.py::mtla_attn_ref; ``out`` [B,H,T,dh]
+    is the forward output, ``lse`` [B,H,T] fp32 the forward's per-row
+    logsumexp, ``do`` [B,H,T,dh] the output cotangent. Returns the eight
+    input gradients (dq_nope, dq_rope, dk_chunk, dv_chunk, dkr_chunk,
+    dk_self, dv_self, dkr_self), each in its primal's dtype.
+    """
+    B, H, T, dh = q_nope.shape
+    dr = q_rope.shape[-1]
+    t = k_chunk.shape[2]
+    # softmax-Jacobian correction: delta_i = sum_k p_ik (dO_i . v_k)
+    #                                      = dO_i . O_i   — O(T dh), no [T,t]
+    delta = jnp.sum(do.astype(jnp.float32) * out.astype(jnp.float32), -1)
+    bq = min(block_q, max(T, 8))
+    bk = min(block_k, max(t, 8))
+    pq = (-T) % bq
+    pk = (-t) % bk
+    padq = lambda a: jnp.pad(a, ((0, 0), (0, 0), (0, pq), (0, 0))) if pq else a
+    padk = lambda a: jnp.pad(a, ((0, 0), (0, 0), (0, pk), (0, 0))) if pk else a
+    pad2q = lambda a: jnp.pad(a, ((0, 0), (0, pq), (0, 0))) if pq else a
+    pad2k = lambda a: jnp.pad(a, ((0, 0), (0, pk), (0, 0))) if pk else a
+    # pad rows carry do = 0, so every gradient they touch is exactly zero;
+    # lse/delta pad with 0 (p = exp(0 - 0) is finite, then multiplied by 0)
+    q_nope, q_rope, do = padq(q_nope), padq(q_rope), padq(do)
+    k_self, v_self = padq(k_self), padq(v_self)
+    kr_self = pad2q(kr_self)
+    k_chunk, v_chunk = padk(k_chunk), padk(v_chunk)
+    kr_chunk = pad2k(kr_chunk)
+    lse = jnp.pad(lse, ((0, 0), (0, 0), (0, pq))) if pq else lse
+    delta = jnp.pad(delta, ((0, 0), (0, 0), (0, pq))) if pq else delta
+    Tp, tp = T + pq, t + pk
+
+    q_spec = pl.BlockSpec((1, 1, bq, dh), lambda b, h, k, i: (b, h, i, 0))
+    qr_spec = pl.BlockSpec((1, 1, bq, dr), lambda b, h, k, i: (b, h, i, 0))
+    row_spec = pl.BlockSpec((1, 1, bq), lambda b, h, k, i: (b, h, i))
+    kc_spec = pl.BlockSpec((1, 1, bk, dh), lambda b, h, k, i: (b, h, k, 0))
+    krc_spec = pl.BlockSpec((1, bk, dr), lambda b, h, k, i: (b, k, 0))
+
+    dkv = pl.pallas_call(
+        functools.partial(_dkv_kernel, scale=scale, s=s, block_q=bq,
+                          block_k=bk),
+        grid=(B, H, tp // bk, Tp // bq),
+        in_specs=[q_spec, qr_spec, q_spec, row_spec, row_spec,
+                  kc_spec, kc_spec, krc_spec],
+        out_specs=[
+            pl.BlockSpec((1, 1, bk, dh), lambda b, h, k, i: (b, h, k, 0)),
+            pl.BlockSpec((1, 1, bk, dh), lambda b, h, k, i: (b, h, k, 0)),
+            pl.BlockSpec((1, 1, bk, dr), lambda b, h, k, i: (b, h, k, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, tp, dh), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, tp, dh), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, tp, dr), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bk, dh), jnp.float32),
+            pltpu.VMEM((bk, dh), jnp.float32),
+            pltpu.VMEM((bk, dr), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q_nope, q_rope, do, lse, delta, k_chunk, v_chunk, kr_chunk)
+    dkc, dvc, dkrc_h = dkv
+
+    qi_spec = pl.BlockSpec((1, 1, bq, dh), lambda b, h, i, k: (b, h, i, 0))
+    qri_spec = pl.BlockSpec((1, 1, bq, dr), lambda b, h, i, k: (b, h, i, 0))
+    rowi_spec = pl.BlockSpec((1, 1, bq), lambda b, h, i, k: (b, h, i))
+    krs_spec = pl.BlockSpec((1, bq, dr), lambda b, h, i, k: (b, i, 0))
+    kci_spec = pl.BlockSpec((1, 1, bk, dh), lambda b, h, i, k: (b, h, k, 0))
+    krci_spec = pl.BlockSpec((1, bk, dr), lambda b, h, i, k: (b, k, 0))
+
+    dq = pl.pallas_call(
+        functools.partial(_dq_kernel, scale=scale, s=s, block_q=bq,
+                          block_k=bk),
+        grid=(B, H, Tp // bq, tp // bk),
+        in_specs=[qi_spec, qri_spec, qi_spec, rowi_spec, rowi_spec,
+                  qi_spec, qi_spec, krs_spec,
+                  kci_spec, kci_spec, krci_spec],
+        out_specs=[
+            pl.BlockSpec((1, 1, bq, dh), lambda b, h, i, k: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bq, dr), lambda b, h, i, k: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bq, dh), lambda b, h, i, k: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bq, dh), lambda b, h, i, k: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bq, dr), lambda b, h, i, k: (b, h, i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, Tp, dh), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, Tp, dr), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, Tp, dh), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, Tp, dh), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, Tp, dr), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bq, dh), jnp.float32),
+            pltpu.VMEM((bq, dr), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q_nope, q_rope, do, lse, delta, k_self, v_self, kr_self,
+      k_chunk, v_chunk, kr_chunk)
+    dqn, dqr, dks, dvs, dkrs_h = dq
+
+    cut_q = lambda a: a[:, :, :T]
+    cut_k = lambda a: a[:, :, :t]
+    return (cut_q(dqn).astype(q_nope.dtype),
+            cut_q(dqr).astype(q_rope.dtype),
+            cut_k(dkc).astype(k_chunk.dtype),
+            cut_k(dvc).astype(v_chunk.dtype),
+            # decoupled-RoPE keys are head-shared: reduce the per-head
+            # partials the kernels emitted
+            jnp.sum(cut_k(dkrc_h), axis=1).astype(kr_chunk.dtype),
+            cut_q(dks).astype(k_self.dtype),
+            cut_q(dvs).astype(v_self.dtype),
+            jnp.sum(cut_q(dkrs_h), axis=1).astype(kr_self.dtype))

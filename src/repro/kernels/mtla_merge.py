@@ -7,6 +7,12 @@ keeps the latent block resident in VMEM instead of three HLO round-trips.
 Tiling: grid over (B, T/block_t); block_t is a multiple of s so chunks never
 straddle blocks. The within-chunk prefix-sum runs on the VPU via a cumsum
 over the (block_t/s, s, r) view.
+
+The backward (``mtla_merge_bwd_pallas``) is the mirror image on the same
+tiling: the prefix-sum's adjoint is a within-chunk *suffix* sum of the
+incoming (dP, dC_hat) cotangents, and the gate is recomputed from the tiny
+hyper tracks instead of being saved — one streaming pass, no extra
+residuals.
 """
 from __future__ import annotations
 
@@ -29,6 +35,18 @@ def _merge_kernel(c_ref, u_ref, vpe_ref, p_ref, chat_ref, *, s: int):
     chat_ref[0] = prefix[:, -1].astype(chat_ref.dtype)
 
 
+def _block_t(T: int, s: int, block_t: int) -> int:
+    """Largest block <= block_t that divides T and is a multiple of s."""
+    bt = min(block_t, T)
+    bt -= bt % s
+    if bt == 0 or T % bt:
+        bt = s  # fallback: one chunk per block
+        while T % bt == 0 and bt * 2 <= min(block_t, T) and T % (bt * 2) == 0:
+            bt *= 2
+    assert T % bt == 0 and bt % s == 0
+    return bt
+
+
 def mtla_merge_pallas(c, u, vpe, s: int, *, block_t: int = 512,
                       interpret: bool = False):
     """c [B,T,r], u [B,T,h], vpe [T,h] -> (P [B,T,r], C_hat [B,t,r]).
@@ -39,13 +57,7 @@ def mtla_merge_pallas(c, u, vpe, s: int, *, block_t: int = 512,
     B, T, r = c.shape
     h = u.shape[-1]
     assert T % s == 0, "pad T to a multiple of s first"
-    bt = min(block_t, T)
-    bt -= bt % s
-    if bt == 0 or T % bt:
-        bt = s  # fallback: one chunk per block
-        while T % bt == 0 and bt * 2 <= min(block_t, T) and T % (bt * 2) == 0:
-            bt *= 2
-    assert T % bt == 0 and bt % s == 0
+    bt = _block_t(T, s, block_t)
     grid = (B, T // bt)
     kernel = functools.partial(_merge_kernel, s=s)
     P, C_hat = pl.pallas_call(
@@ -67,3 +79,64 @@ def mtla_merge_pallas(c, u, vpe, s: int, *, block_t: int = 512,
         interpret=interpret,
     )(c, u, vpe)
     return P, C_hat
+
+
+def _merge_bwd_kernel(c_ref, u_ref, vpe_ref, dp_ref, dchat_ref,
+                      dc_ref, dz_ref, *, s: int):
+    c = c_ref[0].astype(jnp.float32)          # [bt, r]
+    u = u_ref[0].astype(jnp.float32)          # [bt, h]
+    vpe = vpe_ref[...].astype(jnp.float32)    # [bt, h]
+    dP = dp_ref[0].astype(jnp.float32)        # [bt, r]
+    dC = dchat_ref[0].astype(jnp.float32)     # [bt/s, r]
+    g = jax.nn.sigmoid(jnp.sum(u * vpe, axis=-1))      # [bt]
+    bt, r = c.shape
+    # adjoint of the within-chunk prefix-sum: dw[k] = sum_{k' >= k} dpre[k'],
+    # with C_hat's cotangent folded into the chunk's last phase
+    dpre = dP.reshape(bt // s, s, r)
+    dpre = jnp.concatenate(
+        [dpre[:, :s - 1], (dpre[:, s - 1] + dC)[:, None]], axis=1)
+    cs = jnp.cumsum(dpre, axis=1)
+    dw = (cs[:, -1:] - cs + dpre).reshape(bt, r)       # suffix sums
+    dc_ref[0] = (g[:, None] * dw).astype(dc_ref.dtype)
+    # gate-logit cotangent dz = d/dz sigmoid(z) * <dw, c>; the wrapper turns
+    # it into du = dz * vpe and dvpe = sum_b dz * u (tiny hyper-track ops)
+    dz_ref[0] = jnp.sum(dw * c, axis=-1) * g * (1.0 - g)
+
+
+def mtla_merge_bwd_pallas(c, u, vpe, dP, dC, s: int, *, block_t: int = 512,
+                          interpret: bool = False):
+    """Fused backward of ``mtla_merge_pallas``.
+
+    c [B,T,r], u [B,T,h], vpe [T,h] primals (T a multiple of s, as the
+    forward requires); dP [B,T,r] / dC [B,t,r] the output cotangents.
+    Returns (dc [B,T,r] in c's dtype, dz [B,T] fp32) where dz is the
+    cotangent of the gate logit z = <u, vpe> — the caller finishes the
+    tiny hyper-track chain rule (du = dz * vpe, dvpe = sum_b dz * u).
+    """
+    B, T, r = c.shape
+    h = u.shape[-1]
+    assert T % s == 0, "pad T to a multiple of s first"
+    bt = _block_t(T, s, block_t)
+    grid = (B, T // bt)
+    kernel = functools.partial(_merge_bwd_kernel, s=s)
+    dc, dz = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bt, r), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, bt, h), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((bt, h), lambda b, i: (i, 0)),
+            pl.BlockSpec((1, bt, r), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, bt // s, r), lambda b, i: (b, i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bt, r), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, bt), lambda b, i: (b, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, T, r), c.dtype),
+            jax.ShapeDtypeStruct((B, T), jnp.float32),
+        ],
+        interpret=interpret,
+    )(c, u, vpe, dP, dC)
+    return dc, dz

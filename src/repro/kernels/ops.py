@@ -25,8 +25,9 @@ import jax
 import jax.numpy as jnp
 
 from .mtla_attn import mtla_attn_pallas
+from .mtla_attn_bwd import mtla_attn_bwd_pallas
 from .mtla_decode import mtla_decode_paged_pallas, mtla_decode_pallas
-from .mtla_merge import mtla_merge_pallas
+from .mtla_merge import mtla_merge_bwd_pallas, mtla_merge_pallas
 from .mtla_prefill import mtla_prefill_paged_pallas, mtla_prefill_pallas
 
 
@@ -63,6 +64,61 @@ def mtla_attn(q_nope, q_rope, k_chunk, v_chunk, kr_chunk,
                             k_self, v_self, kr_self, s, scale,
                             block_q=block_q, block_k=block_k,
                             interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("s", "block_t"))
+def mtla_merge_bwd(c, u, vpe, dP, dC, s: int, block_t: int = 512):
+    """Fused backward of ``mtla_merge`` (reverse gated prefix-sum scan).
+
+    Primals (c, u, vpe) as in ``mtla_merge``; dP [B,T,r] / dC [B,t,r] the
+    output cotangents. The kernel emits (dc, dz) — dz the gate-logit
+    cotangent — and the tiny hyper-track chain rule finishes here:
+    du = dz * vpe, dvpe = sum_b dz * u. Returns (dc, du, dvpe) in the
+    primals' dtypes.
+    """
+    dc, dz = mtla_merge_bwd_pallas(c, u, vpe, dP, dC, s, block_t=block_t,
+                                   interpret=_interpret())
+    du = (dz[..., None] * vpe.astype(jnp.float32)[None]).astype(u.dtype)
+    dvpe = jnp.einsum("bt,bth->th", dz,
+                      u.astype(jnp.float32)).astype(vpe.dtype)
+    return dc, du, dvpe
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("s", "scale", "block_q", "block_k"))
+def mtla_attn_fwd(q_nope, q_rope, k_chunk, v_chunk, kr_chunk,
+                  k_self, v_self, kr_self, s: int, scale: float,
+                  block_q: int = 256, block_k: int = 256):
+    """``mtla_attn`` that also returns the per-row logsumexp residual.
+
+    Used by the custom_vjp forward rule (core/dispatch.py): the backward
+    rebuilds probabilities from lse [B,H,T] fp32 instead of storing the
+    [T, t] score matrix. Returns (ctx, lse).
+    """
+    return mtla_attn_pallas(q_nope, q_rope, k_chunk, v_chunk, kr_chunk,
+                            k_self, v_self, kr_self, s, scale,
+                            block_q=block_q, block_k=block_k,
+                            return_lse=True, interpret=_interpret())
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("s", "scale", "block_q", "block_k"))
+def mtla_attn_bwd(q_nope, q_rope, k_chunk, v_chunk, kr_chunk,
+                  k_self, v_self, kr_self, out, lse, do,
+                  s: int, scale: float,
+                  block_q: int = 256, block_k: int = 256):
+    """Flash-style fused backward of ``mtla_attn``.
+
+    Residuals: the eight primals plus (out, lse) from ``mtla_attn_fwd``;
+    do is the context cotangent. Two kernels (dK/dV/dKr over chunk blocks
+    streaming query blocks, dQ over query blocks streaming chunk blocks)
+    rebuild p = exp(logits - lse) tile by tile — no [T, t] buffer.
+    Returns the eight input gradients in their primals' dtypes.
+    """
+    return mtla_attn_bwd_pallas(q_nope, q_rope, k_chunk, v_chunk, kr_chunk,
+                                k_self, v_self, kr_self, out, lse, do,
+                                s, scale, block_q=block_q, block_k=block_k,
+                                interpret=_interpret())
 
 
 @functools.partial(jax.jit, static_argnames=("scale", "block_k"))

@@ -57,6 +57,108 @@ def mtla_attn_ref(q_nope, q_rope, k_chunk, v_chunk, kr_chunk,
     return ctx
 
 
+def mtla_attn_fwd_ref(q_nope, q_rope, k_chunk, v_chunk, kr_chunk,
+                      k_self, v_self, kr_self, s: int, scale: float):
+    """``mtla_attn_ref`` plus the per-row logsumexp residual.
+
+    Returns (ctx [B,H,T,dh], lse [B,H,T] fp32) — the same residual contract
+    as the fused forward (kernels/mtla_attn.py with ``return_lse``): the
+    backward rebuilds probabilities as exp(logits - lse) instead of storing
+    them.
+    """
+    B, H, T, dh = q_nope.shape
+    t = k_chunk.shape[2]
+    lc = jnp.einsum("bhtd,bhjd->bhtj", q_nope, k_chunk)
+    lc = lc + jnp.einsum("bhtp,bjp->bhtj", q_rope, kr_chunk)
+    lc = lc * scale
+    rows = jnp.arange(T)
+    allow = jnp.arange(t)[None, :] < (rows[:, None] // s)
+    lc = jnp.where(allow[None, None], lc, NEG_INF)
+    ls = (jnp.einsum("bhtd,bhtd->bht", q_nope, k_self)
+          + jnp.einsum("bhtp,btp->bht", q_rope, kr_self)) * scale
+    logits = jnp.concatenate([lc, ls[..., None]], axis=-1).astype(jnp.float32)
+    m = jnp.max(logits, axis=-1)
+    lse = m + jnp.log(jnp.sum(jnp.exp(logits - m[..., None]), axis=-1))
+    p = jnp.exp(logits - lse[..., None]).astype(v_chunk.dtype)
+    ctx = jnp.einsum("bhtj,bhjd->bhtd", p[..., :t], v_chunk)
+    ctx = ctx + p[..., t:] * v_self
+    return ctx, lse
+
+
+def mtla_attn_bwd_ref(q_nope, q_rope, k_chunk, v_chunk, kr_chunk,
+                      k_self, v_self, kr_self, out, lse, do,
+                      s: int, scale: float):
+    """Closed-form backward of ``mtla_attn_ref`` from saved residuals.
+
+    Oracle for kernels/mtla_attn_bwd.py and the ``REPRO_REF_BWD`` debug
+    path: probabilities are rebuilt from ``lse`` (no forward re-run, no
+    re-softmax) and the softmax-Jacobian term from ``out`` via
+    delta = rowsum(dO * O); unlike the fused kernels it does materialize
+    the [T, t] probability matrix. Returns the eight input gradients in
+    their primals' dtypes.
+    """
+    f32 = lambda a: a.astype(jnp.float32)
+    B, H, T, dh = q_nope.shape
+    t = k_chunk.shape[2]
+    qn, qr = f32(q_nope), f32(q_rope)
+    kc, vc, krc = f32(k_chunk), f32(v_chunk), f32(kr_chunk)
+    ks, vs, krs = f32(k_self), f32(v_self), f32(kr_self)
+    dof = f32(do)
+    lc = (jnp.einsum("bhtd,bhjd->bhtj", qn, kc)
+          + jnp.einsum("bhtp,bjp->bhtj", qr, krc)) * scale
+    rows = jnp.arange(T)
+    allow = jnp.arange(t)[None, :] < (rows[:, None] // s)
+    pc = jnp.where(allow[None, None],
+                   jnp.exp(lc - lse[..., None]), 0.0)         # [B,H,T,t]
+    ls = (jnp.einsum("bhtd,bhtd->bht", qn, ks)
+          + jnp.einsum("bhtp,btp->bht", qr, krs)) * scale
+    ps = jnp.exp(ls - lse)                                    # [B,H,T]
+    delta = jnp.sum(dof * f32(out), -1)                       # [B,H,T]
+    dpc = jnp.einsum("bhtd,bhjd->bhtj", dof, vc)
+    dsc = pc * (dpc - delta[..., None]) * scale
+    dls = ps * (jnp.sum(dof * vs, -1) - delta) * scale
+    dqn = jnp.einsum("bhtj,bhjd->bhtd", dsc, kc) + dls[..., None] * ks
+    dqr = (jnp.einsum("bhtj,bjp->bhtp", dsc, krc)
+           + dls[..., None] * krs[:, None])
+    dkc = jnp.einsum("bhtj,bhtd->bhjd", dsc, qn)
+    dvc = jnp.einsum("bhtj,bhtd->bhjd", pc, dof)
+    dkrc = jnp.einsum("bhtj,bhtp->bjp", dsc, qr)     # head-shared RoPE key
+    dks = dls[..., None] * qn
+    dvs = ps[..., None] * dof
+    dkrs = jnp.einsum("bht,bhtp->btp", dls, qr)
+    return (dqn.astype(q_nope.dtype), dqr.astype(q_rope.dtype),
+            dkc.astype(k_chunk.dtype), dvc.astype(v_chunk.dtype),
+            dkrc.astype(kr_chunk.dtype), dks.astype(k_self.dtype),
+            dvs.astype(v_self.dtype), dkrs.astype(kr_self.dtype))
+
+
+def merge_bwd_ref(c, u, vpe, dP, dC, s: int):
+    """Closed-form backward of ``merge_ref``'s (P, C_hat) outputs.
+
+    Oracle for kernels/mtla_merge.py::mtla_merge_bwd_pallas and the
+    ``REPRO_REF_BWD`` debug path. The prefix-sum's adjoint is a
+    within-chunk suffix sum; the gate is recomputed from the tiny hyper
+    tracks (u, vpe) rather than saved. Handles T % s != 0 exactly like
+    ``merge_ref`` (zero-padded tail). Returns (dc, du, dvpe).
+    """
+    B, T, r = c.shape
+    uf, vf = u.astype(jnp.float32), vpe.astype(jnp.float32)
+    g = jax.nn.sigmoid(jnp.sum(uf * vf[None], -1))            # [B,T]
+    t = -(-T // s)
+    pad = t * s - T
+    dPf = jnp.pad(dP.astype(jnp.float32), ((0, 0), (0, pad), (0, 0)))
+    dpre = dPf.reshape(B, t, s, r)
+    dpre = dpre.at[:, :, s - 1].add(dC.astype(jnp.float32))
+    cs = jnp.cumsum(dpre, axis=2)
+    dw = (cs[:, :, -1:] - cs + dpre).reshape(B, t * s, r)[:, :T]
+    cf = c.astype(jnp.float32)
+    dc = g[..., None] * dw
+    dz = jnp.sum(dw * cf, -1) * g * (1.0 - g)                 # [B,T]
+    du = dz[..., None] * vf[None]
+    dvpe = jnp.einsum("bt,bth->th", dz, uf)
+    return dc.astype(c.dtype), du.astype(u.dtype), dvpe.astype(vpe.dtype)
+
+
 def mtla_prefill_ref(q_lat, q_rope, c, kr, g, view_c, view_kr,
                      offsets, lengths, s: int, scale: float):
     """Absorbed-form continuation prefill (oracle for kernels/mtla_prefill.py).

@@ -49,6 +49,10 @@ def main(argv=None):
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--compute-dtype", default="float32")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--backend", default=None,
+                    choices=("auto", "ref", "pallas"),
+                    help="attention execution backend (core/dispatch.py); "
+                    "pallas uses the fused kernels fwd+bwd")
     args = ap.parse_args(argv)
 
     from ..core.types import mla_variant, mtla_variant
@@ -62,6 +66,8 @@ def main(argv=None):
             cfg = cfg.with_attn(kind=args.attn)
     else:
         cfg = get_config(args.arch, attn=args.attn, s=args.s)
+    if args.backend:
+        cfg = cfg.replace(backend=args.backend)
     tcfg = TrainConfig(global_batch=args.batch, seq_len=args.seq,
                        microbatch=args.microbatch,
                        learning_rate=args.lr, warmup_steps=args.steps // 10,

@@ -62,9 +62,15 @@ def test_model_prefill_decode_logits_parity(s):
                                rtol=2e-4, atol=2e-5)
 
 
-def test_train_backend_grad_parity():
-    """backend='pallas' composes with jax.grad (custom_vjp falls back to the
-    reference backward) and matches ref gradients."""
+@pytest.mark.parametrize("bwd", ["fused", "ref_debug"])
+def test_train_backend_grad_parity(bwd, monkeypatch):
+    """backend='pallas' composes with jax.grad and matches ref gradients —
+    through the fused flash-style backward kernels (default) and through
+    the REPRO_REF_BWD=1 closed-form reference-backward debug path."""
+    if bwd == "ref_debug":
+        monkeypatch.setenv("REPRO_REF_BWD", "1")
+    else:
+        monkeypatch.delenv("REPRO_REF_BWD", raising=False)
     cfg = AttentionConfig(kind="mtla", num_heads=4, num_kv_heads=4,
                           head_dim=16, kv_lora_rank=32, rope_head_dim=8,
                           hyper_dim=8, s=2, q_chunk=0)
@@ -74,6 +80,8 @@ def test_train_backend_grad_parity():
     def loss(p, x, be):
         return jnp.sum(attn_train(p, cfg, x, backend=be) ** 2)
 
+    # fresh (non-jitted) grad traces per param: the REPRO_REF_BWD flag is
+    # read when the custom_vjp backward rule is traced
     g_ref = jax.grad(loss, argnums=(0, 1))(p, x, "ref")
     g_pal = jax.grad(loss, argnums=(0, 1))(p, x, "pallas")
     for a, b in zip(jax.tree_util.tree_leaves(g_ref),
